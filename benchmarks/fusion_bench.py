@@ -1,0 +1,66 @@
+"""Measured (wall-clock) sidebar-vs-DMA microbenchmark on this host.
+
+The sidebar principle — fuse the flexible function into the producer so
+the intermediate never leaves near-compute memory — is measurable on ANY
+backend as fused-one-dispatch vs three-dispatches-with-materialization.
+This bench times the same f(x@W1)@W2 computation:
+
+  monolithic/sidebar : one jitted program (XLA fuses the activation)
+  flexible_dma       : three jitted programs with block_until_ready
+                       between them (forced materialization = the DMA)
+
+CPU numbers are not TPU numbers, but the RATIO demonstrates the paper's
+mechanism with real measured time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.function_table import DEFAULT_TABLE
+
+SHAPES = [(256, 512, 2048), (512, 1024, 4096)]
+ACTS = ["relu", "softplus"]
+
+
+def _time(fn, *args, repeats=5) -> float:
+    fn(*args)  # warmup/compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def rows() -> list[tuple[str, float, float]]:
+    out = []
+    for m, d, f in SHAPES:
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (m, d), jnp.float32) * 0.1
+        w1 = jax.random.normal(k2, (d, f), jnp.float32) * 0.02
+        w2 = jax.random.normal(k3, (f, d), jnp.float32) * 0.02
+        for act_name in ACTS:
+            act = DEFAULT_TABLE.lookup(act_name)
+
+            fused = jax.jit(lambda x, w1, w2: act(x @ w1) @ w2)
+            mm1 = jax.jit(lambda x, w1: x @ w1)
+            act_j = jax.jit(act)
+            mm2 = jax.jit(lambda h, w2: h @ w2)
+
+            def dma_style(x, w1, w2):
+                h = jax.block_until_ready(mm1(x, w1))   # DMA out
+                h = jax.block_until_ready(act_j(h))     # host step
+                return mm2(h, w2)                        # DMA in
+
+            t_fused = _time(fused, x, w1, w2)
+            t_dma = _time(dma_style, x, w1, w2)
+            tag = f"fusion/{m}x{d}x{f}/{act_name}"
+            out.append((f"{tag}/fused_us", t_fused, 1.0))
+            out.append((f"{tag}/dma_us", t_dma, t_dma / t_fused))
+    return out

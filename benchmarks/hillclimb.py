@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Perf hillclimb driver: lower one cell with config overrides and report
+loop-aware roofline terms (EXPERIMENTS.md §Perf).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb llama3-405b train_4k \
+      --set seq_shard_acts=true --tset microbatch_per_device=2
+
+Reports, per run:
+  * loop-aware dot FLOPs (global) vs the analytic exact count,
+  * loop-aware collective bytes per kind (per device),
+  * the three roofline terms + roofline fraction,
+  * memory_analysis temp bytes per device.
+"""
+
+import argparse
+import json
+import time
+
+
+def parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def measure(arch: str, shape: str, multi_pod: bool, cfg_over: dict,
+            tcfg_over: dict) -> dict:
+    from repro import configs as cfglib
+    from repro.core import constants
+    from repro.launch.dryrun import lower_cell
+    from repro.launch.flops import analytic_step_bytes, analytic_step_flops
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    t0 = time.time()
+    lowered, compiled, ctx = lower_cell(arch, shape, multi_pod,
+                                        cfg_over or None, tcfg_over or None)
+    hlo = analyze_hlo(compiled.as_text())
+    cell = cfglib.get_shape(shape)
+    chips = ctx["chips"]
+    chip = constants.V5E
+    mem = compiled.memory_analysis()
+    n_micro = tcfg_over.get("n_micro_effective")
+    if cell.kind == "train":
+        dp = 32 if multi_pod else 16
+        mbpd = tcfg_over.get("microbatch_per_device", 1)
+        n_micro = max(1, cell.global_batch // (mbpd * dp))
+    else:
+        n_micro = 1
+
+    t_compute = hlo.dot_flops / chip.peak_flops
+    t_coll = hlo.coll_bytes_total / chip.ici_bytes_per_s
+    t_mem_ideal = analytic_step_bytes(
+        cfglib.get_config(arch), cell, n_micro
+    ) / (chips * chip.hbm_bytes_per_s)
+    t_ideal = analytic_step_flops(cfglib.get_config(arch), cell) / (
+        chips * chip.peak_flops
+    )
+    terms = {"compute": t_compute, "memory": t_mem_ideal,
+             "collective": t_coll}
+    return {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "overrides": {**cfg_over, **tcfg_over},
+        "compile_s": round(time.time() - t0, 1),
+        "dot_flops_global_P": round(hlo.dot_flops * chips / 1e15, 2),
+        "analytic_flops_P": round(
+            analytic_step_flops(cfglib.get_config(arch), cell) / 1e15, 2),
+        "coll_GB_per_dev": {k: round(v / 1e9, 2)
+                            for k, v in hlo.coll_bytes.items() if v > 0},
+        "t_compute_s": t_compute,
+        "t_mem_ideal_s": t_mem_ideal,
+        "t_collective_s": t_coll,
+        "bottleneck": max(terms, key=terms.get),
+        "step_s": max(terms.values()),
+        "roofline_fraction": t_ideal / max(terms.values()),
+        "temp_GiB_per_dev": round(mem.temp_size_in_bytes / 2**30, 2),
+        "arg_GiB_per_dev": round(mem.argument_size_in_bytes / 2**30, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--set", action="append", help="cfg override k=v")
+    ap.add_argument("--tset", action="append", help="train-cfg override k=v")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    rec = measure(args.arch, args.shape, args.mesh == "multi",
+                  parse_kv(args.set), parse_kv(args.tset))
+    print(json.dumps(rec, indent=1))
+    if args.tag:
+        os.makedirs("results/hillclimb", exist_ok=True)
+        with open(f"results/hillclimb/{args.tag}.json", "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Paper-artifact benchmarks: Figures 6-8, Table 3, and the §6.1
+activation sweep, all on the paper's own workload (LeNet/CIFAR-10,
+batch 256) through the sidebar engine.
+
+Two number classes per row:
+  * ``us_per_call`` — measured wall-clock of actually executing the
+    engine on this host (CPU): real dispatch/fusion effects.
+  * ``derived``     — the analytical model's value (latency s / energy J /
+    EDP ratio) for the target chip, i.e. the paper-comparable number.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DEFAULT_TABLE,
+    ExecutionMode,
+    account_model,
+    estimate,
+    normalized_edp,
+    run,
+)
+from repro.core.engine import segment_static_chains
+from repro.core.modes import StaticOp
+from repro.models import lenet
+
+BATCH = 256
+MODES = list(ExecutionMode)
+
+
+def _setup(activation: str = "relu"):
+    lenet.register_pooling(DEFAULT_TABLE)
+    params = lenet.engine_params(lenet.init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, 3, 32, 32),
+                          jnp.float32)
+    graphs = lenet.to_layer_graphs(batch=BATCH, activation=activation)
+    return params, x, graphs
+
+
+def _measure_wall(graphs, params, x, mode, repeats: int = 3) -> float:
+    """Median wall-time (us) of one inference pass under `mode`."""
+    outs = []
+    for _ in range(repeats + 1):
+        t0 = time.perf_counter()
+        out = x
+        for g in graphs:
+            out = run(g, params, out, mode, DEFAULT_TABLE).output
+        jax.block_until_ready(out)
+        outs.append((time.perf_counter() - t0) * 1e6)
+    outs = sorted(outs[1:])  # drop warmup
+    return outs[len(outs) // 2]
+
+
+def fig6_latency() -> list[tuple[str, float, float]]:
+    """Figure 6: inference latency per design (relu + softplus)."""
+    rows = []
+    for act in ("relu", "softplus"):
+        params, x, graphs = _setup(act)
+        for mode in MODES:
+            wall = _measure_wall(graphs, params, x, mode)
+            est = estimate(account_model(graphs, mode, DEFAULT_TABLE))
+            rows.append((f"fig6/{act}/{mode.value}/latency_s", wall,
+                         est.latency_s))
+    return rows
+
+
+def fig7_energy() -> list[tuple[str, float, float]]:
+    """Figure 7: data-communication energy split (DRAM bus vs Sidebar)."""
+    rows = []
+    params, x, graphs = _setup("relu")
+    for mode in MODES:
+        est = estimate(account_model(graphs, mode, DEFAULT_TABLE))
+        rows.append((f"fig7/relu/{mode.value}/dram_energy_j", 0.0, est.e_hbm_j))
+        rows.append((f"fig7/relu/{mode.value}/sidebar_energy_j", 0.0,
+                     est.e_sidebar_j))
+        rows.append((f"fig7/relu/{mode.value}/total_energy_j", 0.0,
+                     est.energy_j))
+    return rows
+
+
+def fig8_edp() -> list[tuple[str, float, float]]:
+    """Figure 8: EDP normalized to the monolithic design."""
+    rows = []
+    for act in ("relu", "softplus"):
+        _, _, graphs = _setup(act)
+        ests = {m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
+                for m in MODES}
+        norm = normalized_edp(ests)
+        for mode, v in norm.items():
+            rows.append((f"fig8/{act}/{mode}/normalized_edp", 0.0, v))
+    return rows
+
+
+def table3_primitives() -> list[tuple[str, float, float]]:
+    """Table 3 analogue: per-primitive (S1..S5) latency + 'area' proxy.
+
+    The paper's area blow-up came from per-accelerator private memory;
+    our proxy is each chain's weight+IO bytes. Latency is the chain's
+    standalone estimate; energy its model energy.
+    """
+    rows = []
+    _, _, graphs = _setup("relu")
+    graph = graphs[0]
+    chains = segment_static_chains(graph)
+    shapes = graph.shapes()
+    idx = 0
+    for i, chain in enumerate(chains):
+        static = [op for op in chain if isinstance(op, StaticOp)]
+        if not static:
+            continue
+        name = "+".join(op.name for op in static)
+        flops = sum(op.flops for op in static)
+        wbytes = sum(op.weight_bytes for op in static)
+        from repro.core.constants import V5E
+
+        t = max(flops / V5E.peak_flops, wbytes / V5E.hbm_bytes_per_s)
+        e = flops * V5E.e_mxu_per_flop + wbytes * V5E.e_hbm_per_byte
+        rows.append((f"table3/S{i+1}_{name}/latency_s", 0.0, t))
+        rows.append((f"table3/S{i+1}_{name}/energy_j", 0.0, e))
+        rows.append((f"table3/S{i+1}_{name}/area_proxy_bytes", 0.0, wbytes))
+    # monolithic totals (Relu + SoftPlus variants, as in Table 3)
+    for act in ("relu", "softplus"):
+        _, _, gs = _setup(act)
+        est = estimate(account_model(gs, ExecutionMode.MONOLITHIC,
+                                     DEFAULT_TABLE))
+        rows.append((f"table3/monolithic_{act}/latency_s", 0.0, est.latency_s))
+        rows.append((f"table3/monolithic_{act}/energy_j", 0.0, est.energy_j))
+    return rows
+
+
+def activation_sweep() -> list[tuple[str, float, float]]:
+    """§6.1 generalized: overhead-vs-monolithic for every Table-1
+    activation, showing the flexible-DMA gap growing with activation cost
+    while the sidebar gap stays flat."""
+    rows = []
+    for act in ("heaviside", "relu", "leaky_relu", "elu", "sigmoid",
+                "tanh", "gelu", "softplus"):
+        _, _, graphs = _setup(act)
+        ests = {m: estimate(account_model(graphs, m, DEFAULT_TABLE))
+                for m in MODES}
+        mono = ests[ExecutionMode.MONOLITHIC].latency_s
+        rows.append((
+            f"sweep/{act}/dma_overhead_pct", 0.0,
+            100.0 * (ests[ExecutionMode.FLEXIBLE_DMA].latency_s / mono - 1),
+        ))
+        rows.append((
+            f"sweep/{act}/sidebar_overhead_pct", 0.0,
+            100.0 * (ests[ExecutionMode.SIDEBAR].latency_s / mono - 1),
+        ))
+    return rows
+
+
+def validate_paper_claims() -> list[tuple[str, float, float]]:
+    """EXPERIMENTS.md §Paper-validation: claim -> 1.0 (holds) / 0.0."""
+    lenet.register_pooling(DEFAULT_TABLE)
+    g_relu = lenet.to_layer_graphs(BATCH, "relu")
+    g_soft = lenet.to_layer_graphs(BATCH, "softplus")
+    checks = {}
+    for tag, graphs in (("relu", g_relu), ("softplus", g_soft)):
+        ests = {m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
+                for m in MODES}
+        lat = {k: v.latency_s for k, v in ests.items()}
+        edp = normalized_edp(ests)
+        checks[f"claims/{tag}/ordering_latency"] = float(
+            lat["monolithic"] <= lat["sidebar"] < lat["flexible_dma"])
+        checks[f"claims/{tag}/dma_latency_gap_8pct_plus"] = float(
+            lat["flexible_dma"] / lat["monolithic"] >= 1.08)
+        checks[f"claims/{tag}/sidebar_latency_within_10pct"] = float(
+            lat["sidebar"] / lat["monolithic"] <= 1.10)
+        checks[f"claims/{tag}/edp_dma_worst"] = float(
+            edp["flexible_dma"] > edp["sidebar"] > 0.999)
+    return [(k, 0.0, v) for k, v in checks.items()]

@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  fig6_latency      — paper Figure 6 (inference latency, 3 designs)
+  fig7_energy       — paper Figure 7 (communication energy split)
+  fig8_edp          — paper Figure 8 (normalized EDP)
+  table3_primitives — paper Table 3 (per-primitive cost/area analogue)
+  activation_sweep  — paper §6.1 (gap vs activation cost)
+  claims            — pass/fail of the paper's quantitative claims
+  fusion            — measured wall-clock sidebar-vs-DMA on this host
+  roofline          — per-(arch x shape x mesh) dry-run roofline terms
+
+Run: PYTHONPATH=src python -m benchmarks.run [section ...]
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import fusion_bench, paper_figures, roofline_report
+
+    sections = {
+        "fig6_latency": paper_figures.fig6_latency,
+        "fig7_energy": paper_figures.fig7_energy,
+        "fig8_edp": paper_figures.fig8_edp,
+        "table3_primitives": paper_figures.table3_primitives,
+        "activation_sweep": paper_figures.activation_sweep,
+        "claims": paper_figures.validate_paper_claims,
+        "fusion": fusion_bench.rows,
+        "roofline": roofline_report.rows,
+    }
+    wanted = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        fn = sections[name]
+        try:
+            for row in fn():
+                tag, us, derived = row
+                print(f"{tag},{us:.3f},{derived:.6e}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}/ERROR,0,0  # {type(e).__name__}: {e}",
+                  file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""The paper's own experiment, end to end (Figures 6-8 on LeNet/CIFAR-10).
+
+Runs a batch-256 LeNet inference pass under MONOLITHIC / FLEXIBLE_DMA /
+SIDEBAR with relu and softplus, printing the latency / energy / EDP table
+and checking the paper's claims.
+
+Run: PYTHONPATH=src python examples/lenet_paper_workload.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DEFAULT_TABLE,
+    ExecutionMode,
+    account_model,
+    estimate,
+    normalized_edp,
+    run,
+)
+from repro.models import lenet
+
+
+def main():
+    lenet.register_pooling(DEFAULT_TABLE)
+    params = lenet.engine_params(lenet.init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 3, 32, 32), jnp.float32)
+
+    for act in ("relu", "softplus"):
+        graphs = lenet.to_layer_graphs(batch=256, activation=act)
+        print(f"\n=== LeNet inference, activation = {act} ===")
+        print(f"{'design':<14}{'latency (us)':>13}{'energy (mJ)':>13}"
+              f"{'norm. EDP':>11}{'vs mono':>9}")
+        ests = {m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
+                for m in ExecutionMode}
+        norm = normalized_edp(ests)
+        mono_lat = ests["monolithic"].latency_s
+        for mode in ExecutionMode:
+            e = ests[mode.value]
+            print(f"{mode.value:<14}{e.latency_s*1e6:>13.1f}"
+                  f"{e.energy_j*1e3:>13.3f}{norm[mode.value]:>11.3f}"
+                  f"{e.latency_s/mono_lat:>9.3f}")
+
+        # run numerically too (correctness across modes)
+        outs = {}
+        for mode in ExecutionMode:
+            out = x
+            for g in graphs:
+                out = run(g, params, out, mode, DEFAULT_TABLE).output
+            outs[mode] = np.asarray(out)
+        ok = all(
+            np.allclose(outs[m], outs[ExecutionMode.MONOLITHIC], atol=1e-4)
+            for m in ExecutionMode
+        )
+        print(f"numerics identical across designs: {ok}")
+
+    print("\nPaper claims (Figure 6/8, softplus):")
+    graphs = lenet.to_layer_graphs(batch=256, activation="softplus")
+    ests = {m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
+            for m in ExecutionMode}
+    norm = normalized_edp(ests)
+    dma_gap = ests["flexible_dma"].latency_s / ests["monolithic"].latency_s
+    sb_gap = ests["sidebar"].latency_s / ests["monolithic"].latency_s
+    print(f"  flexible-DMA latency overhead: {100*(dma_gap-1):.1f}% "
+          f"(paper: 8-14%)")
+    print(f"  sidebar latency overhead:      {100*(sb_gap-1):.1f}% "
+          f"(paper: <=2%)")
+    print(f"  flexible-DMA EDP:              {norm['flexible_dma']:.2f}x "
+          f"(paper: ~1.5x)")
+    print(f"  sidebar EDP:                   {norm['sidebar']:.2f}x "
+          f"(paper: ~1.07x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Quickstart: the Sidebar engine in 60 lines.
+
+Builds one matmul->activation->matmul task, runs it under the paper's
+three designs, prints the latency/energy/EDP table, and demonstrates the
+flexibility claim: hot-swapping the activation updates the SIDEBAR design
+but not the 'taped-out' MONOLITHIC artifact.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    StaticOp,
+    account,
+    build_monolithic,
+    estimate,
+    make_default_table,
+    run,
+)
+
+
+def mm(w, x):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def main():
+    b, d, f = 64, 512, 2048
+    graph = LayerGraph(
+        name="mlp",
+        ops=(
+            StaticOp("w1", mm, (b, f), flops=2 * b * d * f,
+                     weight_bytes=d * f * 4),
+            FlexibleOp("softplus", (b, f)),
+            StaticOp("w2", mm, (b, d), flops=2 * b * f * d,
+                     weight_bytes=f * d * 4),
+        ),
+        in_shape=(b, d),
+    )
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w1": jax.random.normal(k1, (d, f), jnp.float32) * 0.02,
+        "w2": jax.random.normal(k2, (f, d), jnp.float32) * 0.02,
+    }
+    x = jax.random.normal(k3, (b, d), jnp.float32)
+    table = make_default_table()
+
+    print(f"{'design':<14}{'latency (us)':>14}{'energy (uJ)':>14}{'EDP':>12}")
+    outs = {}
+    for mode in ExecutionMode:
+        res = run(graph, params, x, mode, table)
+        est = estimate(res.accounting)
+        outs[mode] = np.asarray(res.output)
+        print(f"{mode.value:<14}{est.latency_s*1e6:>14.2f}"
+              f"{est.energy_j*1e6:>14.2f}{est.edp:>12.3e}")
+    assert np.allclose(outs[ExecutionMode.SIDEBAR],
+                       outs[ExecutionMode.MONOLITHIC], atol=1e-5)
+    print("\nall three designs compute identical results ✓")
+
+    # --- the flexibility claim -------------------------------------------
+    mono = build_monolithic(graph, table)           # 'tape-out'
+    before = np.asarray(mono(params, x))
+    table.register("softplus", lambda v: jnp.maximum(v, 0.0), overwrite=True)
+    after = np.asarray(mono(params, x))
+    sidebar_new = np.asarray(
+        run(graph, params, x, ExecutionMode.SIDEBAR, table).output
+    )
+    print("hot-swapped softplus -> relu in the function table:")
+    print(f"  monolithic output changed: {not np.allclose(before, after)}"
+          "  (frozen silicon)")
+    print(f"  sidebar    output changed: "
+          f"{not np.allclose(sidebar_new, before)}  (driver update only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end serving driver (the paper is an inference paper).
+
+Serves a small LM with batched requests: bucket prompts, prefill once,
+greedy-decode N tokens per request, report tokens/s. Architecture is
+selectable (--arch, smoke-scale configs on CPU).
+
+Run: PYTHONPATH=src python examples/serve_batch.py --arch deepseek-7b \
+         --batch 4 --prompt-len 32 --gen 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.launch.serve import Server
+from repro.models.registry import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b", choices=cfglib.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = cfglib.get_smoke_config(args.arch)
+    api = get_model(cfg)
+    print(f"arch={cfg.arch_id} (reduced config for CPU), "
+          f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}")
+
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, params, max_len=args.prompt_len + args.gen)
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size, dtype=jnp.int32,
+    )
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+
+    # warmup (compile)
+    server.generate(prompts, 2, extra)
+    t0 = time.perf_counter()
+    result = server.generate(prompts, args.gen, extra)
+    dt = time.perf_counter() - t0
+    total_new = args.batch * args.gen
+    print(f"generated {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s on CPU)")
+    print("sample continuation ids:",
+          result.tokens[0, args.prompt_len:args.prompt_len + 8].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end fault-tolerant training driver.
+
+Trains an LM with the full production loop: deterministic data pipeline,
+microbatched AdamW, async checkpointing, auto-resume, straggler watchdog.
+Defaults are CPU-sized (a ~10M-param llama-style model, 40 steps); the
+same driver scales to the full configs on a real mesh:
+
+  # CPU demo (about a minute):
+  PYTHONPATH=src python examples/train_lm.py
+
+  # ~115M-param model, a few hundred steps (longer):
+  PYTHONPATH=src python examples/train_lm.py --d-model 768 --layers 12 \
+      --heads 12 --d-ff 3072 --vocab 32000 --steps 200
+
+  # kill it at any point and re-run: it resumes from the last checkpoint.
+"""
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
+from repro.launch.train import Trainer
+from repro.launch.roofline import count_params
+from repro.models import layers as L
+from repro.models.registry import get_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        arch_id="train-lm-demo", family="dense",
+        num_layers=args.layers, d_model=args.d_model, num_heads=args.heads,
+        num_kv_heads=max(1, args.heads // 2), d_ff=args.d_ff,
+        vocab_size=args.vocab, dtype=jnp.float32,
+        kv_cache_dtype=jnp.float32,
+    )
+    total, emb, _ = count_params(get_model(cfg).param_specs(cfg, L.HOST))
+    print(f"model: {total/1e6:.1f}M params ({(total-emb)/1e6:.1f}M non-embed)")
+
+    cell = ShapeCell("train_demo", args.seq, args.batch, "train")
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                       microbatch_per_device=max(1, args.batch // 2),
+                       grad_compression=args.compression)
+    trainer = Trainer(cfg, tcfg, cell, ckpt_dir=args.ckpt_dir, ckpt_every=10)
+    report = trainer.run(args.steps)
+    if report.resumed_from:
+        print(f"resumed from checkpoint at step {report.resumed_from}")
+    print(f"ran {report.steps_run} steps; "
+          f"loss {report.losses[0]:.3f} -> {report.final_loss:.3f}; "
+          f"stragglers={report.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Config registry: --arch <id> resolution for all assigned architectures."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_7b,
+    deepseek_v3_671b,
+    llama3_405b,
+    llama4_scout_17b,
+    llama32_vision_90b,
+    nemotron_4_15b,
+    qwen3_14b,
+    rwkv6_7b,
+    whisper_medium,
+    zamba2_7b,
+)
+from repro.configs.base import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeCell,
+    TrainConfig,
+    applicable_shapes,
+)
+
+_MODULES = {
+    "zamba2-7b": zamba2_7b,
+    "llama3-405b": llama3_405b,
+    "nemotron-4-15b": nemotron_4_15b,
+    "deepseek-7b": deepseek_7b,
+    "qwen3-14b": qwen3_14b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "llama4-scout-17b-a16e": llama4_scout_17b,
+    "rwkv6-7b": rwkv6_7b,
+    "whisper-medium": whisper_medium,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+}
+
+ARCH_IDS = tuple(_MODULES.keys())
+SHAPE_BY_NAME = {c.name: c for c in ALL_SHAPES}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return _MODULES[arch_id].FULL
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}") from None
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return _MODULES[arch_id].smoke()
+
+
+def get_shape(name: str) -> ShapeCell:
+    return SHAPE_BY_NAME[name]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All well-defined (arch, shape) cells — the 40-cell table minus the
+    long_500k rows that pure-attention archs skip (DESIGN.md §4)."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for cell in applicable_shapes(cfg):
+            out.append((arch, cell.name))
+    return out

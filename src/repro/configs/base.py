@@ -1,0 +1,151 @@
+"""Config system: model architecture + input-shape cells + smoke reduction.
+
+Every assigned architecture gets a ``ModelConfig`` in ``configs/<id>.py``
+with the exact published hyperparameters, plus a ``smoke()`` reduction of
+the same family for CPU tests. Shape cells (train_4k / prefill_32k /
+decode_32k / long_500k) are defined here once and apply per-arch according
+to family rules (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (superset across the 10 assigned families)."""
+
+    arch_id: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+
+    # flexible functions (function-table keys) — the paper's swap points
+    activation: str = "silu"
+    gated_mlp: bool = True
+    qk_norm: bool = False
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0              # per-expert hidden (d_ff if 0)
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0    # deepseek-v3: first k layers stay dense
+
+    # MLA (deepseek-v3)
+    use_mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # SSM (mamba2) / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0            # zamba2: shared attn block period
+
+    # RWKV6
+    rwkv_head_dim: int = 64
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # fixed frame count (1500 for whisper)
+
+    # VLM
+    cross_attn_every: int = 0      # every Nth layer is a cross-attn block
+    num_image_tokens: int = 0
+
+    # numerics / engineering
+    dtype: Any = jnp.bfloat16
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    scan_layers: bool = True
+    remat: str = "full"            # full | dots | none
+    use_pallas: bool = False       # route hot ops through Pallas kernels
+    kv_cache_dtype: Any = jnp.bfloat16  # int8 => quantized KV (big decode)
+    moe_dispatch: str = "shard_map"     # shard_map | dense
+    # perf levers (EXPERIMENTS.md §Perf):
+    seq_shard_acts: bool = False   # shard saved layer boundaries over "model"
+                                   # (sequence parallelism at checkpoints)
+    tp_activations: bool = False   # weight-stationary TP: shard activation
+                                   # d_model over the fsdp axes; weights are
+                                   # never all-gathered (activation psums
+                                   # replace FSDP weight gathers)
+    cache_in_carry: bool = True    # decode cache as scan CARRY with in-place
+                                   # slice updates (donation-aliasable); the
+                                   # xs/ys restacking alternative doubles
+                                   # peak decode memory (19.4 -> 0.9 GiB/dev
+                                   # on deepseek-7b decode_32k, §Perf)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run long_500k? (SSM / hybrid-with-windowing only.)"""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (input-shape) column of the assignment table."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeCell("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeCell("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeCell("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeCell("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[ShapeCell]:
+    """Shape cells that are well-defined for this arch (DESIGN.md §4)."""
+    cells = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.subquadratic:
+        cells.append(LONG_500K)
+    return cells
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    microbatch_per_device: int = 1   # grad-accumulation microbatch size
+    moment_dtype: Any = jnp.float32  # bf16 for the largest configs
+    grad_compression: str = "none"   # none | bf16 | int8_ef

@@ -1,0 +1,64 @@
+"""Core: the paper's contribution — Sidebar-based CPU/accelerator cooperation.
+
+Public surface:
+  * ``FunctionTable`` / ``DEFAULT_TABLE`` — the host function table.
+  * ``SidebarBuffer`` — ownership-checked scratchpad protocol model.
+  * ``LayerGraph`` / ``StaticOp`` / ``FlexibleOp`` — static/flexible IR.
+  * ``ExecutionMode`` — MONOLITHIC | FLEXIBLE_DMA | SIDEBAR.
+  * ``engine.run`` / ``engine.account`` — execute / meter a task.
+  * ``energy.estimate`` — latency/energy/EDP model.
+  * ``policy.AutoPolicy`` — per-layer mode selection.
+"""
+
+from repro.core.constants import V5E, ChipSpec
+from repro.core.energy import Estimate, TaskAccounting, estimate, normalized_edp
+from repro.core.engine import account, account_model, build_monolithic, run
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable, make_default_table
+from repro.core.modes import (
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    OpKind,
+    StaticOp,
+    segment_static_chains,
+)
+from repro.core.policy import AutoPolicy, fixed, plan
+from repro.core.sidebar import (
+    Owner,
+    Region,
+    SidebarBuffer,
+    SidebarCall,
+    SidebarProtocolError,
+    SidebarStats,
+)
+
+__all__ = [
+    "V5E",
+    "ChipSpec",
+    "Estimate",
+    "TaskAccounting",
+    "estimate",
+    "normalized_edp",
+    "account",
+    "account_model",
+    "build_monolithic",
+    "run",
+    "DEFAULT_TABLE",
+    "FunctionTable",
+    "make_default_table",
+    "ExecutionMode",
+    "FlexibleOp",
+    "LayerGraph",
+    "OpKind",
+    "StaticOp",
+    "segment_static_chains",
+    "AutoPolicy",
+    "fixed",
+    "plan",
+    "Owner",
+    "Region",
+    "SidebarBuffer",
+    "SidebarCall",
+    "SidebarProtocolError",
+    "SidebarStats",
+]

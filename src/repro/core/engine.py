@@ -1,0 +1,266 @@
+"""The Sidebar execution engine.
+
+Runs a ``LayerGraph`` (alternating static/flexible ops) under each of the
+paper's three designs, producing *numerically identical results* (the math
+is mode-invariant — tests assert this) while differing in:
+
+  * how many accelerator launches happen,
+  * where intermediates live (HBM round-trip vs sidebar scratch vs internal
+    datapath),
+  * who computes the flexible functions (host VPU vs dedicated HW),
+  * which protocol events fire (DMA flush vs sidebar handshake).
+
+Two layers of fidelity:
+
+  1. ``run(...)`` — actually executes the graph in JAX, routing every
+     flexible call through the mode's mechanism. In SIDEBAR mode the
+     intermediate passes through a ``SidebarBuffer`` software model which
+     enforces the ownership protocol and meters traffic. In MONOLITHIC
+     mode the whole task is built into one compiled callable whose
+     flexible functions were *frozen at build time* (hot-swapping the
+     function table afterwards must not — and does not — change it).
+
+  2. ``account(...)`` — pure analytic counts (no execution) feeding
+     ``core.energy.estimate``. The dry-run/roofline path uses this at
+     production scale where numeric execution is impossible on CPU.
+
+The fused TPU fast path for the hot pattern (matmul → activation → matmul)
+is ``kernels/sidebar_mlp.py``; the engine is the general mechanism and the
+place where mode semantics are defined.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants
+from repro.core.energy import TaskAccounting
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+from repro.core.modes import (
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    StaticOp,
+    segment_static_chains,
+)
+from repro.core.sidebar import Owner, SidebarBuffer, SidebarCall, required_capacity
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Numeric execution.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    output: Array
+    accounting: TaskAccounting
+    launches: int
+    sidebar: SidebarBuffer | None = None
+
+
+def _apply_static_chain(chain, params: dict[str, Any], x: Array, table: FunctionTable) -> Array:
+    """Apply one maximal chain (static ops + at most one trailing flexible).
+
+    Inside a chain, a trailing flexible op is fused with the statics —
+    this only happens in MONOLITHIC mode where fusion is total.
+    """
+    for op in chain:
+        if isinstance(op, StaticOp):
+            x = op.fn(params[op.name], x)
+        else:
+            x = table.lookup(op.function)(x)
+    return x
+
+
+def build_monolithic(
+    graph: LayerGraph, table: FunctionTable = DEFAULT_TABLE
+) -> Callable[[dict[str, Any], Array], Array]:
+    """Freeze the whole task into one compiled program (the fixed-function
+    accelerator). Flexible functions are resolved NOW; later table edits
+    don't reach the compiled artifact — that's the inflexibility the paper
+    ascribes to monolithic hardware."""
+    frozen = {
+        op.function: table.lookup(op.function)
+        for op in graph.ops
+        if isinstance(op, FlexibleOp)
+    }
+
+    def task(params: dict[str, Any], x: Array) -> Array:
+        for op in graph.ops:
+            if isinstance(op, StaticOp):
+                x = op.fn(params[op.name], x)
+            else:
+                x = frozen[op.function](x)
+        return x
+
+    return jax.jit(task)
+
+
+def run(
+    graph: LayerGraph,
+    params: dict[str, Any],
+    x: Array,
+    mode: ExecutionMode,
+    table: FunctionTable = DEFAULT_TABLE,
+    *,
+    sidebar_capacity: int | None = None,
+) -> RunResult:
+    """Execute the task under ``mode``; returns output + exact accounting."""
+    acct = account(graph, mode, table)
+
+    if mode is ExecutionMode.MONOLITHIC:
+        out = build_monolithic(graph, table)(params, x)
+        return RunResult(out, acct, launches=1)
+
+    if mode is ExecutionMode.FLEXIBLE_DMA:
+        # One launch per static chain; flexible ops run "on the host" as
+        # separate dispatches with the intermediate materialized both ways.
+        launches = 0
+        for chain in segment_static_chains(graph):
+            static_part = [op for op in chain if isinstance(op, StaticOp)]
+            if static_part:
+                x = jax.jit(
+                    functools.partial(_apply_static_chain, static_part, table=table)
+                )(params, x)
+                x = jax.block_until_ready(x)  # the DMA-out barrier
+                launches += 1
+            flex = [op for op in chain if isinstance(op, FlexibleOp)]
+            for op in flex:
+                x = jax.jit(table.lookup(op.function))(x)
+                x = jax.block_until_ready(x)  # host writes back to DRAM
+        return RunResult(x, acct, launches=launches)
+
+    # SIDEBAR: single fused launch; every flexible op routes its operand
+    # through the SidebarBuffer protocol model (ownership + traffic checks).
+    capacity = sidebar_capacity or required_capacity(
+        graph.shapes()[0], graph.itemsize, copies=2
+    )
+    for _, op, shape in graph.flexible_ops():
+        need = required_capacity(shape, graph.itemsize, copies=2)
+        capacity = max(capacity, need)
+    sb = SidebarBuffer(capacity, name=f"{graph.name}.sidebar")
+
+    for op in graph.ops:
+        if isinstance(op, StaticOp):
+            x = op.fn(params[op.name], x)
+        else:
+            operand = np.asarray(x)
+            sb.free_all()
+            in_region = sb.allocate("operand", operand.nbytes)
+            out_nbytes = int(math.prod(op.out_shape)) * operand.dtype.itemsize
+            sb.allocate("result", out_nbytes)
+            sb.write(Owner.ACCELERATOR, "operand", operand)
+            sb.invoke_host(
+                SidebarCall(
+                    function=op.function,
+                    in_regions=("operand",),
+                    out_regions=("result",),
+                    n_elements=int(operand.size),
+                ),
+                table,
+                dtype=operand.dtype,
+            )
+            x = jnp.asarray(sb.read(Owner.ACCELERATOR, "result")).reshape(op.out_shape)
+    return RunResult(x, acct, launches=1, sidebar=sb)
+
+
+# ---------------------------------------------------------------------------
+# Analytic accounting (drives energy model, benchmarks, roofline).
+# ---------------------------------------------------------------------------
+
+
+def account(
+    graph: LayerGraph,
+    mode: ExecutionMode,
+    table: FunctionTable = DEFAULT_TABLE,
+) -> TaskAccounting:
+    """Exact byte/flop/protocol counts for one task under ``mode``.
+
+    Shared by all modes (paper: "the initial and final DMA processes must
+    still take place"): task input DMA-in, task output DMA-out, weight
+    streaming, and the MXU flops of the static ops.
+    """
+    io_bytes = graph.in_bytes + graph.out_bytes
+    weight_bytes = graph.weight_bytes
+    mxu = graph.static_flops
+
+    flex = graph.flexible_ops()
+    flex_elems = [
+        (int(math.prod(shape)), table.cost(op.function)) for _, op, shape in flex
+    ]
+    flex_ops_total = int(sum(n * c for n, c in flex_elems))
+    flex_elems_total = int(sum(n for n, _ in flex_elems))
+    flex_bytes_total = int(
+        sum(graph.bytes_of(shape) for _, _, shape in flex)
+        + sum(graph.bytes_of(op.out_shape) for _, op, _ in flex)
+    )
+
+    if mode is ExecutionMode.MONOLITHIC:
+        return TaskAccounting(
+            mode=mode.value,
+            hbm_io_bytes=io_bytes,
+            hbm_weight_bytes=weight_bytes,
+            mxu_flops=mxu,
+            flex_hw_ops=flex_ops_total,       # dedicated in-pipeline unit
+            flex_elements=flex_elems_total,
+            datapath_bytes=flex_bytes_total,  # internal registers/SRAM
+            launches=1,
+            dma_flushes=2,                    # initial in + final out
+        )
+
+    if mode is ExecutionMode.FLEXIBLE_DMA:
+        n_chains = len(segment_static_chains(graph))
+        # Each flexible operand crosses the bus 4x: acc store, host load,
+        # host store, next-acc load (paper §5.3.2).
+        dma_intermediate = 2 * flex_bytes_total  # operand(2x) + result(2x)
+        return TaskAccounting(
+            mode=mode.value,
+            hbm_io_bytes=io_bytes,
+            hbm_weight_bytes=weight_bytes,
+            hbm_intermediate_bytes=dma_intermediate,
+            mxu_flops=mxu,
+            flex_vpu_ops=flex_ops_total,
+            flex_elements=flex_elems_total,
+            launches=n_chains,
+            dma_flushes=2 + 2 * len(flex),    # per-handoff flush+invalidate
+            host_invocations=len(flex),
+        )
+
+    # SIDEBAR
+    sidebar_bytes = 2 * flex_bytes_total      # acc<->sb and host<->sb
+    return TaskAccounting(
+        mode=mode.value,
+        hbm_io_bytes=io_bytes,
+        hbm_weight_bytes=weight_bytes,
+        sidebar_bytes=sidebar_bytes,
+        mxu_flops=mxu,
+        flex_vpu_ops=flex_ops_total,
+        flex_elements=flex_elems_total,
+        launches=1,
+        dma_flushes=2,
+        handshakes=2 * len(flex),
+        host_invocations=len(flex),
+    )
+
+
+def account_model(
+    graphs: list[LayerGraph],
+    mode: ExecutionMode,
+    table: FunctionTable = DEFAULT_TABLE,
+) -> TaskAccounting:
+    """Accounting for a whole model = merged per-layer tasks."""
+    accts = [account(g, mode, table) for g in graphs]
+    total = accts[0]
+    for a in accts[1:]:
+        total = total.merge(a)
+    return total

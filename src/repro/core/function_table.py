@@ -1,0 +1,201 @@
+"""The host function table (paper §3.3).
+
+The paper's host CPU keeps "a table of functions the accelerator may call
+on the CPU to perform. These functions will be part of the accelerator's
+driver and will therefore be written and compiled ahead of time". The
+accelerator invokes them by writing a function pointer + arguments into
+dedicated Sidebar slots.
+
+Here the table is the single source of truth for every *flexible* function
+in the system. Static primitives (matmuls, convs, scans) are fixed; flexible
+functions are looked up by name at trace time. Swapping an activation is a
+table operation — **no kernel source changes** — which is exactly the
+flexibility the paper claims over fixed-function (monolithic) designs.
+
+Entries are pure jnp callables so the same table serves:
+  * the analytical engine (core/engine.py),
+  * the Pallas kernel epilogues (kernels/sidebar_mlp.py traces the entry
+    into the kernel body on the VPU),
+  * the FLEXIBLE_DMA standalone activation kernel,
+  * the reference oracles (kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionEntry:
+    """One row of the function table.
+
+    Attributes:
+      name: table key (the "function pointer" written into the Sidebar).
+      fn: pure elementwise/rowwise jnp callable.
+      vpu_ops_per_element: host-side vector-op cost (drives the energy and
+        latency model; encodes relu-vs-softplus asymmetry from the paper).
+      rowwise: True if the function needs a full row (softmax, norms) —
+        affects how kernels may tile it (last dim must be resident).
+    """
+
+    name: str
+    fn: Callable[..., Array]
+    vpu_ops_per_element: float
+    rowwise: bool = False
+
+
+class FunctionTable:
+    """Driver-style registry of host ("flexible") functions.
+
+    Thread-safe; versioned. The version increments on any mutation so jitted
+    consumers can key compilation caches on ``(name, version)`` — mirroring
+    "re-register + re-jit, no hardware change".
+    """
+
+    def __init__(self) -> None:
+        self._entries: dict[str, FunctionEntry] = {}
+        self._lock = threading.Lock()
+        self._version = 0
+
+    # -- registration ---------------------------------------------------
+    def register(
+        self,
+        name: str,
+        fn: Callable[..., Array],
+        *,
+        vpu_ops_per_element: float | None = None,
+        rowwise: bool = False,
+        overwrite: bool = False,
+    ) -> FunctionEntry:
+        with self._lock:
+            if name in self._entries and not overwrite:
+                raise ValueError(
+                    f"function {name!r} already registered; pass overwrite=True "
+                    "to hot-swap (the paper's 'new activation function' path)"
+                )
+            cost = (
+                vpu_ops_per_element
+                if vpu_ops_per_element is not None
+                else constants.FLEXIBLE_OP_COST.get(
+                    name, constants.DEFAULT_FLEXIBLE_OP_COST
+                )
+            )
+            entry = FunctionEntry(name, fn, cost, rowwise)
+            self._entries[name] = entry
+            self._version += 1
+            return entry
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            del self._entries[name]
+            self._version += 1
+
+    # -- lookup ----------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __getitem__(self, name: str) -> FunctionEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"flexible function {name!r} not in the function table; "
+                f"known: {sorted(self._entries)}"
+            ) from None
+
+    def lookup(self, name: str) -> Callable[..., Array]:
+        return self[name].fn
+
+    def cost(self, name: str) -> float:
+        return self[name].vpu_ops_per_element
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+
+# ---------------------------------------------------------------------------
+# Default table: the paper's Table 1 activations + the flexible functions
+# the assigned architectures need.
+# ---------------------------------------------------------------------------
+
+def _heaviside(x: Array) -> Array:
+    return (x > 0).astype(x.dtype)
+
+
+def _leaky_relu(x: Array) -> Array:
+    return jnp.where(x > 0, x, 0.01 * x)
+
+
+def _elu(x: Array, a: float = 1.0) -> Array:
+    safe = jnp.minimum(x, 0.0)
+    return jnp.where(x > 0, x, a * (jnp.exp(safe) - 1.0))
+
+
+def _softplus(x: Array) -> Array:
+    # log(1+e^x), numerically stable.
+    return jnp.logaddexp(x, 0.0).astype(x.dtype)
+
+
+def _squared_relu(x: Array) -> Array:
+    r = jnp.maximum(x, 0.0)
+    return (r * r).astype(x.dtype)
+
+
+def _silu(x: Array) -> Array:
+    return (x * jax.nn.sigmoid(x.astype(jnp.float32))).astype(x.dtype)
+
+
+def _gelu(x: Array) -> Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def _softmax(x: Array) -> Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def _rmsnorm(x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype)
+
+
+def _exp_decay(x: Array) -> Array:
+    # RWKV6 data-dependent decay: w = exp(-exp(x)).
+    return jnp.exp(-jnp.exp(x.astype(jnp.float32))).astype(x.dtype)
+
+
+def make_default_table() -> FunctionTable:
+    t = FunctionTable()
+    t.register("identity", lambda x: x)
+    t.register("heaviside", _heaviside)
+    t.register("relu", lambda x: jnp.maximum(x, 0.0).astype(x.dtype))
+    t.register("leaky_relu", _leaky_relu)
+    t.register("elu", _elu)
+    t.register("tanh", lambda x: jnp.tanh(x))
+    t.register("sigmoid", lambda x: jax.nn.sigmoid(x))
+    t.register("softplus", _softplus)
+    t.register("squared_relu", _squared_relu)
+    t.register("silu", _silu)
+    t.register("gelu", _gelu)
+    t.register("abs", lambda x: jnp.abs(x))
+    t.register("softmax", _softmax, rowwise=True)
+    t.register("rmsnorm", _rmsnorm, rowwise=True)
+    t.register("exp_decay", _exp_decay)
+    return t
+
+
+# Process-wide default table (drivers may build their own).
+DEFAULT_TABLE = make_default_table()

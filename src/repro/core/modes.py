@@ -1,0 +1,152 @@
+"""Execution modes and the static/flexible layer-graph IR.
+
+The paper's design space is three ways to run an accelerator task whose
+dataflow alternates *static* tensor primitives with *flexible* functions:
+
+  MONOLITHIC   — everything in one fixed-function accelerator; the flexible
+                 functions are frozen into the hardware (here: baked into
+                 one compiled program at build time; hot-swapping the
+                 function table has NO effect on an already-built program).
+  FLEXIBLE_DMA — static primitives as separate accelerators; each flexible
+                 function runs on the host with the intermediate DMA'd out
+                 to DRAM and back (here: separate kernel launches with the
+                 intermediate materialized to HBM both ways).
+  SIDEBAR      — static primitives as separate accelerators; flexible
+                 functions run on the host through the sidebar scratchpad
+                 (here: fused kernel with the intermediate resident in a
+                 VMEM scratch; the flexible function is looked up in the
+                 function table at trace time).
+
+The IR below expresses a layer as an alternating op list. Models in
+``repro.models`` emit these graphs; ``core.engine`` executes/accounts them;
+``kernels/`` provides the fused TPU implementations for the hot shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Callable, Sequence
+
+import jax
+
+
+class ExecutionMode(enum.Enum):
+    MONOLITHIC = "monolithic"
+    FLEXIBLE_DMA = "flexible_dma"
+    SIDEBAR = "sidebar"
+
+
+class OpKind(enum.Enum):
+    STATIC = "static"      # MXU: matmul/conv/scan — fixed-function
+    FLEXIBLE = "flexible"  # VPU/"host": activation/norm/softmax/router
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticOp:
+    """A fixed-function tensor primitive (one 'small accelerator', S1–S5).
+
+    ``fn(params, x) -> y`` must be pure. ``flops`` and weight bytes are
+    declared (not inferred) so accounting is exact and shape-checked in
+    tests against the jitted cost analysis.
+    """
+
+    name: str
+    fn: Callable[..., jax.Array]
+    out_shape: tuple[int, ...]
+    flops: int                    # MXU flops for one call
+    weight_bytes: int             # parameter bytes streamed from HBM
+    kind: OpKind = dataclasses.field(default=OpKind.STATIC, init=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlexibleOp:
+    """A host/function-table op applied to the previous intermediate."""
+
+    function: str                 # function-table key
+    out_shape: tuple[int, ...]
+    kind: OpKind = dataclasses.field(default=OpKind.FLEXIBLE, init=False)
+
+
+Op = StaticOp | FlexibleOp
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGraph:
+    """One accelerator task: an alternating sequence of ops.
+
+    ``in_shape``/``in_dtype`` describe the activation entering the task
+    (DMA'd in at task start in every mode, per the paper: "the initial and
+    final DMA processes must still take place").
+    """
+
+    name: str
+    ops: tuple[Op, ...]
+    in_shape: tuple[int, ...]
+    itemsize: int = 4  # bytes per element of activations/intermediates
+
+    def __post_init__(self) -> None:
+        if not self.ops:
+            raise ValueError(f"layer graph {self.name!r} has no ops")
+
+    # -- shape/byte bookkeeping -------------------------------------------
+    def shapes(self) -> list[tuple[int, ...]]:
+        """[in_shape, op0.out, op1.out, ...]."""
+        return [self.in_shape] + [op.out_shape for op in self.ops]
+
+    def bytes_of(self, shape: Sequence[int]) -> int:
+        return int(math.prod(shape)) * self.itemsize
+
+    @property
+    def in_bytes(self) -> int:
+        return self.bytes_of(self.in_shape)
+
+    @property
+    def out_bytes(self) -> int:
+        return self.bytes_of(self.ops[-1].out_shape)
+
+    @property
+    def static_flops(self) -> int:
+        return sum(op.flops for op in self.ops if isinstance(op, StaticOp))
+
+    @property
+    def weight_bytes(self) -> int:
+        return sum(op.weight_bytes for op in self.ops if isinstance(op, StaticOp))
+
+    def flexible_ops(self) -> list[tuple[int, FlexibleOp, tuple[int, ...]]]:
+        """(index, op, operand_shape) for each flexible op — the operand is
+        the *previous* op's output (or the input for index 0)."""
+        shapes = self.shapes()
+        return [
+            (i, op, shapes[i])
+            for i, op in enumerate(self.ops)
+            if isinstance(op, FlexibleOp)
+        ]
+
+    def max_intermediate_bytes(self) -> int:
+        """Sidebar capacity the task needs (largest staged intermediate)."""
+        flex = self.flexible_ops()
+        if not flex:
+            return 0
+        return max(
+            max(self.bytes_of(shape), self.bytes_of(op.out_shape))
+            for _, op, shape in flex
+        )
+
+
+def segment_static_chains(graph: LayerGraph) -> list[list[Op]]:
+    """Split the op list into maximal chains, breaking after flexible ops.
+
+    FLEXIBLE_DMA launches one accelerator per *static chain* and one host
+    call per flexible op; SIDEBAR fuses everything into one launch. The
+    segmentation is what Figure 4 draws as S1..S5 for LeNet.
+    """
+    chains: list[list[Op]] = [[]]
+    for op in graph.ops:
+        chains[-1].append(op)
+        if isinstance(op, FlexibleOp):
+            chains.append([])
+    if not chains[-1]:
+        chains.pop()
+    return chains

@@ -1,0 +1,59 @@
+"""Per-layer execution-mode policies.
+
+A production deployment doesn't pick one mode globally: the paper itself
+notes the trade depends on the intermediate size and the flexible-function
+cost. A ``Policy`` maps each layer graph to an ``ExecutionMode``; the
+``auto`` policy picks SIDEBAR when the intermediate fits the sidebar and
+the predicted EDP beats the alternatives, falling back to FLEXIBLE_DMA for
+oversized intermediates (with a warning counter) — monolithic is only
+chosen when the layer has no flexible ops at all (nothing to flex).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import constants
+from repro.core.energy import estimate
+from repro.core.engine import account
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+from repro.core.modes import ExecutionMode, LayerGraph
+
+Policy = Callable[[LayerGraph], ExecutionMode]
+
+
+def fixed(mode: ExecutionMode) -> Policy:
+    def policy(graph: LayerGraph) -> ExecutionMode:
+        return mode
+
+    return policy
+
+
+@dataclasses.dataclass
+class AutoPolicy:
+    """EDP-minimizing mode choice with a sidebar-capacity constraint."""
+
+    table: FunctionTable = dataclasses.field(default_factory=lambda: DEFAULT_TABLE)
+    sidebar_capacity: int = constants.VMEM_BYTES_PER_CHIP // 2
+    chip: constants.ChipSpec = constants.V5E
+    fallbacks: int = 0  # count of layers forced off SIDEBAR by capacity
+
+    def __call__(self, graph: LayerGraph) -> ExecutionMode:
+        if not graph.flexible_ops():
+            return ExecutionMode.MONOLITHIC
+        candidates = [ExecutionMode.FLEXIBLE_DMA]
+        if graph.max_intermediate_bytes() <= self.sidebar_capacity:
+            candidates.append(ExecutionMode.SIDEBAR)
+        else:
+            self.fallbacks += 1
+        best = min(
+            candidates,
+            key=lambda m: estimate(account(graph, m, self.table), self.chip).edp,
+        )
+        return best
+
+
+def plan(graphs: list[LayerGraph], policy: Policy) -> dict[str, ExecutionMode]:
+    """Resolve a mode per layer (the 'compilation tool' of paper §3.1)."""
+    return {g.name: policy(g) for g in graphs}

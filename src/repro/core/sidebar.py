@@ -1,0 +1,230 @@
+"""Software model of the Sidebar buffer and its access protocol (paper §3).
+
+The paper's Sidebar is a physical SRAM with:
+  * explicit, compile-time-agreed data placement (§3.1),
+  * hardware-enforced mutual exclusion — accelerator and host never access
+    it simultaneously; ownership is passed by writing a hardware register,
+  * dedicated slots for call arguments (function pointer, data pointers) and
+    the invoke/return flags (§3.3),
+  * capacity at the L1 level (small; intermediates only).
+
+On TPU the physical realization is a VMEM scratch buffer inside a fused
+Pallas kernel (see kernels/sidebar_mlp.py) where the protocol is enforced
+by program order. This module models the *protocol itself* so it is
+testable and so the engine can account handshakes/bytes exactly:
+
+  * ``SidebarBuffer`` tracks ownership, allocation map, and traffic stats;
+    wrong-owner access raises ``SidebarProtocolError`` (the software
+    analogue of the hardware mutex).
+  * ``SidebarCall`` is the argument block the accelerator writes before
+    raising the invoke flag: function-table key + region handles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Iterator
+
+import numpy as np
+
+
+class Owner(enum.Enum):
+    ACCELERATOR = "accelerator"
+    HOST = "host"
+
+
+class SidebarProtocolError(RuntimeError):
+    """Raised on any violation of the ownership / placement protocol."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A compile-time-agreed placement inside the sidebar."""
+
+    name: str
+    offset: int
+    nbytes: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class SidebarCall:
+    """The argument block of one host invocation (paper §3.3)."""
+
+    function: str          # function-table key ("function pointer")
+    in_regions: tuple[str, ...]
+    out_regions: tuple[str, ...]
+    n_elements: int        # payload size (drives VPU cost)
+
+
+@dataclasses.dataclass
+class SidebarStats:
+    """Traffic/protocol counters consumed by the energy model."""
+
+    bytes_written_acc: int = 0   # accelerator -> sidebar
+    bytes_read_acc: int = 0     # sidebar -> accelerator
+    bytes_written_host: int = 0  # host -> sidebar
+    bytes_read_host: int = 0    # sidebar -> host
+    handshakes: int = 0          # ownership transfers (flag writes)
+    host_invocations: int = 0    # complete invoke->return cycles
+    peak_bytes: int = 0          # high-water allocation mark
+
+    @property
+    def total_bytes(self) -> int:
+        return (
+            self.bytes_written_acc
+            + self.bytes_read_acc
+            + self.bytes_written_host
+            + self.bytes_read_host
+        )
+
+    def merge(self, other: "SidebarStats") -> "SidebarStats":
+        return SidebarStats(
+            self.bytes_written_acc + other.bytes_written_acc,
+            self.bytes_read_acc + other.bytes_read_acc,
+            self.bytes_written_host + other.bytes_written_host,
+            self.bytes_read_host + other.bytes_read_host,
+            self.handshakes + other.handshakes,
+            self.host_invocations + other.host_invocations,
+            max(self.peak_bytes, other.peak_bytes),
+        )
+
+
+# Reserved control area at the head of every sidebar: invoke flag, return
+# flag, function pointer slot, and an argument block (paper §3.3 — "a
+# specific set of Sidebar locations").
+CONTROL_BYTES = 256
+
+
+class SidebarBuffer:
+    """Ownership-checked, capacity-checked sidebar with a bump allocator.
+
+    ``capacity`` defaults to a VMEM-scale budget; kernels using the real
+    VMEM scratch must keep their working set within this (the dry-run
+    checks kernel BlockSpec footprints against the same constant).
+    """
+
+    def __init__(self, capacity: int, *, name: str = "sidebar") -> None:
+        if capacity <= CONTROL_BYTES:
+            raise ValueError("sidebar too small for its control area")
+        self.name = name
+        self.capacity = int(capacity)
+        self.owner = Owner.ACCELERATOR
+        self.stats = SidebarStats()
+        self._regions: dict[str, Region] = {}
+        self._cursor = CONTROL_BYTES
+        self._data: dict[str, np.ndarray] = {}
+
+    # -- placement (compile-time agreement, §3.1) -------------------------
+    def allocate(self, name: str, nbytes: int) -> Region:
+        if name in self._regions:
+            raise SidebarProtocolError(f"region {name!r} already placed")
+        nbytes = int(nbytes)
+        aligned = (self._cursor + 127) // 128 * 128  # 128B lane alignment
+        if aligned + nbytes > self.capacity:
+            raise SidebarProtocolError(
+                f"sidebar {self.name!r} overflow: need {nbytes} B at offset "
+                f"{aligned}, capacity {self.capacity} B — intermediates must "
+                "be tiled to fit (see kernels/sidebar_mlp.py BlockSpec)"
+            )
+        region = Region(name, aligned, nbytes)
+        self._regions[name] = region
+        self._cursor = region.end
+        self.stats.peak_bytes = max(self.stats.peak_bytes, self._cursor)
+        return region
+
+    def free_all(self) -> None:
+        """Reset placements between accelerator tasks (intermediates only —
+        the sidebar never persists application state, §3.4)."""
+        self._regions.clear()
+        self._data.clear()
+        self._cursor = CONTROL_BYTES
+
+    def region(self, name: str) -> Region:
+        try:
+            return self._regions[name]
+        except KeyError:
+            raise SidebarProtocolError(f"no region {name!r} placed") from None
+
+    # -- ownership (hardware mutex, §3.1) ---------------------------------
+    def _check_owner(self, who: Owner) -> None:
+        if self.owner is not who:
+            raise SidebarProtocolError(
+                f"{who.value} accessed sidebar owned by {self.owner.value}; "
+                "ownership must be passed via the flag register first"
+            )
+
+    def pass_ownership(self, to: Owner) -> None:
+        if to is self.owner:
+            raise SidebarProtocolError(f"ownership already with {to.value}")
+        self.owner = to
+        self.stats.handshakes += 1
+
+    # -- data movement ----------------------------------------------------
+    def write(self, who: Owner, region_name: str, array: np.ndarray) -> None:
+        self._check_owner(who)
+        region = self.region(region_name)
+        nbytes = int(array.nbytes)
+        if nbytes > region.nbytes:
+            raise SidebarProtocolError(
+                f"write of {nbytes} B exceeds region {region_name!r} "
+                f"({region.nbytes} B)"
+            )
+        self._data[region_name] = np.asarray(array)
+        if who is Owner.ACCELERATOR:
+            self.stats.bytes_written_acc += nbytes
+        else:
+            self.stats.bytes_written_host += nbytes
+
+    def read(self, who: Owner, region_name: str) -> np.ndarray:
+        self._check_owner(who)
+        region = self.region(region_name)
+        if region_name not in self._data:
+            raise SidebarProtocolError(f"region {region_name!r} never written")
+        arr = self._data[region_name]
+        if who is Owner.ACCELERATOR:
+            self.stats.bytes_read_acc += int(arr.nbytes)
+        else:
+            self.stats.bytes_read_host += int(arr.nbytes)
+        return arr
+
+    # -- full invocation cycle (paper §3.3) --------------------------------
+    def invoke_host(self, call: SidebarCall, table, dtype=np.float32) -> None:
+        """Run one accelerator->host->accelerator cycle through the sidebar.
+
+        The accelerator must own the buffer and have written ``in_regions``.
+        This models: write args -> raise flag (pass to host) -> host reads,
+        computes via the function table, writes results -> lower flag (pass
+        back to accelerator).
+        """
+        self._check_owner(Owner.ACCELERATOR)
+        entry = table[call.function]
+        self.pass_ownership(Owner.HOST)
+        inputs = [self.read(Owner.HOST, r) for r in call.in_regions]
+        out = np.asarray(entry.fn(*[i for i in inputs])).astype(dtype)
+        outs = [out] if len(call.out_regions) == 1 else list(out)
+        for region_name, arr in zip(call.out_regions, outs):
+            self.write(Owner.HOST, region_name, arr)
+        self.pass_ownership(Owner.ACCELERATOR)
+        self.stats.host_invocations += 1
+
+    # -- introspection ------------------------------------------------------
+    def utilization(self) -> float:
+        return self._cursor / self.capacity
+
+    def regions(self) -> Iterator[Region]:
+        return iter(self._regions.values())
+
+
+def required_capacity(shape: tuple[int, ...], itemsize: int, copies: int = 1) -> int:
+    """Capacity needed to stage an intermediate of ``shape``: control area
+    plus ``copies`` regions, each rounded up to the 128 B lane alignment
+    the allocator enforces."""
+    nbytes = int(math.prod(shape)) * itemsize
+    aligned = (nbytes + 127) // 128 * 128
+    return CONTROL_BYTES + copies * aligned

@@ -1,0 +1,29 @@
+"""Pallas TPU kernels for the Sidebar hot paths.
+
+  sidebar_mlp     — fused f(x@W1)@W2; the intermediate lives in a VMEM
+                    scratch ("the Sidebar"), the activation comes from the
+                    host FunctionTable.
+  sidebar_matmul  — tiled matmul + pluggable flexible epilogue.
+  activations     — standalone host activation (the FLEXIBLE_DMA step).
+  flash_attention — blocked attention; logits+softmax stats in VMEM.
+
+``ops`` holds the jitted wrappers (kernel on TPU / interpret, oracle
+fallback elsewhere); ``ref`` holds the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.activations import activation
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.sidebar_gated_mlp import sidebar_gated_mlp
+from repro.kernels.sidebar_matmul import sidebar_matmul
+from repro.kernels.sidebar_mlp import sidebar_mlp
+
+__all__ = [
+    "ops",
+    "ref",
+    "activation",
+    "flash_attention",
+    "sidebar_gated_mlp",
+    "sidebar_matmul",
+    "sidebar_mlp",
+]

@@ -1,0 +1,104 @@
+"""Standalone activation kernel — the FLEXIBLE_DMA 'host step'.
+
+In the flexible-DMA baseline the activation is its own dispatch: it reads
+the full intermediate from HBM, applies the function-table entry on the
+VPU, and writes the result back to HBM. This kernel IS that round-trip —
+its existence (a separate ``pallas_call`` whose operand/result cross HBM)
+is what the SIDEBAR design eliminates by fusing the same function into the
+producer kernel's epilogue.
+
+Tiling: 2-D row/col tiles; rowwise functions (softmax, rmsnorm) keep the
+last dim resident.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import constants
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+
+Array = jax.Array
+
+
+def _kernel(x_ref, o_ref, *, fn: Callable, out_dtype):
+    o_ref[...] = fn(x_ref[...].astype(jnp.float32)).astype(out_dtype)
+
+
+def activation(
+    x: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """y = f(x) as its own kernel launch (HBM -> VPU -> HBM)."""
+    if x.ndim == 1:
+        x2 = x.reshape(1, -1)
+        return activation_2d(
+            x2, activation, table=table, block_m=1,
+            block_n=block_n, interpret=interpret
+        ).reshape(x.shape)
+    if x.ndim == 2:
+        return activation_2d(
+            x, activation, table=table, block_m=block_m,
+            block_n=block_n, interpret=interpret
+        )
+    lead = 1
+    for s in x.shape[:-1]:
+        lead *= s
+    y = activation_2d(
+        x.reshape(lead, x.shape[-1]), activation, table=table,
+        block_m=block_m, block_n=block_n, interpret=interpret
+    )
+    return y.reshape(x.shape)
+
+
+def activation_2d(
+    x: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    m, n = x.shape
+    entry = table[activation] if isinstance(activation, str) else None
+    fn = entry.fn if entry is not None else activation
+    rowwise = entry.rowwise if entry is not None else False
+
+    if block_m is None:
+        block_m = min(m, 256)
+        while m % block_m:
+            block_m //= 2
+        block_m = max(block_m, 1)
+    if rowwise:
+        block_n = n  # rowwise flexible ops need the full row resident
+    if block_n is None:
+        block_n = min(n, 2048)
+        while n % block_n:
+            block_n //= 2
+        block_n = max(block_n, 1)
+    if m % block_m or n % block_n:
+        raise ValueError(f"tiles must divide: {m}%{block_m}, {n}%{block_n}")
+    # VMEM sanity: in + out tiles in fp32
+    if 8 * block_m * block_n > constants.VMEM_BYTES_PER_CHIP // 4:
+        raise ValueError("activation tile exceeds VMEM budget")
+
+    kernel = functools.partial(_kernel, fn=fn, out_dtype=x.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,150 @@
+"""Blocked (flash) attention kernel with online softmax.
+
+Attention is the other matmul→flexible→matmul chain in every assigned
+transformer: logits (static, MXU) → softmax (flexible, VPU) → PV (static,
+MXU). Unfused, the logits round-trip HBM at O(S·T) bytes — the exact
+flexible-DMA failure mode of the paper, at quadratic scale. This kernel is
+the SIDEBAR treatment of attention: the logits tile and the softmax
+running statistics live in VMEM scratch; the softmax (the flexible step)
+is computed tile-wise on the VPU between the two MXU contractions, and
+only the final O(S·D) output reaches HBM.
+
+Tiling (BlockSpec):
+
+  q reshaped (B·Hq, S, D), k/v reshaped (B·Hkv, T, D); GQA is handled by
+  the k/v index_map (head h reads kv head h // group) — no kv duplication.
+
+  grid = (B·Hq, S/bq, T/bk), kv minor (sequential online-softmax axis).
+  q   : (1, bq, D) at (h, i, 0)
+  k,v : (1, bk, D) at (h // group, j, 0)
+  out : (1, bq, D) at (h, i, 0)
+  scratch: m (bq, 1) fp32, l (bq, 1) fp32, acc (bq, D) fp32   [the sidebar]
+
+Causal blocks strictly above the diagonal are skipped (``pl.when`` guards
+the whole body), giving the ~2x causal flop saving.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, offset: int, block_q: int,
+            block_k: int, n_k_blocks: int, out_dtype):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    # last kv block this q block attends to (causal skipping)
+    if causal:
+        last_q = i * block_q + block_q - 1 + offset
+        j_last = jnp.minimum(n_k_blocks - 1, last_q // block_k)
+        should_run = j * block_k <= last_q
+    else:
+        j_last = n_k_blocks - 1
+        should_run = True
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(should_run)
+    def _body():
+        q = q_ref[0]                      # (bq, D)
+        k = k_ref[0]                      # (bk, D)
+        # static primitive #1 (MXU): logits tile into VMEM
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                          # (bq, bk)
+
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos + offset, s, NEG_INF)
+
+        # flexible step (VPU): online softmax on the sidebar-resident tile
+        m_prev = m_ref[...]               # (bq, 1)
+        m_curr = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_curr)
+        p = jnp.exp(s - m_curr)           # (bq, bk)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_curr
+
+        # static primitive #2 (MXU): weighted value accumulation
+        pv = jnp.dot(p.astype(v_ref.dtype), v_ref[0],
+                     preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == j_last)
+    def _flush():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """softmax(q k^T * scale) v, fused; q (B,Hq,S,D), k/v (B,Hkv,T,D)."""
+    b, hq, s_len, d = q.shape
+    _, hkv, t_len, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got {hq} % {hkv}")
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, t_len)
+    if s_len % block_q or t_len % block_k:
+        raise ValueError(f"S={s_len}%{block_q} or T={t_len}%{block_k} != 0")
+    offset = t_len - s_len  # decode/cache: queries sit at the sequence end
+    if causal and offset < 0:
+        raise ValueError("causal attention needs T >= S")
+
+    qr = q.reshape(b * hq, s_len, d)
+    kr = k.reshape(b * hkv, t_len, d)
+    vr = v.reshape(b * hkv, t_len, d)
+    n_k_blocks = t_len // block_k
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, offset=offset,
+        block_q=block_q, block_k=block_k, n_k_blocks=n_k_blocks,
+        out_dtype=q.dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, s_len // block_q, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s_len, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, s_len, d)

@@ -1,0 +1,159 @@
+"""Jitted public entry points for the Pallas kernels.
+
+Each op:
+  * validates/normalizes shapes and dtypes,
+  * dispatches to the Pallas kernel when shapes are TPU-tileable and the
+    backend supports it, otherwise to the jnp oracle (bit-for-bit the same
+    math) — so models can call these unconditionally,
+  * is jit-friendly (static flags only via closure/partial).
+
+``interpret`` is threaded through for CPU validation of the kernel bodies.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+from repro.kernels import ref
+from repro.kernels.activations import activation as _activation_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.sidebar_gated_mlp import sidebar_gated_mlp as _gated_kernel
+from repro.kernels.sidebar_matmul import sidebar_matmul as _matmul_kernel
+from repro.kernels.sidebar_mlp import sidebar_mlp as _mlp_kernel
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _tileable(n: int, t: int = 128) -> bool:
+    return n % t == 0
+
+
+def sidebar_mlp(
+    x: Array,
+    w1: Array,
+    w2: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    """y = f(x @ w1) @ w2 — fused sidebar kernel when eligible."""
+    m, d = x.shape
+    _, f = w1.shape
+    eligible = _tileable(m, 8) and _tileable(f) and _tileable(d)
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and (_on_tpu() or interpret))
+    )
+    if use:
+        return _mlp_kernel(x, w1, w2, activation, table=table, interpret=interpret)
+    return ref.sidebar_mlp_ref(x, w1, w2, activation, table)
+
+
+def sidebar_gated_mlp(
+    x: Array,
+    w_gate: Array,
+    w_up: Array,
+    w_down: Array,
+    activation: str | Callable = "silu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    """y = (f(x@Wg) * (x@Wu)) @ Wd — fused gated sidebar kernel."""
+    m, d = x.shape
+    _, f = w_gate.shape
+    eligible = _tileable(m, 8) and _tileable(f) and _tileable(d)
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and (_on_tpu() or interpret))
+    )
+    if use:
+        return _gated_kernel(x, w_gate, w_up, w_down, activation,
+                             table=table, interpret=interpret)
+    return ref.sidebar_gated_mlp_ref(x, w_gate, w_up, w_down, activation, table)
+
+
+def sidebar_matmul(
+    a: Array,
+    b: Array,
+    activation: str | Callable = "identity",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    m, k = a.shape
+    _, n = b.shape
+    eligible = _tileable(m, 8) and _tileable(n) and _tileable(k)
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and (_on_tpu() or interpret))
+    )
+    if use:
+        return _matmul_kernel(a, b, activation, table=table, interpret=interpret)
+    return ref.sidebar_matmul_ref(a, b, activation, table)
+
+
+def host_activation(
+    x: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    """The FLEXIBLE_DMA standalone host step (own launch, HBM round-trip)."""
+    use = use_kernel if use_kernel is not None else (_on_tpu() or interpret)
+    if use and x.ndim >= 1:
+        try:
+            return _activation_kernel(x, activation, table=table, interpret=interpret)
+        except ValueError:
+            pass  # untileable shape -> oracle
+    return ref.activation_ref(x, activation, table)
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> Array:
+    b, hq, s, d = q.shape
+    t = k.shape[2]
+    eligible = (
+        _tileable(min(s, block_q), 8)
+        and s % min(block_q, s) == 0
+        and t % min(block_k, t) == 0
+    )
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and (_on_tpu() or interpret))
+    )
+    if use:
+        return _flash_kernel(
+            q, k, v, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)

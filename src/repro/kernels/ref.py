@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each oracle computes in fp32 regardless of input dtype and casts back, so
+kernels (which accumulate in fp32 VMEM scratch) are compared like-for-like.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+
+Array = jax.Array
+
+
+def _resolve(activation: str | Callable, table: FunctionTable) -> Callable:
+    if callable(activation):
+        return activation
+    return table.lookup(activation)
+
+
+def sidebar_mlp_ref(
+    x: Array,
+    w1: Array,
+    w2: Array,
+    activation: str | Callable = "relu",
+    table: FunctionTable = DEFAULT_TABLE,
+) -> Array:
+    """y = f(x @ w1) @ w2 with fp32 intermediate (the paper's hot pattern)."""
+    fn = _resolve(activation, table)
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    h = fn(h)
+    y = jnp.dot(h.astype(w2.dtype), w2, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def sidebar_gated_mlp_ref(
+    x: Array,
+    w_gate: Array,
+    w_up: Array,
+    w_down: Array,
+    activation: str | Callable = "silu",
+    table: FunctionTable = DEFAULT_TABLE,
+) -> Array:
+    """y = (f(x@Wg) * (x@Wu)) @ Wd with fp32 intermediates."""
+    fn = _resolve(activation, table)
+    g = fn(jnp.dot(x, w_gate, preferred_element_type=jnp.float32))
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    y = jnp.dot((g * u).astype(w_down.dtype), w_down,
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def sidebar_matmul_ref(
+    a: Array,
+    b: Array,
+    activation: str | Callable = "identity",
+    table: FunctionTable = DEFAULT_TABLE,
+) -> Array:
+    """c = f(a @ b): one static primitive with a function-table epilogue."""
+    fn = _resolve(activation, table)
+    c = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return fn(c).astype(a.dtype)
+
+
+def activation_ref(
+    x: Array,
+    activation: str | Callable = "relu",
+    table: FunctionTable = DEFAULT_TABLE,
+) -> Array:
+    """Standalone host activation (the FLEXIBLE_DMA 'host step')."""
+    fn = _resolve(activation, table)
+    return fn(x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> Array:
+    """Reference attention: softmax(q k^T * scale [+mask]) v, fp32 math.
+
+    Shapes: q (B, Hq, S, D), k/v (B, Hkv, T, D) with Hq % Hkv == 0 (GQA).
+    """
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    logits = jnp.einsum(
+        "bhsd,bhtd->bhst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

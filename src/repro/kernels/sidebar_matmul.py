@@ -1,0 +1,109 @@
+"""Tiled matmul with a pluggable function-table epilogue.
+
+The *single static primitive* of the Sidebar design: ``c = f(a @ b)`` where
+``f`` is a flexible function fetched from the host function table. Used as
+the building block for layers whose flexible op follows one matmul (e.g.
+router logits → softmax/top-k, qk products, conv-as-matmul in LeNet).
+
+Tiling (BlockSpec):
+
+  grid = (M/bm, N/bn, K/bk), K minor (sequential accumulation axis).
+  a   : (bm, bk) at (i, k)
+  b   : (bk, bn) at (k, j)
+  out : (bm, bn) at (i, j)   — revisited across k
+  acc : VMEM (bm, bn) fp32   — the sidebar tile; epilogue applied at k==last
+
+The epilogue runs on the VPU against the VMEM-resident accumulator; the
+raw (pre-activation) intermediate never reaches HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import constants
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+
+Array = jax.Array
+
+
+def choose_tiles(m: int, k: int, n: int, itemsize: int = 2,
+                 vmem_budget: int = constants.VMEM_BYTES_PER_CHIP // 8) -> tuple[int, int, int]:
+    for bm in (256, 128, 64, 32, 16, 8):
+        if bm > m or m % bm:
+            continue
+        for bn in (512, 256, 128):
+            if bn > n or n % bn:
+                continue
+            for bk in (2048, 1024, 512, 256, 128):
+                if bk > k or k % bk:
+                    continue
+                ws = itemsize * (bm * bk + bk * bn + bm * bn) + 4 * bm * bn
+                if ws <= vmem_budget:
+                    return bm, bn, bk
+    return 8, 128, 128
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, epilogue: Callable,
+            n_k_blocks: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k_blocks - 1)
+    def _epilogue():
+        # flexible function on the VMEM-resident tile (host step).
+        o_ref[...] = epilogue(acc_ref[...]).astype(out_dtype)
+
+
+def sidebar_matmul(
+    a: Array,
+    b: Array,
+    activation: str | Callable = "identity",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """c = f(a @ b) with f from the function table, one pallas_call."""
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: a{a.shape} b{b.shape}")
+    fn = table.lookup(activation) if isinstance(activation, str) else activation
+
+    bm, bn, bk = choose_tiles(m, k, n, a.dtype.itemsize)
+    bm, bn, bk = block_m or bm, block_n or bn, block_k or bk
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"tiles must divide: M{m}%{bm} N{n}%{bn} K{k}%{bk}")
+    n_k_blocks = k // bk
+
+    kernel = functools.partial(
+        _kernel, epilogue=fn, n_k_blocks=n_k_blocks, out_dtype=a.dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

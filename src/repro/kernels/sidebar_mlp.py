@@ -1,0 +1,171 @@
+"""Fused Sidebar MLP kernel: y = f(x @ W1) @ W2, one ``pallas_call``.
+
+This is the TPU realization of the paper's SIDEBAR design for its hot
+pattern (static matmul → flexible activation → static matmul):
+
+  * The two matmuls are the *static* primitives — they run on the MXU.
+  * The intermediate ``h = x @ W1`` tile lives in a **VMEM scratch buffer —
+    the Sidebar**. It is never materialized to HBM, exists outside the
+    program's array namespace (``scratch_shapes``), and holds intermediate
+    data only — exactly the paper's scratchpad semantics.
+  * The activation is the *flexible* function: it is looked up in the
+    ``FunctionTable`` at trace time and applied to the sidebar tile on the
+    VPU. Registering a new activation re-specializes the kernel with **no
+    kernel-source change** — the software analogue of the paper's
+    driver-provided host function.
+
+Tiling (BlockSpec):
+
+  grid = (M/bm, F/bf), F minor (sequential accumulation axis).
+  x   : (bm, D)   block at (i, 0)      — row panel, K resident
+  w1  : (D, bf)   block at (0, j)      — column panel of W1
+  w2  : (bf, D)   block at (j, 0)      — row panel of W2
+  out : (bm, D)   block at (i, 0)      — revisited for every j (accumulate)
+  sidebar : VMEM (bm, bf) fp32         — the scratchpad
+  acc     : VMEM (bm, D)  fp32         — output accumulator
+
+Per-step VMEM footprint (bm=128, bf=512, D=4096, bf16 in / fp32 scratch):
+x 1.0 MiB + w1 4.0 MiB + w2 4.0 MiB + out 1.0 MiB + sidebar 0.25 MiB +
+acc 2.0 MiB ≈ 12.3 MiB — comfortably inside a 16 MiB/core VMEM budget
+(``choose_tiles`` picks bm/bf to respect it for other D).
+
+The contraction dimension D stays resident (no k-blocking): for the
+assigned architectures D = d_model ≤ 16 384, and the dominant tile is the
+W panels; ``choose_tiles`` shrinks bf accordingly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import constants
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+
+Array = jax.Array
+
+LANE = 128  # TPU lane width; last dims should be multiples of this
+SUBLANE = 8
+
+
+def choose_tiles(m: int, d: int, f: int, itemsize: int = 2,
+                 vmem_budget: int = constants.VMEM_BYTES_PER_CHIP // 8) -> tuple[int, int]:
+    """Pick (bm, bf) so the per-step working set fits the VMEM budget.
+
+    working_set(bm, bf) = bm*d*itemsize   (x tile)
+                        + d*bf*itemsize   (w1 panel)
+                        + bf*d*itemsize   (w2 panel)
+                        + bm*d*itemsize   (out tile)
+                        + 4*bm*bf         (sidebar, fp32)
+                        + 4*bm*d          (accumulator, fp32)
+    """
+    for bm in (256, 128, 64, 32, 16, 8):
+        if bm > m or m % bm:
+            continue
+        for bf in (1024, 512, 256, 128):
+            if bf > f or f % bf:
+                continue
+            ws = (
+                bm * d * itemsize
+                + 2 * d * bf * itemsize
+                + bm * d * itemsize
+                + 4 * bm * bf
+                + 4 * bm * d
+            )
+            if ws <= vmem_budget:
+                return bm, bf
+    return SUBLANE, LANE
+
+
+def _kernel(x_ref, w1_ref, w2_ref, o_ref, sidebar_ref, acc_ref, *,
+            activation: Callable, n_f_blocks: int, out_dtype):
+    """One (i, j) grid step: sidebar tile j of row panel i."""
+    j = pl.program_id(1)
+
+    # --- static primitive #1 (MXU): partial intermediate into the sidebar.
+    h = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    sidebar_ref[...] = h
+
+    # --- flexible function (VPU) on the sidebar-resident intermediate.
+    #     `activation` was fetched from the FunctionTable at trace time:
+    #     this is the host-function invocation of paper §3.3, with the
+    #     handshake realized by program order inside the fused kernel.
+    act = activation(sidebar_ref[...])
+
+    # --- static primitive #2 (MXU): consume the sidebar, accumulate y.
+    part = jnp.dot(
+        act.astype(w2_ref.dtype), w2_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = part
+
+    @pl.when(j > 0)
+    def _accum():
+        acc_ref[...] += part
+
+    @pl.when(j == n_f_blocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def sidebar_mlp(
+    x: Array,
+    w1: Array,
+    w2: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    block_m: int | None = None,
+    block_f: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Fused f(x @ w1) @ w2 with the intermediate resident in VMEM.
+
+    Args:
+      x: (M, D) activations.
+      w1: (D, F) up-projection.  w2: (F, D2) down-projection.
+      activation: function-table key (or raw callable) — the flexible op.
+      block_m/block_f: tile overrides; default via ``choose_tiles``.
+      interpret: run the kernel body in Python on CPU (validation mode).
+    """
+    m, d = x.shape
+    d1, f = w1.shape
+    f2, d2 = w2.shape
+    if d != d1 or f != f2:
+        raise ValueError(f"shape mismatch: x{x.shape} w1{w1.shape} w2{w2.shape}")
+    fn = table.lookup(activation) if isinstance(activation, str) else activation
+
+    bm, bf = choose_tiles(m, d, f, x.dtype.itemsize)
+    bm = block_m or bm
+    bf = block_f or bf
+    if m % bm or f % bf:
+        raise ValueError(f"M={m} % bm={bm} or F={f} % bf={bf} != 0")
+    n_f_blocks = f // bf
+
+    grid = (m // bm, n_f_blocks)
+    kernel = functools.partial(
+        _kernel, activation=fn, n_f_blocks=n_f_blocks, out_dtype=x.dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, d2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d2), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bf), jnp.float32),   # the Sidebar
+            pltpu.VMEM((bm, d2), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(x, w1, w2)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+Per cell this driver:
+  1. builds the FULL config and the production mesh,
+  2. assembles abstract params / optimizer state / caches
+     (ShapeDtypeStruct trees — zero allocation),
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+     .compile()`` for the cell's step function:
+        train_4k     -> train_step (fwd+bwd+AdamW, grad-accum scan)
+        prefill_32k  -> prefill_step (fwd + KV-cache write)
+        decode_*     -> serve_step (one token against the cache)
+  4. records memory_analysis / cost_analysis / collective schedule and the
+     roofline terms into results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfglib
+from repro.configs.base import TrainConfig
+from repro.launch import roofline as rl
+from repro.launch.input_specs import batch_shardings, input_specs
+from repro.launch.mesh import make_production_mesh, mesh_info, num_chips
+from repro.launch.serve import make_serve_step
+from repro.launch.train import make_train_step
+from repro.models import layers as L
+from repro.models.registry import get_model
+from repro.optim.optimizer import abstract_state, state_shardings
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _train_cfg_for(arch: str) -> TrainConfig:
+    import jax.numpy as jnp
+
+    # bf16 moments for the two largest configs (16 GB/chip budget)
+    if arch in ("llama3-405b", "deepseek-v3-671b", "llama-3.2-vision-90b"):
+        return TrainConfig(moment_dtype=jnp.bfloat16, microbatch_per_device=1)
+    return TrainConfig(microbatch_per_device=1)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: dict | None = None,
+               tcfg_overrides: dict | None = None):
+    """Returns (lowered, compiled, context dict)."""
+    import dataclasses
+
+    cfg = cfglib.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = cfglib.get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    minfo = mesh_info(mesh)
+    api = get_model(cfg)
+
+    specs = api.param_specs(cfg, minfo)
+    params_abs = L.abstract(specs)
+    p_shard = L.shardings(mesh, specs)
+    mflops = rl.model_flops(cfg, cell, specs)
+
+    with mesh:
+        if cell.kind == "train":
+            tcfg = _train_cfg_for(arch)
+            if tcfg_overrides:
+                tcfg = dataclasses.replace(tcfg, **tcfg_overrides)
+            step_fn, n_micro, use_ef = make_train_step(
+                cfg, tcfg, api, minfo, mesh, cell
+            )
+            opt_abs = abstract_state(params_abs, tcfg)
+            o_shard = state_shardings(p_shard, mesh)
+            b_shard = batch_shardings(cfg, cell, mesh, minfo)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, None, b_shard),
+                out_shardings=(p_shard, o_shard, None, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, None,
+                                   input_specs(cfg, cell))
+        elif cell.kind == "prefill":
+            cache_specs = api.cache_specs(cfg, minfo, cell.global_batch,
+                                          cell.seq_len)
+            cache_abs = L.abstract(cache_specs)
+            c_shard = L.shardings(mesh, cache_specs)
+            b_shard = batch_shardings(cfg, cell, mesh, minfo)
+
+            from repro.parallel.hints import sharding_hints
+
+            def prefill_step(params, batch, cache):
+                with sharding_hints(mesh, minfo):
+                    return api.prefill(params, cfg, batch, cache,
+                                       minfo=minfo, mesh=mesh)
+
+            jitted = jax.jit(
+                prefill_step,
+                in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=(None, c_shard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, input_specs(cfg, cell),
+                                   cache_abs)
+        else:  # decode
+            cache_specs = api.cache_specs(cfg, minfo, cell.global_batch,
+                                          cell.seq_len)
+            cache_abs = L.abstract(cache_specs)
+            c_shard = L.shardings(mesh, cache_specs)
+            serve = make_serve_step(cfg, api, minfo, mesh)
+            tok = jax.ShapeDtypeStruct((cell.global_batch, 1), jax.numpy.int32)
+            pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            batch_axes = tuple(minfo.fsdp) or None
+            tok_shard = NamedSharding(
+                mesh, L.sanitize_pspec(mesh, P(batch_axes, None), tok.shape)
+            )
+            mem_abs = None
+            mem_shard = None
+            if cfg.family == "audio":
+                mem_abs = jax.ShapeDtypeStruct(
+                    (cell.global_batch, cfg.encoder_seq, cfg.d_model), cfg.dtype
+                )
+            if cfg.family == "vlm":
+                mem_abs = jax.ShapeDtypeStruct(
+                    (cell.global_batch, cfg.num_image_tokens, cfg.d_model),
+                    cfg.dtype,
+                )
+            if mem_abs is not None:
+                mem_shard = NamedSharding(
+                    mesh,
+                    L.sanitize_pspec(mesh, P(batch_axes, None, None),
+                                     mem_abs.shape),
+                )
+
+            jitted = jax.jit(
+                serve,
+                in_shardings=(p_shard, tok_shard, c_shard, None, mem_shard),
+                out_shardings=(tok_shard, c_shard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, tok, cache_abs, pos, mem_abs)
+
+        compiled = lowered.compile()
+
+    ctx = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": num_chips(mesh),
+        "kind": cell.kind,
+        "model_flops": mflops,
+    }
+    return lowered, compiled, ctx
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             force: bool = False) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    out_path = os.path.join(
+        outdir, f"{arch}__{shape_name}__{mesh_name}.json"
+    )
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    t0 = time.time()
+    try:
+        lowered, compiled, ctx = lower_cell(arch, shape_name, multi_pod)
+        terms = rl.analyze(
+            compiled, chips=ctx["chips"], model_flops=ctx["model_flops"]
+        )
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        la = analyze_hlo(compiled.as_text())
+        mem = compiled.memory_analysis()
+        record = {
+            **ctx,
+            "ok": True,
+            "compile_s": round(time.time() - t0, 1),
+            "memory_analysis": str(mem),
+            "roofline": terms.to_json(),
+            "loop_aware": {
+                "dot_flops_per_dev": la.dot_flops,
+                "coll_bytes_per_dev": la.coll_bytes,
+                "coll_bytes_total_per_dev": la.coll_bytes_total,
+                "loops": la.loops,
+                "unknown_trip_loops": la.unknown_trip_loops,
+            },
+        }
+        print(
+            f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+            f"({record['compile_s']}s) bottleneck={terms.bottleneck} "
+            f"t=(c {terms.t_compute:.2e}, m {terms.t_memory:.2e}, "
+            f"x {terms.t_collective:.2e})s "
+            f"temp/dev={terms.bytes_per_device['temp']/2**30:.2f}GiB",
+            flush=True,
+        )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        record = {
+            **{"arch": arch, "shape": shape_name, "mesh": mesh_name},
+            "ok": False,
+            "compile_s": round(time.time() - t0, 1),
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}",
+              flush=True)
+    os.makedirs(outdir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = cfglib.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            rec = run_cell(arch, shape_name, multi, args.out, args.force)
+            n_ok += bool(rec.get("ok"))
+            n_fail += not rec.get("ok")
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Loop-aware HLO cost extraction.
+
+XLA's ``cost_analysis()`` counts each ``while`` body ONCE. The compiled
+HLO text, however, contains everything needed for exact accounting:
+
+  * computation blocks (``%name (...) -> ... { ... }``),
+  * the call graph (``to_apply= / calls= / body= / condition= /
+    branch_computations=``),
+  * per-while trip counts (``"known_trip_count":{"n":"N"}``).
+
+``analyze_hlo`` walks the graph from ENTRY, accumulating a multiplicity
+per computation (product of enclosing trip counts), and returns:
+
+  * collective bytes per kind (result-shape bytes x ring factor x
+    multiplicity) — per-device, since post-SPMD shapes are per-device;
+  * dot FLOPs (2 x out-elements x contraction size x multiplicity);
+  * loops seen with their trip counts (for the report).
+
+This is the primary source for the §Roofline collective/compute terms;
+``cost_analysis`` and the analytic model are cross-checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+ALGO_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE = re.compile(r"while\(")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_COLL_OP = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\],{}\d]+))\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_DOT = re.compile(
+    r"=\s*\w+\[([0-9,]*)\][^ ]*\s+dot\(\s*%?([\w.\-]+)"
+)
+_DEF = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*(\w+)\[([0-9,]*)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class HloCosts:
+    coll_bytes: dict
+    coll_bytes_total: float
+    dot_flops: float
+    loops: list  # (body_comp, trips)
+    unknown_trip_loops: int
+
+    @property
+    def coll_by_kind(self) -> dict:
+        return self.coll_bytes
+
+
+def _split_computations(txt: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in txt.splitlines():
+        m = _COMP_START.match(line.strip()) if "{" in line else None
+        if cur is None and m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def analyze_hlo(txt: str) -> HloCosts:
+    comps, entry = _split_computations(txt)
+
+    # per-computation local costs + edges
+    local_coll: dict[str, dict[str, float]] = {}
+    local_flops: dict[str, float] = {}
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    loops: list[tuple[str, int]] = []
+    unknown = 0
+
+    for name, lines in comps.items():
+        coll = defaultdict(float)
+        flops = 0.0
+        # symbol table: instruction name -> dims (for dot operand lookup)
+        symtab: dict[str, list[int]] = {}
+        for line in lines:
+            dm0 = _DEF.match(line)
+            if dm0:
+                symtab[dm0.group(1)] = [
+                    int(d) for d in dm0.group(3).split(",") if d
+                ]
+        for line in lines:
+            cm = _COLL_OP.search(line)
+            if cm:
+                kind = cm.group(2).replace("-start", "")
+                coll[kind] += _shape_bytes(cm.group(1)) * ALGO_FACTOR[kind]
+            dm = _DOT.search(line)
+            if dm:
+                out_dims = [int(d) for d in dm.group(1).split(",") if d]
+                lhs_dims = symtab.get(dm.group(2), [])
+                ct = _CONTRACT.search(line)
+                cdims = [int(d) for d in ct.group(1).split(",") if d] if ct else []
+                contract = 1
+                for ci in cdims:
+                    if ci < len(lhs_dims):
+                        contract *= lhs_dims[ci]
+                flops += 2.0 * math.prod(out_dims or [1]) * contract
+            if _WHILE.search(line):
+                bm = _BODY.search(line)
+                cm2 = _COND.search(line)
+                tm = _TRIP.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    unknown += 1
+                if bm:
+                    edges[name].append((bm.group(1), float(trips)))
+                    loops.append((bm.group(1), trips))
+                if cm2:
+                    edges[name].append((cm2.group(1), float(trips + 1)))
+                continue
+            for m2 in _TO_APPLY.finditer(line):
+                edges[name].append((m2.group(1), 1.0))
+            for m2 in _CALLS.finditer(line):
+                edges[name].append((m2.group(1), 1.0))
+            bm2 = _BRANCHES.search(line)
+            if bm2:
+                for b in bm2.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        edges[name].append((b, 1.0))
+        local_coll[name] = dict(coll)
+        local_flops[name] = flops
+
+    # multiplicities via topological walk (call graph is a DAG)
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is not None:
+        mult[entry] = 1.0
+        # repeated relaxation (small graphs; avoids needing a topo sort)
+        for _ in range(64):
+            changed = False
+            snapshot = dict(mult)
+            new = defaultdict(float)
+            new[entry] = 1.0
+            for src, outs in edges.items():
+                m = snapshot.get(src, 0.0)
+                if m <= 0:
+                    continue
+                for dst, k in outs:
+                    new[dst] += m * k
+            if dict(new) != dict(mult):
+                mult = new
+                changed = True
+            if not changed:
+                break
+
+    total_coll: dict[str, float] = defaultdict(float)
+    total_flops = 0.0
+    for name in comps:
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        for kind, b in local_coll[name].items():
+            total_coll[kind] += m * b
+        total_flops += m * local_flops[name]
+
+    out = {k: total_coll.get(k, 0.0) for k in _COLL_KINDS}
+    return HloCosts(
+        coll_bytes=out,
+        coll_bytes_total=float(sum(out.values())),
+        dot_flops=total_flops,
+        loops=loops,
+        unknown_trip_loops=unknown,
+    )

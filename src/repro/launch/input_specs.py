@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no alloc).
+
+``input_specs(cfg, cell)`` — the data batch for one step at the cell's
+global shape. ``batch_shardings(...)`` — the matching NamedSharding tree
+(batch dim over the mesh batch axes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.layers import MeshInfo
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {"tokens": tok}
+    if cell.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    if cfg.family == "vlm":
+        specs["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.d_model), cfg.dtype
+        )
+    return specs
+
+
+def batch_shardings(cfg: ModelConfig, cell: ShapeCell, mesh,
+                    minfo: MeshInfo) -> dict:
+    from repro.models.layers import sanitize_pspec
+
+    batch_axes = tuple(minfo.fsdp) or None
+
+    def shard(spec):
+        pspec = P(batch_axes, *([None] * (len(spec.shape) - 1)))
+        return NamedSharding(mesh, sanitize_pspec(mesh, pspec, spec.shape))
+
+    return {k: shard(v) for k, v in input_specs(cfg, cell).items()}

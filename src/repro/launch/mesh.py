@@ -1,0 +1,51 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single device and use
+``host_mesh``/no mesh.
+
+Axes:
+  * single-pod:  (16, 16)    -> ("data", "model")    = 256 chips
+  * multi-pod:   (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+
+"data" (and "pod") carry batch + FSDP parameter sharding; "model" is
+tensor/expert parallel. Cross-pod traffic is only the FSDP gradient
+reduce-scatter / param all-gather over ("pod","data") — DCN-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import MULTI_POD, SINGLE_POD, MeshInfo
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def mesh_info(mesh) -> MeshInfo:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshInfo.from_axes(tuple(mesh.axis_names), sizes)
+
+
+def make_host_mesh():
+    """Single-device mesh with the production axis names (all size 1) —
+    lets the same sharded step functions run on one CPU for smoke tests."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+def num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

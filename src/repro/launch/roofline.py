@@ -1,0 +1,186 @@
+"""Roofline extraction from compiled artifacts (no real hardware).
+
+Per (arch x shape x mesh) cell:
+
+  compute    = HLO_FLOPs          / (chips * peak)       [s]
+  memory     = HLO_bytes_accessed / (chips * hbm_bw)     [s]
+  collective = collective_bytes   / (chips * ici_bw)     [s]
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD HLO text (``compiled.as_text()``) by summing
+the result-shape bytes of every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute. Post-SPMD shapes are per-device, so
+the sum is already bytes *per chip*; ring-algorithm constants (~2x for
+all-reduce) are folded into an ``ALGO_FACTOR`` per op kind.
+
+MODEL_FLOPS (the useful-compute yardstick):
+  train:   6 * N_active * tokens
+  prefill: 2 * N_active * tokens  (+ attention term, reported separately)
+  decode:  2 * N_active * new_tokens
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.core import constants
+
+# bytes per element for HLO type strings
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ring-algorithm wire multiplier per result byte
+ALGO_FACTOR = {
+    "all-gather": 1.0,        # result is the gathered (full) buffer
+    "all-reduce": 2.0,        # reduce-scatter + all-gather ring
+    "reduce-scatter": 1.0,    # input is the big buffer; result is shard
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind result bytes (per device) x algo factor."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        out[kind] += _shape_bytes(type_str) * ALGO_FACTOR[kind]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict
+    chips: int
+    # seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs (global)
+    roofline_s: float            # max of the three terms
+    bytes_per_device: dict       # memory_analysis summary
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def analyze(compiled, *, chips: int, model_flops: float,
+            chip: constants.ChipSpec = constants.V5E) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    # cost_analysis is per-device program flops; multiply by chips for global
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    coll_total = float(sum(coll.values()))
+
+    t_compute = flops_dev / chip.peak_flops
+    t_memory = bytes_dev / chip.hbm_bytes_per_s
+    t_collective = coll_total / chip.ici_bytes_per_s
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    bytes_per_device = {
+        "argument": getattr(mem, "argument_size_in_bytes", 0),
+        "output": getattr(mem, "output_size_in_bytes", 0),
+        "temp": getattr(mem, "temp_size_in_bytes", 0),
+        "alias": getattr(mem, "alias_size_in_bytes", 0),
+        "code": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    global_flops = flops_dev * chips
+    return RooflineTerms(
+        flops=flops_dev,
+        bytes_accessed=bytes_dev,
+        coll_bytes=coll_total,
+        coll_breakdown=coll,
+        chips=chips,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_collective,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / global_flops) if global_flops else 0.0,
+        roofline_s=max(terms.values()),
+        bytes_per_device=bytes_per_device,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS helpers.
+# ---------------------------------------------------------------------------
+
+def count_params(spec_tree) -> tuple[int, int, int]:
+    """(total, embedding, routed_expert) parameter counts from specs."""
+    import math
+
+    import jax
+
+    from repro.models.layers import is_spec
+
+    total = emb = routed = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec
+    )[0]:
+        n = math.prod(spec.shape)
+        keys = [str(p) for p in path]
+        total += n
+        if any("embed" in k for k in keys):
+            emb += n
+        in_moe = any("'moe'" in k or '"moe"' in k or "moe" == k.strip("'[]\"")
+                     for k in keys)
+        is_expert_w = any(k.strip("[]'\"") in ("w_gate", "w_up", "w_down")
+                          for k in keys)
+        is_shared = any(k.strip("[]'\"") == "shared" for k in keys)
+        if in_moe and is_expert_w and not is_shared:
+            routed += n
+    return total, emb, routed
+
+
+def model_flops(cfg, cell, spec_tree) -> float:
+    total, emb, routed = count_params(spec_tree)
+    n = total - emb
+    if cfg.num_experts:
+        n_active = n - routed * (1.0 - cfg.experts_per_token / cfg.num_experts)
+    else:
+        n_active = n
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    factor = 6.0 if cell.kind == "train" else 2.0
+    return factor * n_active * tokens

@@ -1,0 +1,116 @@
+"""Serving: batched prefill + decode loop.
+
+``make_serve_step`` builds the jit-able single-token decode (the function
+the decode_32k / long_500k dry-run cells lower); ``Server`` is a small
+batched-request driver (pad-to-bucket, prefill once, greedy decode) used
+by the serving example and integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers as L
+from repro.models.registry import ModelApi, get_model
+
+Array = jax.Array
+
+
+def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
+    """decode one token: (params, tokens(B,1), cache, pos[, memory])."""
+
+    from repro.parallel.hints import sharding_hints
+
+    def serve_step(params, tokens, cache, pos, memory=None):
+        with sharding_hints(mesh, minfo):
+            logits, cache = api.decode_step(
+                params, cfg, tokens, cache, pos, minfo=minfo, mesh=mesh,
+                memory=memory,
+            )
+        logits = L.mask_pad_logits(logits, cfg.vocab_size)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
+    from repro.parallel.hints import sharding_hints
+
+    def prefill_step(params, batch, cache):
+        with sharding_hints(mesh, minfo):
+            logits, cache = api.prefill(
+                params, cfg, batch, cache, minfo=minfo, mesh=mesh
+            )
+        logits = L.mask_pad_logits(logits, cfg.vocab_size)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], cache
+
+    return prefill_step
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: Any           # (B, prompt+generated)
+    prompt_len: int
+    generated: int
+
+
+class Server:
+    """Minimal batched greedy-decoding server."""
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 max_len: int = 256) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.api = get_model(cfg)
+        self.mesh = mesh
+        self.minfo = (
+            L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
+        )
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            make_prefill_step(cfg, self.api, self.minfo, mesh)
+        )
+        self._decode = jax.jit(
+            make_serve_step(cfg, self.api, self.minfo, mesh),
+            donate_argnums=(2,),
+        )
+
+    def generate(self, prompts: Array, num_tokens: int,
+                 extra: dict | None = None) -> ServeResult:
+        """prompts: (B, S) int32 — one bucket; greedy decode num_tokens."""
+        b, s = prompts.shape
+        if s + num_tokens > self.max_len:
+            raise ValueError(
+                f"prompt {s} + generate {num_tokens} exceeds max_len "
+                f"{self.max_len}"
+            )
+        cache = self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
+        batch = {"tokens": prompts, **(extra or {})}
+        memory = None
+        if self.cfg.family == "audio":
+            from repro.models import whisper as W
+
+            memory = W.encode(self.params, self.cfg, batch["frames"])
+        if self.cfg.family == "vlm":
+            memory = batch.get("image_embeds")
+        nxt, cache = self._prefill(self.params, batch, cache)
+        out = [prompts, nxt]
+        pos = s
+        for _ in range(num_tokens - 1):
+            nxt, cache = self._decode(
+                self.params, nxt, cache, jnp.int32(pos), memory
+            )
+            out.append(nxt)
+            pos += 1
+        return ServeResult(
+            tokens=jnp.concatenate(out, axis=1), prompt_len=s,
+            generated=num_tokens,
+        )

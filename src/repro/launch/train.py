@@ -1,0 +1,255 @@
+"""Training: sharded step builder + fault-tolerant driver.
+
+``make_train_step`` builds the jit-able step:
+
+  (params, opt_state, ef_state, batch) -> (params, opt_state, ef_state, metrics)
+
+  * microbatch gradient accumulation (lax.scan over microbatches; fp32
+    accumulator tree, sharded like params),
+  * optional gradient compression codec at the sync boundary,
+  * AdamW with warmup/inv-sqrt schedule and global-norm clipping,
+  * in/out shardings derived from the ParamSpec trees (FSDP x TP).
+
+``Trainer`` is the driver: auto-resume from the newest checkpoint,
+async checkpointing every ``ckpt_every``, straggler watchdog with an
+eviction hook (elastic restart), deterministic data stream keyed by step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager, config_hash
+from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
+from repro.data import pipeline
+from repro.ft.watchdog import StragglerWatchdog, Verdict
+from repro.launch.input_specs import batch_shardings, input_specs
+from repro.models import layers as L
+from repro.models.registry import ModelApi, get_model
+from repro.optim import compression
+from repro.optim.optimizer import (
+    AdamState,
+    abstract_state,
+    adamw_update,
+    init_state,
+    state_shardings,
+)
+
+log = logging.getLogger("repro.train")
+Array = jax.Array
+
+
+def _dp_size(mesh, minfo) -> int:
+    if mesh is None:
+        return 1
+    n = 1
+    for a in minfo.fsdp:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, api: ModelApi,
+                    minfo: L.MeshInfo, mesh, cell: ShapeCell):
+    n_micro = max(
+        1, cell.global_batch // max(1, tcfg.microbatch_per_device * _dp_size(mesh, minfo))
+    )
+    use_ef = tcfg.grad_compression == "int8_ef"
+
+    from repro.parallel.hints import sharding_hints
+
+    def loss_fn(params, mb):
+        with sharding_hints(mesh, minfo):
+            return api.loss(params, cfg, mb, minfo=minfo, mesh=mesh)
+
+    def train_step(params, opt_state: AdamState, ef_state, batch):
+        if n_micro > 1:
+            def split(x):
+                # STRIDED split: microbatch m takes rows {m, m+n_micro, ...}
+                # so every microbatch spans all data shards. A contiguous
+                # reshape(n_micro, mb, ...) puts the SCAN dim on the sharded
+                # axis — XLA then replicates the batch inside the loop
+                # (16x redundant attention compute; found via loop-aware
+                # HLO analysis, see EXPERIMENTS.md §Perf iteration 1).
+                b = x.shape[0]
+                x = x.reshape(b // n_micro, n_micro, *x.shape[1:])
+                x = jnp.swapaxes(x, 0, 1)
+                if mesh is not None and minfo.fsdp:
+                    from jax.sharding import NamedSharding, PartitionSpec as P
+
+                    from repro.models.layers import sanitize_pspec
+
+                    spec = P(None, tuple(minfo.fsdp),
+                             *([None] * (x.ndim - 2)))
+                    x = jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, sanitize_pspec(mesh, spec, x.shape))
+                    )
+                return x
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g
+                )
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: (g / n_micro), gsum)
+            loss = lsum / n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        grads, ef_state = compression.compress(
+            grads, tcfg.grad_compression, ef_state
+        )
+        params, opt_state, stats = adamw_update(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss.astype(jnp.float32), **stats}
+        return params, opt_state, ef_state, metrics
+
+    return train_step, n_micro, use_ef
+
+
+def make_jitted_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                           api: ModelApi, mesh, cell: ShapeCell):
+    """jit with explicit in/out shardings over the production mesh."""
+    from repro.launch.mesh import mesh_info
+
+    minfo = mesh_info(mesh)
+    step_fn, n_micro, use_ef = make_train_step(cfg, tcfg, api, minfo, mesh, cell)
+    specs = api.param_specs(cfg, minfo)
+    p_shard = L.shardings(mesh, specs)
+    o_shard = state_shardings(p_shard, mesh)
+    ef_shard = compression.EFState(p_shard) if use_ef else None
+    b_shard = batch_shardings(cfg, cell, mesh, minfo)
+    metric_shard = None  # replicated scalars
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, o_shard, ef_shard, b_shard),
+        out_shardings=(p_shard, o_shard, ef_shard, metric_shard),
+        donate_argnums=(0, 1, 2),
+    )
+    return jitted, specs, p_shard, o_shard, n_micro, use_ef
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    final_loss: float
+    resumed_from: int | None
+    straggler_events: int
+    evictions: int
+    losses: list
+
+
+class Trainer:
+    """Fault-tolerant loop: resume -> train -> checkpoint -> (evict?)."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, cell: ShapeCell,
+                 *, ckpt_dir: str, mesh=None, ckpt_every: int = 20,
+                 keep: int = 3, data_cfg: pipeline.DataConfig | None = None,
+                 batch_override: int | None = None,
+                 watchdog: StragglerWatchdog | None = None,
+                 on_evict: Callable[[], None] | None = None) -> None:
+        self.cfg, self.tcfg, self.cell = cfg, tcfg, cell
+        self.api = get_model(cfg)
+        self.mesh = mesh
+        self.minfo = (
+            L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
+        )
+        self.ckpt = CheckpointManager(ckpt_dir, keep=keep)
+        self.ckpt_every = ckpt_every
+        self.dcfg = data_cfg or pipeline.DataConfig()
+        self.batch_override = batch_override
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.on_evict = on_evict
+        self.meta = {
+            "config": config_hash(cfg),
+            "arch": cfg.arch_id,
+            "cell": cell.name,
+        }
+
+        self.step_fn, self.n_micro, self.use_ef = make_train_step(
+            cfg, tcfg, self.api, self.minfo, mesh, cell
+        )
+        self.jitted = jax.jit(self.step_fn, donate_argnums=(0, 1, 2))
+
+    # -- state --------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.api.init(jax.random.PRNGKey(seed), self.cfg, self.minfo)
+        opt = init_state(params, self.tcfg)
+        ef = compression.init_ef(params) if self.use_ef else None
+        return params, opt, ef
+
+    def _state_tree(self, params, opt, ef):
+        tree = {"params": params, "opt": opt._asdict()}
+        if ef is not None:
+            tree["ef"] = ef._asdict()
+        return tree
+
+    def resume_or_init(self, seed: int = 0):
+        params, opt, ef = self.init_state(seed)
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return params, opt, ef, 0, None
+        like = self._state_tree(params, opt, ef)
+        restored, manifest = self.ckpt.restore(
+            latest, like, expect_meta=self.meta
+        )
+        params = restored["params"]
+        opt = AdamState(**restored["opt"])
+        ef = compression.EFState(**restored["ef"]) if ef is not None else None
+        return params, opt, ef, latest, latest
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, num_steps: int, *, seed: int = 0,
+            inject_step_times=None) -> TrainerReport:
+        params, opt, ef, start, resumed = self.resume_or_init(seed)
+        losses = []
+        evictions = 0
+        step = start
+        while step < num_steps:
+            batch = pipeline.make_batch(
+                self.cfg, self.cell, step, self.dcfg,
+                batch_override=self.batch_override,
+            )
+            self.watchdog.start()
+            params, opt, ef, metrics = self.jitted(params, opt, ef, batch)
+            jax.block_until_ready(metrics["loss"])
+            if inject_step_times is not None:
+                verdict = self.watchdog.observe(inject_step_times(step))
+                self.watchdog._t0 = None
+            else:
+                verdict = self.watchdog.stop()
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if verdict is Verdict.EVICT:
+                evictions += 1
+                log.warning("straggler eviction at step %d", step)
+                self.ckpt.save(step, self._state_tree(params, opt, ef),
+                               meta=self.meta)
+                if self.on_evict is not None:
+                    self.on_evict()
+            if step % self.ckpt_every == 0 or step == num_steps:
+                self.ckpt.save_async(
+                    step, self._state_tree(params, opt, ef), meta=self.meta
+                )
+        self.ckpt.wait()
+        return TrainerReport(
+            steps_run=num_steps - start,
+            final_loss=losses[-1] if losses else float("nan"),
+            resumed_from=resumed,
+            straggler_events=len(self.watchdog.history),
+            evictions=evictions,
+            losses=losses,
+        )

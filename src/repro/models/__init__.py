@@ -1,0 +1,1 @@
+"""Model zoo: all assigned architecture families + the paper's LeNet."""

@@ -1,0 +1,384 @@
+"""Attention blocks: GQA (+qk-norm, +cross-attn) and MLA (DeepSeek-V3).
+
+Sidebar decomposition: the QKV/output projections and the two attention
+einsums are *static* primitives (MXU); softmax and qk-RMSNorm are
+*flexible* functions (VPU). In SIDEBAR mode the fused path is
+``kernels/flash_attention.py`` (logits + softmax stats in VMEM scratch);
+the XLA path below uses a chunked-scan formulation so long-sequence
+prefill never materializes the full S×T logits (sub-quadratic memory).
+
+KV caches:
+  * GQA: (B, Hkv, T, Dh) per layer; optional int8 quantization with
+    per-(token, head) scales (production decode memory trick).
+  * MLA: compressed — (B, T, kv_lora_rank) latent + (B, T, rope_dim)
+    shared rope key. Decode uses the absorbed-matmul formulation
+    (q projected into latent space; no per-head K/V expansion).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.parallel.hints import constrain
+from repro.models.layers import (
+    MeshInfo,
+    ParamSpec,
+    _maybe,
+    apply_rope,
+    linear,
+    rms_norm,
+)
+
+Array = jax.Array
+
+CHUNK_Q = int(os.environ.get("REPRO_ATTN_CHUNK_Q", "1024"))  # q-block size (chunked XLA attention)
+
+
+# ---------------------------------------------------------------------------
+# Param specs.
+# ---------------------------------------------------------------------------
+
+def gqa_param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    fsdp = tuple(m.fsdp) or None
+    specs = {
+        "wq": ParamSpec((d, h * dh), dt, _maybe(m, fsdp, "model")),
+        "wk": ParamSpec((d, hkv * dh), dt, _maybe(m, fsdp, "model")),
+        "wv": ParamSpec((d, hkv * dh), dt, _maybe(m, fsdp, "model")),
+        "wo": ParamSpec((h * dh, d), dt, _maybe(m, "model", fsdp)),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((dh,), dt, P(None), "ones")
+        specs["k_norm"] = ParamSpec((dh,), dt, P(None), "ones")
+    return specs
+
+
+def mla_param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vdh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    dt = cfg.dtype
+    fsdp = tuple(m.fsdp) or None
+    return {
+        "w_dq": ParamSpec((d, qr), dt, _maybe(m, fsdp, None)),
+        "q_norm": ParamSpec((qr,), dt, P(None), "ones"),
+        "w_uq": ParamSpec((qr, h * (nope + rope)), dt, _maybe(m, fsdp, "model")),
+        "w_dkv": ParamSpec((d, kvr), dt, _maybe(m, fsdp, None)),
+        "kv_norm": ParamSpec((kvr,), dt, P(None), "ones"),
+        "w_kr": ParamSpec((d, rope), dt, _maybe(m, fsdp, None)),
+        "w_uk": ParamSpec((kvr, h * nope), dt, _maybe(m, fsdp, "model")),
+        "w_uv": ParamSpec((kvr, h * vdh), dt, _maybe(m, fsdp, "model")),
+        "wo": ParamSpec((h * vdh, d), dt, _maybe(m, "model", fsdp)),
+    }
+
+
+def attn_param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    return mla_param_specs(cfg, m) if cfg.use_mla else gqa_param_specs(cfg, m)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (GQA).
+# ---------------------------------------------------------------------------
+
+def kv_cache_specs(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int,
+                   num_layers: int) -> dict:
+    """Stacked-over-layers cache specs (leading L dim, scan xs layout)."""
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    batch_ax = tuple(m.fsdp) or None
+    if cfg.use_mla:
+        return {
+            "c_kv": ParamSpec((num_layers, batch, max_len, cfg.kv_lora_rank),
+                              cfg.dtype, _maybe(m, None, batch_ax, None, None), "zeros"),
+            "k_rope": ParamSpec((num_layers, batch, max_len, cfg.rope_head_dim),
+                                cfg.dtype, _maybe(m, None, batch_ax, None, None), "zeros"),
+        }
+    kv_dt = cfg.kv_cache_dtype
+    # GQA often has fewer kv heads than the TP degree (e.g. kv=8, TP=16).
+    # Shard heads over "model" when divisible; else shard head_dim (the
+    # QKV weights stay TP-sharded on the fused hkv*dh dim either way, and
+    # XLA reconciles the two layouts with a local reshard).
+    tp = m.size("model")
+    if tp > 1 and hkv % tp != 0 and dh % tp == 0:
+        head_ax, dh_ax = None, "model"
+    else:
+        head_ax, dh_ax = "model", None
+    specs = {
+        "k": ParamSpec((num_layers, batch, hkv, max_len, dh), kv_dt,
+                       _maybe(m, None, batch_ax, head_ax, None, dh_ax), "zeros"),
+        "v": ParamSpec((num_layers, batch, hkv, max_len, dh), kv_dt,
+                       _maybe(m, None, batch_ax, head_ax, None, dh_ax), "zeros"),
+    }
+    if kv_dt == jnp.int8:
+        specs["k_scale"] = ParamSpec((num_layers, batch, hkv, max_len), jnp.float32,
+                                     _maybe(m, None, batch_ax, head_ax, None), "zeros")
+        specs["v_scale"] = ParamSpec((num_layers, batch, hkv, max_len), jnp.float32,
+                                     _maybe(m, None, batch_ax, head_ax, None), "zeros")
+    return specs
+
+
+def _quantize_kv(x: Array) -> tuple[Array, Array]:
+    """Per-(token, head) int8 quantization: x (B, Hkv, S, Dh)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,Hkv,S)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None]).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: Array, scale: Array, dtype) -> Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (XLA path): chunked over q blocks.
+# ---------------------------------------------------------------------------
+
+def _attend(q: Array, k: Array, v: Array, *, causal: bool, cfg: ModelConfig,
+            offset: int | Array | None = None) -> Array:
+    """q (B,H,S,Dh), k/v (B,Hkv,T,Dh). Chooses pallas / chunked / direct.
+
+    ``offset`` is the global position of query row 0 (kpos <= qpos+offset
+    is visible). Default (None) = queries at the sequence end (t - s).
+    """
+    b, h, s, dh = q.shape
+    t = k.shape[2]
+    if offset is None:
+        offset = t - s
+    static_end = isinstance(offset, int) and offset == t - s
+    if cfg.use_pallas and s % 128 == 0 and t % 128 == 0 and static_end:
+        return kops.flash_attention(q, k, v, causal=causal,
+                                    interpret=jax.default_backend() != "tpu")
+    group = h // k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    if s <= CHUNK_Q or s % CHUNK_Q:
+        return _attend_direct(q, k, v, group, scale, causal, offset)
+    return _attend_chunked(q, k, v, group, scale, causal, offset)
+
+
+def _attend_direct(q, k, v, group, scale, causal, offset):
+    return _attend_direct_offset(q, k, v, group, scale, causal, offset)
+
+
+UNROLL_CHUNKS = int(os.environ.get("REPRO_ATTN_UNROLL", "64"))  # unroll threshold (causal skipping)
+
+
+def _attend_chunked(q, k, v, group, scale, causal, offset):
+    """Chunked over q: peak logits memory O(chunk x T), not O(S x T).
+
+    When the chunk count is moderate the loop is UNROLLED with static
+    k/v prefixes per chunk (chunk i attends k[: offset+(i+1)*CHUNK]) —
+    the causal block-skipping that a scan cannot express (saves ~2x
+    flops at s == t). Falls back to a scan for very long sequences.
+    """
+    b, h, s, dh = q.shape
+    n_chunks = s // CHUNK_Q
+    static_off = isinstance(offset, int)
+
+    if causal and static_off and n_chunks <= UNROLL_CHUNKS:
+        outs = []
+        for i in range(n_chunks):
+            qi = q[:, :, i * CHUNK_Q : (i + 1) * CHUNK_Q, :]
+            qi = constrain(qi, ("batch", "model", None, None))
+            end = offset + (i + 1) * CHUNK_Q
+            ki, vi = k[:, :, :end, :], v[:, :, :end, :]
+            outs.append(
+                _attend_direct_offset(qi, ki, vi, group, scale, True,
+                                      offset + i * CHUNK_Q)
+            )
+        return jnp.concatenate(outs, axis=2)
+
+    qc = q.reshape(b, h, n_chunks, CHUNK_Q, dh).transpose(2, 0, 1, 3, 4)
+    qc = constrain(qc, (None, "batch", "model", None, None))
+
+    def body(carry, args):
+        qi, idx = args
+        qi = constrain(qi, ("batch", "model", None, None))
+        out = _attend_direct_offset(qi, k, v, group, scale, causal,
+                                    offset + idx * CHUNK_Q)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(n_chunks)))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, v.shape[-1])
+
+
+def _attend_direct_offset(q, k, v, group, scale, causal, offset):
+    b, h, s, dh = q.shape
+    t = k.shape[2]
+    qg = q.reshape(b, k.shape[1], group, s, dh)
+    logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None] + offset
+        kpos = jnp.arange(t)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, s, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block.
+# ---------------------------------------------------------------------------
+
+def gqa_attention(
+    params: dict,
+    cfg: ModelConfig,
+    x: Array,                      # (B, S, D)
+    positions: Array,              # (B, S)
+    *,
+    causal: bool = True,
+    cache: dict | None = None,     # per-layer slice (no leading L dim)
+    cache_pos: Array | None = None,  # scalar write offset (decode/prefill)
+    memory: Array | None = None,   # cross-attention memory (B, T, D)
+) -> tuple[Array, dict | None]:
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = linear(x, params["wq"]).reshape(b, s, h, dh)
+    kv_src = memory if memory is not None else x
+    k = linear(kv_src, params["wk"]).reshape(b, kv_src.shape[1], hkv, dh)
+    v = linear(kv_src, params["wv"]).reshape(b, kv_src.shape[1], hkv, dh)
+
+    if cfg.qk_norm:  # flexible op: qk-RMSNorm (qwen3)
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+
+    if memory is None:  # rope only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kpos = positions if cache is None else (
+            cache_pos + jnp.arange(kv_src.shape[1])[None, :]
+        )
+        k = apply_rope(k, kpos, cfg.rope_theta)
+
+    q = constrain(q.transpose(0, 2, 1, 3), ("batch", "model", None, None))
+    k = constrain(k.transpose(0, 2, 1, 3), ("batch", "model", None, None))
+    v = constrain(v.transpose(0, 2, 1, 3), ("batch", "model", None, None))
+
+    new_cache = None
+    if cache is not None:
+        int8 = cfg.kv_cache_dtype == jnp.int8
+        if int8:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+        else:
+            kq, vq = k.astype(cfg.kv_cache_dtype), v.astype(cfg.kv_cache_dtype)
+        start = (0, 0, cache_pos, 0)
+        new_cache = dict(cache)
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, start)
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, start)
+        if int8:
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, cache_pos))
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, cache_pos))
+            k = _dequantize_kv(new_cache["k"], new_cache["k_scale"], cfg.dtype)
+            v = _dequantize_kv(new_cache["v"], new_cache["v_scale"], cfg.dtype)
+        else:
+            k = new_cache["k"].astype(cfg.dtype)
+            v = new_cache["v"].astype(cfg.dtype)
+
+    offset = cache_pos if cache is not None else None
+    out = _attend(q, k, v, causal=causal and memory is None, cfg=cfg,
+                  offset=offset)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return linear(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3).
+# ---------------------------------------------------------------------------
+
+def mla_attention(
+    params: dict,
+    cfg: ModelConfig,
+    x: Array,
+    positions: Array,
+    *,
+    cache: dict | None = None,
+    cache_pos: Array | None = None,
+) -> tuple[Array, dict | None]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nope, rope, vdh = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    # --- queries: low-rank down + norm (flexible) + up.
+    c_q = linear(x, params["w_dq"])
+    c_q = rms_norm(c_q, params["q_norm"], cfg.norm_eps)
+    q = linear(c_q, params["w_uq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- compressed kv latent + shared rope key.
+    c_kv = linear(x, params["w_dkv"])                     # (B,S,kvr)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = linear(x, params["w_kr"])                    # (B,S,rope)
+    kpos = positions if cache is None else (
+        cache_pos + jnp.arange(s)[None, :]
+    )
+    k_rope = apply_rope(k_rope, kpos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["c_kv"] = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        new_cache["k_rope"] = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
+        c_kv_full = new_cache["c_kv"].astype(cfg.dtype)
+        k_rope_full = new_cache["k_rope"].astype(cfg.dtype)
+    else:
+        c_kv_full, k_rope_full = c_kv, k_rope
+
+    t = c_kv_full.shape[1]
+    scale = 1.0 / math.sqrt(nope + rope)
+
+    if cache is not None and s == 1:
+        # ---- absorbed decode: project q into latent space; never expand K/V.
+        w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))        # (B,1,H,kvr)
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat, c_kv_full.astype(jnp.float32))
+            + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
+                         k_rope_full.astype(jnp.float32))
+        ) * scale
+        mask = jnp.arange(t)[None, None, None, :] <= (cache_pos + s - 1)
+        logits = jnp.where(mask, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)                  # flexible op
+        ctx_lat = jnp.einsum("bhst,btr->bshr", p, c_kv_full.astype(jnp.float32))
+        w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vdh)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv.astype(jnp.float32))
+        out = out.reshape(b, s, h * vdh).astype(cfg.dtype)
+        return linear(out, params["wo"]), new_cache
+
+    # ---- train/prefill: expand per-head keys/values (naive MLA).
+    k_nope = linear(c_kv_full, params["w_uk"]).reshape(b, t, h, nope)
+    vv = linear(c_kv_full, params["w_uv"]).reshape(b, t, h, vdh)
+    k_rope_b = jnp.broadcast_to(k_rope_full[:, :, None, :], (b, t, h, rope))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1).transpose(0, 2, 1, 3)
+    vv = vv.transpose(0, 2, 1, 3)
+    offset = cache_pos if cache is not None else t - s
+    # MLA head dims are non-uniform; always the XLA path.
+    out = _attend_chunked(q_full, k_full, vv, 1, scale, True, offset) \
+        if s > CHUNK_Q and s % CHUNK_Q == 0 else \
+        _attend_direct(q_full, k_full, vv, 1, scale, True, offset)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdh)
+    return linear(out, params["wo"]), new_cache
+
+
+def attention(params, cfg, x, positions, **kw):
+    if cfg.use_mla:
+        kw.pop("memory", None)
+        kw.pop("causal", None)
+        return mla_attention(params, cfg, x, positions, **kw)
+    return gqa_attention(params, cfg, x, positions, **kw)

@@ -1,0 +1,143 @@
+"""LeNet-style CIFAR-10 CNN — the paper's own workload (§5.2, Figure 4).
+
+Two conv layers (each followed by activation + pooling) and three fully
+connected layers with activations in between — "adapted from one in the
+Pytorch documentation" exactly as the paper did. This model is what the
+paper-figure benchmarks (Figs. 6-8, Table 3) run through the engine in
+all three modes.
+
+``to_layer_graphs`` emits the static/flexible IR:
+  * Monolithic = the whole net in one LayerGraph (one accelerator).
+  * Small primitives S1..S5 (Figure 4) = the 5 static chains the
+    FLEXIBLE_DMA / SIDEBAR segmentation produces — conv1, conv2, fc1,
+    fc2, fc3 with activations (and pools) between them on the host.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import FlexibleOp, LayerGraph, StaticOp
+
+Array = jax.Array
+
+# Paper's LeNet (pytorch CIFAR-10 tutorial): conv(3->6,k5) pool conv(6->16,k5)
+# pool fc(400->120) fc(120->84) fc(84->10).
+CONV1 = dict(cin=3, cout=6, k=5)
+CONV2 = dict(cin=6, cout=16, k=5)
+FC1 = (16 * 5 * 5, 120)
+FC2 = (120, 84)
+FC3 = (84, 10)
+IMG = 32
+
+
+def init(key: Array, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+
+    def conv_w(k, c):
+        w = jax.random.normal(k, (c["cout"], c["cin"], c["k"], c["k"]), dtype)
+        return w / math.sqrt(c["cin"] * c["k"] * c["k"])
+
+    def fc_w(k, shape):
+        return jax.random.normal(k, shape, dtype) / math.sqrt(shape[0])
+
+    return {
+        "conv1": conv_w(ks[0], CONV1),
+        "conv2": conv_w(ks[1], CONV2),
+        "fc1": fc_w(ks[2], FC1),
+        "fc2": fc_w(ks[3], FC2),
+        "fc3": fc_w(ks[4], FC3),
+    }
+
+
+def _conv(w: Array, x: Array) -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _pool(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def _flatten(w_unused: Array, x: Array) -> Array:
+    return x.reshape(x.shape[0], -1)
+
+
+def _fc(w: Array, x: Array) -> Array:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def forward(params: dict, x: Array, activation, *, pool=_pool) -> Array:
+    """Plain forward (oracle for engine-mode equivalence tests)."""
+    x = pool(activation(_conv(params["conv1"], x)))
+    x = pool(activation(_conv(params["conv2"], x)))
+    x = x.reshape(x.shape[0], -1)
+    x = activation(_fc(params["fc1"], x))
+    x = activation(_fc(params["fc2"], x))
+    return _fc(params["fc3"], x)
+
+
+def _conv_flops(c, hout: int, wout: int, batch: int) -> int:
+    return 2 * batch * c["cout"] * c["cin"] * c["k"] * c["k"] * hout * wout
+
+
+def to_layer_graphs(batch: int, activation: str = "relu",
+                    itemsize: int = 4) -> list[LayerGraph]:
+    """The paper's Figure-4 decomposition as engine IR (one task here —
+    segmentation into S1..S5 happens per execution mode in the engine)."""
+    h1 = IMG - CONV1["k"] + 1            # 28
+    p1 = h1 // 2                          # 14
+    h2 = p1 - CONV2["k"] + 1              # 10
+    p2 = h2 // 2                          # 5
+
+    ops = (
+        StaticOp("conv1", _conv, (batch, CONV1["cout"], h1, h1),
+                 flops=_conv_flops(CONV1, h1, h1, batch),
+                 weight_bytes=CONV1["cout"] * CONV1["cin"] * 25 * itemsize),
+        FlexibleOp(activation, (batch, CONV1["cout"], h1, h1)),
+        FlexibleOp("max_pool", (batch, CONV1["cout"], p1, p1)),
+        StaticOp("conv2", _conv, (batch, CONV2["cout"], h2, h2),
+                 flops=_conv_flops(CONV2, h2, h2, batch),
+                 weight_bytes=CONV2["cout"] * CONV2["cin"] * 25 * itemsize),
+        FlexibleOp(activation, (batch, CONV2["cout"], h2, h2)),
+        FlexibleOp("max_pool", (batch, CONV2["cout"], p2, p2)),
+        StaticOp("flatten", _flatten, (batch, FC1[0]), flops=0, weight_bytes=0),
+        StaticOp("fc1", _fc, (batch, FC1[1]),
+                 flops=2 * batch * FC1[0] * FC1[1],
+                 weight_bytes=FC1[0] * FC1[1] * itemsize),
+        FlexibleOp(activation, (batch, FC1[1])),
+        StaticOp("fc2", _fc, (batch, FC2[1]),
+                 flops=2 * batch * FC2[0] * FC2[1],
+                 weight_bytes=FC2[0] * FC2[1] * itemsize),
+        FlexibleOp(activation, (batch, FC2[1])),
+        StaticOp("fc3", _fc, (batch, FC3[1]),
+                 flops=2 * batch * FC3[0] * FC3[1],
+                 weight_bytes=FC3[0] * FC3[1] * itemsize),
+    )
+    return [LayerGraph("lenet", ops, (batch, 3, IMG, IMG), itemsize)]
+
+
+def engine_params(params: dict) -> dict:
+    """Map model params onto LayerGraph StaticOp names."""
+    return {
+        "conv1": params["conv1"],
+        "conv2": params["conv2"],
+        "flatten": jnp.zeros(()),
+        "fc1": params["fc1"],
+        "fc2": params["fc2"],
+        "fc3": params["fc3"],
+    }
+
+
+def register_pooling(table) -> None:
+    """The pooling layers are flexible (host) ops in the paper's Figure 4."""
+    if "max_pool" not in table:
+        table.register("max_pool", _pool)

@@ -1,0 +1,64 @@
+"""MLP blocks — the paper's canonical static→flexible→static pattern.
+
+``gated`` (SwiGLU-family): y = (f(x@Wg) ⊙ (x@Wu)) @ Wd
+``plain`` (nemotron squared-relu, rwkv channel-mix): y = f(x@W1) @ W2
+
+The activation is a function-table key — swapping it (the paper's "new
+activation function" scenario) touches no model or kernel code. In SIDEBAR
+mode with ``cfg.use_pallas`` the plain MLP runs through the fused
+``kernels.sidebar_mlp`` (VMEM-resident intermediate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+from repro.kernels import ops as kops
+from repro.models.layers import MeshInfo, ParamSpec, _maybe, linear
+
+Array = jax.Array
+
+
+def mlp_param_specs(cfg: ModelConfig, m: MeshInfo, d_ff: int | None = None) -> dict:
+    d, f, dt = cfg.d_model, d_ff or cfg.d_ff, cfg.dtype
+    fsdp = tuple(m.fsdp) or None
+    specs = {
+        "w_up": ParamSpec((d, f), dt, _maybe(m, fsdp, "model")),
+        "w_down": ParamSpec((f, d), dt, _maybe(m, "model", fsdp)),
+    }
+    if cfg.gated_mlp:
+        specs["w_gate"] = ParamSpec((d, f), dt, _maybe(m, fsdp, "model"))
+    return specs
+
+
+def mlp(
+    params: dict,
+    cfg: ModelConfig,
+    x: Array,
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    activation: str | None = None,
+) -> Array:
+    """x (..., D) -> (..., D)."""
+    act_name = activation or cfg.activation
+    act = table.lookup(act_name)
+    if cfg.gated_mlp:
+        if cfg.use_pallas and x.ndim == 2 and x.shape[0] % 8 == 0:
+            return kops.sidebar_gated_mlp(
+                x, params["w_gate"], params["w_up"], params["w_down"],
+                act_name, table=table,
+                interpret=jax.default_backend() != "tpu",
+            )
+        g = act(linear(x, params["w_gate"]))          # flexible (VPU)
+        u = linear(x, params["w_up"])                 # static  (MXU)
+        return linear((g * u).astype(x.dtype), params["w_down"])
+    if cfg.use_pallas and x.ndim == 2 and x.shape[0] % 8 == 0:
+        return kops.sidebar_mlp(
+            x, params["w_up"], params["w_down"], act_name, table=table,
+            interpret=jax.default_backend() != "tpu",
+        )
+    h = act(linear(x, params["w_up"]))
+    return linear(h.astype(x.dtype), params["w_down"])

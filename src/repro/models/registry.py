@@ -1,0 +1,45 @@
+"""Model registry: family -> uniform model API."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv_model, transformer, whisper, zamba
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    param_specs: Callable
+    init: Callable
+    forward: Callable
+    loss: Callable
+    cache_specs: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _api(mod) -> ModelApi:
+    return ModelApi(
+        param_specs=mod.param_specs,
+        init=mod.init,
+        forward=mod.forward,
+        loss=mod.loss,
+        cache_specs=mod.cache_specs,
+        init_cache=mod.init_cache,
+        prefill=mod.prefill,
+        decode_step=mod.decode_step,
+    )
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "hybrid":
+        return _api(zamba)
+    if cfg.family == "ssm":
+        return _api(rwkv_model)
+    if cfg.family == "audio":
+        return _api(whisper)
+    # dense / moe / vlm all route through the generic transformer
+    return _api(transformer)

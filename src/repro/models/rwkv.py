@@ -1,0 +1,247 @@
+"""RWKV6 ("Finch") — attention-free, data-dependent decay.
+
+Sidebar decomposition: the r/k/v/g projections, the lora mixers, and the
+chunked WKV contractions are *static* primitives; the fast-evolving parts
+are all *flexible* function-table ops — the double-exponential decay
+``exp_decay`` (w = e^{-e^{x}} — a function that did not exist when RWKV4
+hardware would have been taped out: the paper's obsolescence scenario,
+realized), SiLU/sigmoid gates, and the squared-ReLU channel-mix.
+
+Chunked WKV (chunk Q, per head, key dim K, value dim V):
+
+  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+  o_t = r_t (diag(u) k_tᵀ v_t + S_{t-1})
+
+  With L_t = Σ_{s≤t} log w_s (cumsum per channel, ≤ 0):
+    intra (s<t):  A_ts = Σ_d r_td k_sd e^{L_{t-1,d} - L_{s,d}}
+    diag:         A_tt = Σ_d r_td k_td u_d
+    inter:        o°_t = (r_t ⊙ e^{L_{t-1}}) · S
+    state:        S' = diag(e^{L_Q}) S + Σ_s (k_s ⊙ e^{L_Q-L_s})ᵀ v_s
+
+  The pairwise decay e^{L_{t-1}-L_s} is computed explicitly per chunk
+  (never factored into overflowing e^{±L} halves) — stable for any decay.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import MeshInfo, ParamSpec, _maybe, linear, rms_norm
+
+Array = jax.Array
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CHUNK = 64
+MIX_COMPONENTS = 5  # r, k, v, w, g
+
+
+def rwkv_dims(cfg: ModelConfig) -> tuple[int, int]:
+    return cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+
+
+def rwkv_param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype
+    h, k = rwkv_dims(cfg)
+    fsdp = tuple(m.fsdp) or None
+    tp = "model"
+    return {
+        # time-mix (token-shift ddlerp)
+        "mix_base": ParamSpec((MIX_COMPONENTS, d), dt, P(None, None), "zeros"),
+        "mix_w1": ParamSpec((d, MIX_COMPONENTS * LORA_MIX), dt, _maybe(m, fsdp, None)),
+        "mix_w2": ParamSpec((MIX_COMPONENTS, LORA_MIX, d), dt, P(None, None, None)),
+        # data-dependent decay lora
+        "w0": ParamSpec((d,), jnp.float32, P(None), "zeros"),
+        "w_lora1": ParamSpec((d, LORA_DECAY), dt, _maybe(m, fsdp, None)),
+        "w_lora2": ParamSpec((LORA_DECAY, d), dt, P(None, None)),
+        # projections
+        "wr": ParamSpec((d, d), dt, _maybe(m, fsdp, tp)),
+        "wk": ParamSpec((d, d), dt, _maybe(m, fsdp, tp)),
+        "wv": ParamSpec((d, d), dt, _maybe(m, fsdp, tp)),
+        "wg": ParamSpec((d, d), dt, _maybe(m, fsdp, tp)),
+        "u": ParamSpec((d,), jnp.float32, _maybe(m, tp), "zeros"),
+        "ln_x": ParamSpec((d,), dt, _maybe(m, tp), "ones"),
+        "wo": ParamSpec((d, d), dt, _maybe(m, tp, fsdp)),
+        # channel-mix
+        "cm_mix_k": ParamSpec((d,), dt, P(None), "zeros"),
+        "cm_mix_r": ParamSpec((d,), dt, P(None), "zeros"),
+        "cm_key": ParamSpec((d, f), dt, _maybe(m, fsdp, tp)),
+        "cm_value": ParamSpec((f, d), dt, _maybe(m, tp, fsdp)),
+        "cm_recept": ParamSpec((d, d), dt, _maybe(m, fsdp, tp)),
+    }
+
+
+def rwkv_state_specs(cfg: ModelConfig, m: MeshInfo, batch: int,
+                     num_layers: int) -> dict:
+    h, k = rwkv_dims(cfg)
+    batch_ax = tuple(m.fsdp) or None
+    return {
+        "wkv": ParamSpec((num_layers, batch, h, k, k), jnp.float32,
+                         _maybe(m, None, batch_ax, "model", None, None), "zeros"),
+        "shift_tm": ParamSpec((num_layers, batch, cfg.d_model), cfg.dtype,
+                              _maybe(m, None, batch_ax, None), "zeros"),
+        "shift_cm": ParamSpec((num_layers, batch, cfg.d_model), cfg.dtype,
+                              _maybe(m, None, batch_ax, None), "zeros"),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """shift(x)[t] = x[t-1]; position 0 gets `prev` (decode state) or 0."""
+    b, t, d = x.shape
+    first = jnp.zeros((b, 1, d), x.dtype) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1, :]], axis=1)
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                s0: Array, chunk: int = CHUNK):
+    """r/k/v (B,T,H,K) fp32, logw (B,T,H,K) (<=0), u (H,K), s0 (B,H,K,K).
+
+    Returns o (B,T,H,K), s_final. State layout: S[h, d_k, d_v].
+    """
+    b, t, h, kk = r.shape
+    q = min(chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+
+    def resh(x):
+        return x.reshape(b, nc, q, h, kk).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(logw)
+    strict = jnp.tril(jnp.ones((q, q), jnp.float32), k=-1)
+
+    def body(s, args):
+        rq, kq, vq, lw = args                   # (B,Q,H,K)
+        lc = jnp.cumsum(lw, axis=1)             # (B,Q,H,K) cumulative log w
+        lc_prev = lc - lw                       # L_{t-1}
+        # intra: A_ts = Σ_d r_td k_sd e^{Lprev_t - L_s}  (s < t)
+        pair = jnp.exp(
+            jnp.clip(lc_prev[:, :, None] - lc[:, None, :, :], -60.0, 0.0)
+        )                                       # (B,Q,S,H,K)
+        a = jnp.einsum("bqhk,bshk,bqshk->bqsh", rq, kq, pair)
+        a = a * strict[None, :, :, None]
+        a_diag = jnp.einsum("bqhk,bqhk,hk->bqh", rq, kq, u)
+        o = jnp.einsum("bqsh,bshk->bqhk", a, vq)
+        o += a_diag[..., None] * vq
+        # inter: o° = (r ⊙ e^{Lprev}) · S
+        o += jnp.einsum("bqhk,bhkv->bqhv", rq * jnp.exp(lc_prev), s)
+        # state update
+        kdec = kq * jnp.exp(jnp.clip(lc[:, -1:] - lc, -60.0, 0.0))
+        s_new = jnp.exp(lc[:, -1])[..., None] * s + jnp.einsum(
+            "bshk,bshv->bhkv", kdec, vq
+        )
+        return s_new, o
+
+    s_final, oc = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 2, 3, 4).reshape(b, t, h, kk)
+    return o, s_final
+
+
+def wkv_step(r: Array, k: Array, v: Array, w: Array, u: Array, s: Array):
+    """Single decode step; r/k/v/w (B,H,K), s (B,H,K,K)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    return o, s_new
+
+
+def rwkv_block(
+    params: dict,
+    cfg: ModelConfig,
+    xin: Array,                    # (B, S, D) — post-norm input (time-mix half)
+    *,
+    table,
+    state: dict | None = None,
+) -> tuple[Array, dict | None]:
+    """Time-mix (WKV) half. Returns (out, new_state-without-channel-mix)."""
+    b, s, d = xin.shape
+    h, kk = rwkv_dims(cfg)
+    silu = table.lookup("silu")
+    sigmoid = table.lookup("sigmoid")
+    exp_decay = table.lookup("exp_decay")     # flexible: e^{-e^{x}}
+
+    prev = state["shift_tm"] if state is not None else None
+    xx = _token_shift(xin, prev)
+    delta = xx - xin
+    # ddlerp: 5 data-dependent mixes from one lora
+    mix_l = jnp.tanh(linear(xin, params["mix_w1"]))          # (B,S,5*32)
+    mix_l = mix_l.reshape(b, s, MIX_COMPONENTS, LORA_MIX)
+    mix_dyn = jnp.einsum("bscl,cld->bscd", mix_l.astype(jnp.float32),
+                         params["mix_w2"].astype(jnp.float32))
+    mix = params["mix_base"].astype(jnp.float32)[None, None] + mix_dyn
+    xmix = xin[:, :, None, :].astype(jnp.float32) + \
+        delta[:, :, None, :].astype(jnp.float32) * mix       # (B,S,5,D)
+    x_r, x_k, x_v, x_w, x_g = [
+        xmix[:, :, i, :].astype(cfg.dtype) for i in range(MIX_COMPONENTS)
+    ]
+
+    r = linear(x_r, params["wr"]).astype(jnp.float32).reshape(b, s, h, kk)
+    k = linear(x_k, params["wk"]).astype(jnp.float32).reshape(b, s, h, kk)
+    v = linear(x_v, params["wv"]).astype(jnp.float32).reshape(b, s, h, kk)
+    g = silu(linear(x_g, params["wg"]))
+
+    ww = params["w0"][None, None, :] + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(linear(x_w, params["w_lora1"])).astype(jnp.float32),
+        params["w_lora2"].astype(jnp.float32),
+    )
+    w = exp_decay(ww)                                        # (B,S,D) in (0,1)
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    logw = logw.reshape(b, s, h, kk)
+    u = params["u"].astype(jnp.float32).reshape(h, kk)
+
+    if state is None:
+        s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+        o, s_new = wkv_chunked(r, k, v, logw, u, s0)
+    elif s == 1:
+        o, s_new = wkv_step(
+            r[:, 0], k[:, 0], v[:, 0],
+            jnp.exp(logw[:, 0]), u, state["wkv"],
+        )
+        o = o[:, None]
+    else:
+        o, s_new = wkv_chunked(r, k, v, logw, u, state["wkv"])
+
+    o = o.reshape(b, s, d).astype(cfg.dtype)
+    o = rms_norm(o, params["ln_x"], cfg.norm_eps) * g.astype(cfg.dtype)
+    out = linear(o, params["wo"])
+
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["wkv"] = s_new
+        new_state["shift_tm"] = xin[:, -1, :]
+    return out, new_state
+
+
+def rwkv_channel_mix(
+    params: dict,
+    cfg: ModelConfig,
+    xin: Array,
+    *,
+    table,
+    state: dict | None = None,
+) -> tuple[Array, dict | None]:
+    """Channel-mix half: squared-relu MLP with sigmoid receptance gate."""
+    sq_relu = table.lookup("squared_relu")    # flexible
+    sigmoid = table.lookup("sigmoid")
+
+    prev = state["shift_cm"] if state is not None else None
+    xx = _token_shift(xin, prev)
+    delta = xx - xin
+    x_k = xin + delta * params["cm_mix_k"].astype(xin.dtype)[None, None]
+    x_r = xin + delta * params["cm_mix_r"].astype(xin.dtype)[None, None]
+
+    kk = sq_relu(linear(x_k, params["cm_key"]))
+    vv = linear(kk.astype(xin.dtype), params["cm_value"])
+    rr = sigmoid(linear(x_r, params["cm_recept"]))
+    out = (rr * vv).astype(xin.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = dict(state)
+        new_state["shift_cm"] = xin[:, -1, :]
+    return out, new_state

@@ -1,0 +1,95 @@
+"""RWKV6 full model: embeddings + scanned [time-mix, channel-mix] layers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.function_table import DEFAULT_TABLE
+from repro.models import layers as L
+from repro.models import rwkv as rwkv_lib
+from repro.models.layers import MeshInfo, ParamSpec, _maybe
+
+Array = jax.Array
+
+
+def param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    fsdp = tuple(m.fsdp) or None
+    block = dict(rwkv_lib.rwkv_param_specs(cfg, m))
+    block["tm_norm"] = ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones")
+    block["cm_norm"] = ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones")
+    return {
+        "embed": ParamSpec((L.padded_vocab(cfg.vocab_size), cfg.d_model),
+                           cfg.dtype, _maybe(m, "model", fsdp), "embed"),
+        "final_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "blocks": L.stack_specs(block, cfg.num_layers),
+    }
+
+
+def init(key, cfg: ModelConfig, m: MeshInfo = L.HOST) -> dict:
+    return L.materialize(key, param_specs(cfg, m))
+
+
+def cache_specs(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
+    return rwkv_lib.rwkv_state_specs(cfg, m, batch, cfg.num_layers)
+
+
+def init_cache(cfg, m, batch, max_len):
+    return L.materialize(jax.random.PRNGKey(0), cache_specs(cfg, m, batch, max_len))
+
+
+def _remat(fn, cfg):
+    return fn if cfg.remat == "none" else jax.checkpoint(fn)
+
+
+def _run(params, cfg: ModelConfig, x, *, table, state=None):
+    def body(x, xs):
+        p_l, s_l = xs
+        h = L.rms_norm(x, p_l["tm_norm"], cfg.norm_eps)
+        y, ns = rwkv_lib.rwkv_block(p_l, cfg, h, table=table, state=s_l)
+        x = x + y
+        h = L.rms_norm(x, p_l["cm_norm"], cfg.norm_eps)
+        y, ns2 = rwkv_lib.rwkv_channel_mix(p_l, cfg, h, table=table, state=ns)
+        return x + y, ns2
+
+    x, new_state = jax.lax.scan(_remat(body, cfg), x, (params["blocks"], state))
+    return x, new_state
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+            minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    x = L.embed_lookup(params["embed"], batch["tokens"],
+                       sharded="model" in minfo.axis_names)
+    x, _ = _run(params, cfg, x, table=table)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+         minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    logits = forward(params, cfg, batch, table=table, minfo=minfo, mesh=mesh)
+    return L.softmax_cross_entropy(
+        logits[:, :-1, :].reshape(-1, logits.shape[-1]),
+        batch["labels"][:, 1:].reshape(-1),
+        vocab=cfg.vocab_size,
+    )
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
+            table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None):
+    x = L.embed_lookup(params["embed"], batch["tokens"],
+                       sharded="model" in minfo.axis_names)
+    x, new_state = _run(params, cfg, x, table=table, state=cache)
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_state
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
+                pos: Array, *, table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST,
+                mesh=None, memory=None):
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    x, new_state = _run(params, cfg, x, table=table, state=cache)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_state

@@ -1,0 +1,225 @@
+"""Mamba2 (SSD) blocks — the zamba2 backbone.
+
+Sidebar decomposition: the chunked SSD algorithm is built from *static*
+tensor contractions (the intra-chunk (CBᵀ⊙L)X matmuls and the inter-chunk
+state einsums — all MXU work), while the *flexible* ops are exactly the
+fast-evolving nonlinearities: softplus(dt), exp decays, SiLU gates, and
+the gated RMSNorm. These come from the function table.
+
+Chunked SSD recurrence (chunk length Q, per head, state N, head dim P):
+
+  a_t = exp(dt_t · A)            L_t = Σ_{s≤t} log a_s   (cumsum in chunk)
+  h_t = a_t h_{t-1} + dt_t B_t ⊗ x_t          y_t = C_t · h_t + D x_t
+
+  intra:  y⁺_t = Σ_{s≤t} (C_t·B_s) e^{L_t-L_s} dt_s x_s
+  inter:  y°_t = e^{L_t} (C_t · h_chunk_start)
+  state:  h' = e^{L_Q} h + Σ_s e^{L_Q-L_s} dt_s B_s ⊗ x_s
+
+The chunk loop is a ``lax.scan`` (carries the (B,H,N,P) state), so HLO
+size is depth-independent and decode is the single-step special case.
+
+Sharding: heads (and d_inner) are TP-sharded over "model"; B/C (shared
+across heads, ngroups=1) are replicated; out_proj contracts the sharded
+d_inner (psum by XLA).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import MeshInfo, ParamSpec, _maybe, linear, rms_norm
+
+Array = jax.Array
+
+CONV_K = 4  # causal depthwise conv kernel width
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(d_inner, n_heads, head_dim)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return d_inner, d_inner // cfg.ssm_head_dim, cfg.ssm_head_dim
+
+
+def mamba2_param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    d_in, h, p = ssm_dims(cfg)
+    dt = cfg.dtype
+    fsdp = tuple(m.fsdp) or None
+    tp = "model"
+    return {
+        "in_x": ParamSpec((d, d_in), dt, _maybe(m, fsdp, tp)),
+        "in_z": ParamSpec((d, d_in), dt, _maybe(m, fsdp, tp)),
+        "in_B": ParamSpec((d, n), dt, _maybe(m, fsdp, None)),
+        "in_C": ParamSpec((d, n), dt, _maybe(m, fsdp, None)),
+        "in_dt": ParamSpec((d, h), dt, _maybe(m, fsdp, tp)),
+        "conv_x": ParamSpec((CONV_K, d_in), dt, _maybe(m, None, tp)),
+        "conv_B": ParamSpec((CONV_K, n), dt, P_none()),
+        "conv_C": ParamSpec((CONV_K, n), dt, P_none()),
+        "a_log": ParamSpec((h,), jnp.float32, _maybe(m, tp), "ones"),
+        "d_skip": ParamSpec((h,), jnp.float32, _maybe(m, tp), "ones"),
+        "dt_bias": ParamSpec((h,), jnp.float32, _maybe(m, tp), "zeros"),
+        "norm": ParamSpec((d_in,), dt, _maybe(m, tp), "ones"),
+        "out": ParamSpec((d_in, d), dt, _maybe(m, tp, fsdp)),
+    }
+
+
+def P_none():
+    from jax.sharding import PartitionSpec
+    return PartitionSpec(None, None)
+
+
+def ssm_state_specs(cfg: ModelConfig, m: MeshInfo, batch: int,
+                    num_layers: int) -> dict:
+    """Decode-state specs (stacked over layers)."""
+    d_in, h, p = ssm_dims(cfg)
+    n = cfg.ssm_state
+    batch_ax = tuple(m.fsdp) or None
+    return {
+        "h": ParamSpec((num_layers, batch, h, n, p), jnp.float32,
+                       _maybe(m, None, batch_ax, "model", None, None), "zeros"),
+        "conv": ParamSpec((num_layers, batch, CONV_K - 1, d_in + 2 * n),
+                          cfg.dtype,
+                          _maybe(m, None, batch_ax, None, None), "zeros"),
+    }
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv, kernel CONV_K. x (B,T,C), w (K,C).
+
+    Returns (y, new_state) where new_state is the trailing K-1 inputs.
+    """
+    b, t, c = x.shape
+    if state is None:
+        pad = jnp.zeros((b, CONV_K - 1, c), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, T+K-1, C)
+    y = sum(
+        xp[:, i : i + t, :] * w[i][None, None, :] for i in range(CONV_K)
+    )
+    new_state = xp[:, t:, :] if t >= CONV_K - 1 else xp[:, -(CONV_K - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_chunked(x: Array, dt: Array, a: Array, bmat: Array, cmat: Array,
+                   d_skip: Array, h0: Array, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,T,H,P) fp32, dt (B,T,H) fp32 (post-softplus), a (H,) negative,
+    bmat/cmat (B,T,N) fp32, d_skip (H,), h0 (B,H,N,P) fp32.
+    Returns y (B,T,H,P) fp32, h_final.
+    """
+    b, t, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+
+    xc = x.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    bc = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+
+    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+
+    def body(hstate, args):
+        xq, dtq, bq, cq = args                 # (B,Q,H,P),(B,Q,H),(B,Q,N)x2
+        l = dtq * a[None, None, :]             # (B,Q,H) log-decay, <= 0
+        lc = jnp.cumsum(l, axis=1)             # (B,Q,H)
+        # inter-chunk: y° = e^{L_t} C_t · h_start
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cq, hstate) * \
+            jnp.exp(lc)[..., None]
+        # intra-chunk: M ⊙ decay, then @ (dt x)
+        m = jnp.einsum("bqn,bsn->bqs", cq, bq)            # (B,Q,S)
+        decay = jnp.exp(
+            jnp.clip(lc[:, :, None, :] - lc[:, None, :, :], -60.0, 0.0)
+        )                                                  # (B,Q,S,H)
+        w = m[..., None] * decay * dtq[:, None, :, :] * causal[None, :, :, None]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", w, xq)
+        # state: h' = e^{L_Q} h + Σ e^{L_Q - L_s} dt_s B_s ⊗ x_s
+        decay_state = jnp.exp(jnp.clip(lc[:, -1:, :] - lc, -60.0, 0.0)) * dtq
+        h_inc = jnp.einsum("bsh,bsn,bshp->bhnp", decay_state, bq, xq)
+        h_new = jnp.exp(lc[:, -1])[..., None, None] * hstate + h_inc
+        y = y_intra + y_inter + xq * d_skip[None, None, :, None]
+        return h_new, y
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, dtc, bc, cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y, h_final
+
+
+def mamba2_step(x: Array, dt: Array, a: Array, bvec: Array, cvec: Array,
+                d_skip: Array, h: Array):
+    """Single decode step. x (B,H,P), dt (B,H), b/c (B,N), h (B,H,N,P)."""
+    decay = jnp.exp(dt * a[None, :])                       # (B,H)
+    h_new = decay[..., None, None] * h + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bvec, x
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec, h_new) + x * d_skip[None, :, None]
+    return y, h_new
+
+
+def mamba2_block(
+    params: dict,
+    cfg: ModelConfig,
+    xin: Array,                   # (B, S, D)
+    *,
+    table,
+    state: dict | None = None,    # {"h": (B,H,N,P), "conv": (B,K-1,C)}
+) -> tuple[Array, dict | None]:
+    b, s, d = xin.shape
+    d_in, h, p = ssm_dims(cfg)
+    n = cfg.ssm_state
+    silu = table.lookup("silu")
+    softplus = table.lookup("softplus")      # flexible: dt nonlinearity
+
+    z = linear(xin, params["in_z"])                          # (B,S,d_in)
+    xproj = linear(xin, params["in_x"])
+    bproj = linear(xin, params["in_B"])
+    cproj = linear(xin, params["in_C"])
+    dt_raw = linear(xin, params["in_dt"])                    # (B,S,H)
+
+    xbc = jnp.concatenate([xproj, bproj, cproj], axis=-1)
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_B"], params["conv_C"]], axis=-1
+    )
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, conv_w, conv_state)
+    xbc = silu(xbc)                                          # flexible
+    xs = xbc[..., :d_in].astype(jnp.float32).reshape(b, s, h, p)
+    bmat = xbc[..., d_in : d_in + n].astype(jnp.float32)
+    cmat = xbc[..., d_in + n :].astype(jnp.float32)
+
+    dt = softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    ).astype(jnp.float32)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (H,) negative
+
+    if state is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+        y, h_new = mamba2_chunked(
+            xs, dt, a, bmat, cmat, params["d_skip"].astype(jnp.float32),
+            h0, cfg.ssm_chunk,
+        )
+    elif s == 1:
+        y, h_new = mamba2_step(
+            xs[:, 0], dt[:, 0], a, bmat[:, 0], cmat[:, 0],
+            params["d_skip"].astype(jnp.float32), state["h"],
+        )
+        y = y[:, None]
+    else:  # prefill with state
+        y, h_new = mamba2_chunked(
+            xs, dt, a, bmat, cmat, params["d_skip"].astype(jnp.float32),
+            state["h"], cfg.ssm_chunk,
+        )
+
+    y = y.reshape(b, s, d_in).astype(cfg.dtype)
+    y = rms_norm(y * silu(z), params["norm"], cfg.norm_eps)  # flexible gate
+    out = linear(y, params["out"])
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_new, "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state

@@ -1,0 +1,399 @@
+"""Generic transformer LM (dense / GQA / MLA / MoE / VLM) with
+scan-over-layers, remat, KV caches, and the uniform model API.
+
+Model API (shared by every arch family; see registry.py):
+
+  param_specs(cfg, minfo)                     -> ParamSpec tree
+  init(key, cfg, minfo)                       -> params
+  forward(params, cfg, batch, ...)            -> logits (B,S,V) [training]
+  loss(params, cfg, batch, ...)               -> scalar NLL
+  cache_specs(cfg, minfo, batch, max_len)     -> cache ParamSpec tree
+  prefill(params, cfg, batch, cache, ...)     -> (logits_last, cache)
+  decode_step(params, cfg, tokens, cache, pos, ...) -> (logits, cache)
+
+Layer stacking: homogeneous layers are scanned (params stacked on a
+leading L dim — HLO size is depth-independent); heterogeneous archs scan
+over *uniform groups* (VLM: [4 self + 1 cross] × G). Remat policy wraps
+the scanned body (cfg.remat: full | dots | none).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.function_table import DEFAULT_TABLE
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models.layers import MeshInfo, ParamSpec, _maybe
+from repro.models.mlp import mlp, mlp_param_specs
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Param specs.
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ModelConfig, m: MeshInfo, *, kind: str) -> dict:
+    """One decoder block. kind: dense | moe | cross."""
+    specs = {
+        "attn_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "mlp_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "attn": attn_lib.attn_param_specs(cfg, m),
+    }
+    if kind == "moe":
+        specs["moe"] = moe_lib.moe_param_specs(cfg, m)
+    else:
+        specs["mlp"] = mlp_param_specs(cfg, m)
+    if kind == "cross":
+        # gated cross-attention (llama-3.2-vision style: tanh gates)
+        specs["xattn"] = attn_lib.gqa_param_specs(cfg, m)
+        specs["xattn_norm"] = ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones")
+        specs["xattn_gate"] = ParamSpec((1,), jnp.float32, _maybe(m, None), "zeros")
+        specs["xmlp_gate"] = ParamSpec((1,), jnp.float32, _maybe(m, None), "zeros")
+    return specs
+
+
+def _layer_plan(cfg: ModelConfig) -> list[tuple[str, int]]:
+    """[(scan_group_kind, count)]: how layers stack into scans."""
+    if cfg.family == "vlm" and cfg.cross_attn_every:
+        n_groups = cfg.num_layers // cfg.cross_attn_every
+        return [("vlm_group", n_groups)]
+    if cfg.num_experts:
+        plan = []
+        if cfg.first_dense_layers:
+            plan.append(("dense", cfg.first_dense_layers))
+        plan.append(("moe", cfg.num_layers - cfg.first_dense_layers))
+        return plan
+    return [("dense", cfg.num_layers)]
+
+
+def param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    fsdp = tuple(m.fsdp) or None
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((L.padded_vocab(cfg.vocab_size), cfg.d_model),
+                           cfg.dtype, _maybe(m, "model", fsdp), "embed"),
+        "final_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "blocks": {},
+    }
+    for kind, count in _layer_plan(cfg):
+        if kind == "vlm_group":
+            n_self = cfg.cross_attn_every - 1
+            group = {
+                "self": L.stack_specs(_block_specs(cfg, m, kind="dense"), n_self),
+                "cross": _block_specs(cfg, m, kind="cross"),
+            }
+            specs["blocks"][kind] = L.stack_specs(group, count)
+        else:
+            specs["blocks"][kind] = L.stack_specs(
+                _block_specs(cfg, m, kind=kind), count
+            )
+    return specs
+
+
+def init(key: Array, cfg: ModelConfig, m: MeshInfo = L.HOST) -> dict:
+    return L.materialize(key, param_specs(cfg, m))
+
+
+# ---------------------------------------------------------------------------
+# Blocks.
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _decoder_block(p, cfg, x, positions, *, kind, table, minfo, mesh,
+                   cache=None, cache_pos=None, memory=None):
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)       # flexible
+    a, new_cache = attn_lib.attention(
+        p["attn"], cfg, h, positions, cache=cache, cache_pos=cache_pos,
+    )
+    x = x + a
+    if kind == "cross" and memory is not None:
+        h = L.rms_norm(x, p["xattn_norm"], cfg.norm_eps)
+        xa, _ = attn_lib.gqa_attention(
+            p["xattn"], cfg, h, positions, causal=False, memory=memory,
+        )
+        x = x + jnp.tanh(p["xattn_gate"]).astype(x.dtype) * xa
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)        # flexible
+    if kind == "moe":
+        y = moe_lib.moe(p["moe"], cfg, h, table=table, minfo=minfo, mesh=mesh)
+    else:
+        y = mlp(p["mlp"], cfg, h, table=table)
+    if kind == "cross" and memory is not None:
+        y = jnp.tanh(p["xmlp_gate"]).astype(x.dtype) * y
+    return x + y, new_cache
+
+
+def _boundary(x, cfg: ModelConfig):
+    """Layer-boundary activation sharding (the scan carry = what remat
+    saves for bwd). Levers (see EXPERIMENTS.md §Perf):
+      * seq_shard_acts: shard the sequence dim over "model" — saved
+        checkpoints shrink TP-fold (Megatron-SP at boundaries);
+      * tp_activations: weight-stationary TP — shard d_model over the
+        fsdp axes so weight matmuls contract locally (activation psums
+        replace per-microbatch FSDP weight all-gathers)."""
+    from repro.parallel.hints import constrain
+
+    if cfg.tp_activations and cfg.seq_shard_acts:
+        return constrain(x, (None, "model", "fsdp"))
+    if cfg.tp_activations:
+        return constrain(x, (None, None, "fsdp"))
+    if cfg.seq_shard_acts:
+        return constrain(x, ("batch", "model", None))
+    return x
+
+
+def _unboundary(x, cfg: ModelConfig):
+    """Restore batch-sharded layout before the unembed projection."""
+    from repro.parallel.hints import constrain
+
+    if cfg.tp_activations or cfg.seq_shard_acts:
+        return constrain(x, ("batch", None, None))
+    return x
+
+
+def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
+               caches=None, cache_pos=None, memory=None):
+    """Run every scan group in the layer plan. caches mirrors blocks."""
+    new_caches: dict[str, Any] = {}
+    x = _boundary(x, cfg)
+    for kind, count in _layer_plan(cfg):
+        p_stack = params["blocks"][kind]
+        c_stack = caches.get(kind) if caches else None
+
+        if kind == "vlm_group":
+            def cross_body(x, p_cross, c_cross):
+                return _decoder_block(
+                    p_cross, cfg, x, positions, kind="cross", table=table,
+                    minfo=minfo, mesh=mesh, memory=memory,
+                    cache=c_cross, cache_pos=cache_pos,
+                )
+
+            def group_body(x, xs):
+                p_g, c_g = xs
+
+                def self_body(x, xs_inner):
+                    p_l, c_l = xs_inner
+                    y, nc = _decoder_block(
+                        p_l, cfg, x, positions, kind="dense", table=table,
+                        minfo=minfo, mesh=mesh, cache=c_l, cache_pos=cache_pos,
+                    )
+                    return y, nc
+
+                c_self = c_g["self"] if c_g else None
+                x, nc_self = jax.lax.scan(
+                    _remat(self_body, cfg), x, (p_g["self"], c_self),
+                )
+                y, nc_cross = _remat(cross_body, cfg)(
+                    x, p_g["cross"], c_g["cross"] if c_g else None,
+                )
+                return y, {"self": nc_self, "cross": nc_cross}
+
+            if cfg.cache_in_carry and c_stack is not None:
+                # carry the full (G, ...) cache tree; update group g's
+                # slice in place (same aliasing win as the dense branch).
+                def group_carry_body(carry, p_g):
+                    x, cache_full, g = carry
+                    c_g = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, g, 0, keepdims=False), cache_full,
+                    )
+                    y, nc_g = group_body_inner(x, p_g, c_g)
+                    cache_full = jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u.astype(a.dtype), g, 0),
+                        cache_full, nc_g,
+                    )
+                    return (y, cache_full, g + 1), None
+
+                def group_body_inner(x, p_g, c_g):
+                    def self_body(x, xs_inner):
+                        p_l, c_l = xs_inner
+                        y, nc = _decoder_block(
+                            p_l, cfg, x, positions, kind="dense", table=table,
+                            minfo=minfo, mesh=mesh, cache=c_l,
+                            cache_pos=cache_pos,
+                        )
+                        return _boundary(y, cfg), nc
+
+                    x, nc_self = jax.lax.scan(
+                        _remat(self_body, cfg), x, (p_g["self"], c_g["self"]),
+                    )
+                    y, nc_cross = _remat(cross_body, cfg)(
+                        x, p_g["cross"], c_g["cross"],
+                    )
+                    return _boundary(y, cfg), {"self": nc_self,
+                                               "cross": nc_cross}
+
+                (x, nc, _), _ = jax.lax.scan(
+                    group_carry_body, (x, c_stack, jnp.int32(0)), p_stack,
+                )
+            else:
+                x, nc = jax.lax.scan(
+                    group_body, x,
+                    (p_stack, c_stack) if c_stack is not None else (p_stack, None),
+                )
+            new_caches[kind] = nc
+        else:
+            def body(x, xs, kind=kind):
+                p_l, c_l = xs
+                y, nc = _decoder_block(
+                    p_l, cfg, x, positions, kind=kind, table=table,
+                    minfo=minfo, mesh=mesh, cache=c_l, cache_pos=cache_pos,
+                )
+                return _boundary(y, cfg), nc
+
+            if cfg.scan_layers and cfg.cache_in_carry and c_stack is not None:
+                # cache in the CARRY, updated in place per layer: XLA can
+                # alias the (donated) cache buffer through the loop instead
+                # of restacking ys (which doubles peak memory on decode —
+                # EXPERIMENTS.md §Perf, deepseek-7b decode_32k iteration).
+                def carry_body(carry, p_l, kind=kind):
+                    x, cache_full, idx = carry
+                    c_l = jax.tree.map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, idx, 0, keepdims=False), cache_full,
+                    )
+                    y, nc = _decoder_block(
+                        p_l, cfg, x, positions, kind=kind, table=table,
+                        minfo=minfo, mesh=mesh, cache=c_l,
+                        cache_pos=cache_pos,
+                    )
+                    cache_full = jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u.astype(a.dtype), idx, 0),
+                        cache_full, nc,
+                    )
+                    return (_boundary(y, cfg), cache_full, idx + 1), None
+
+                (x, nc, _), _ = jax.lax.scan(
+                    lambda c, p: _remat(carry_body, cfg)(c, p),
+                    (x, c_stack, jnp.int32(0)), p_stack,
+                )
+            elif cfg.scan_layers:
+                x, nc = jax.lax.scan(
+                    _remat(body, cfg), x,
+                    (p_stack, c_stack) if c_stack is not None else (p_stack, None),
+                )
+            else:
+                ncs = []
+                for i in range(count):
+                    p_l = jax.tree.map(lambda a: a[i], p_stack)
+                    c_l = jax.tree.map(lambda a: a[i], c_stack) if c_stack else None
+                    x, nc_i = body(x, (p_l, c_l))
+                    ncs.append(nc_i)
+                nc = (
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+                    if ncs and ncs[0] is not None else None
+                )
+            new_caches[kind] = nc
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Public API.
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+            minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    """Training forward: batch {"tokens": (B,S) [, "image_embeds"]}."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = batch.get("image_embeds")
+    x, _ = _run_stack(params, cfg, x, positions, table=table, minfo=minfo,
+                      mesh=mesh, memory=memory)
+    x = _unboundary(x, cfg)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+         minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    logits = forward(params, cfg, batch, table=table, minfo=minfo, mesh=mesh)
+    return L.softmax_cross_entropy(
+        logits[:, :-1, :].reshape(-1, logits.shape[-1]),
+        batch["labels"][:, 1:].reshape(-1),
+        vocab=cfg.vocab_size,
+    )
+
+
+def cache_specs(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
+    out: dict[str, Any] = {}
+    for kind, count in _layer_plan(cfg):
+        if kind == "vlm_group":
+            n_self = cfg.cross_attn_every - 1
+            out[kind] = {
+                "self": attn_lib.kv_cache_specs(
+                    cfg, m, batch, max_len, count * n_self
+                ),
+                "cross": attn_lib.kv_cache_specs(cfg, m, batch, max_len, count),
+            }
+            # reshape leading (G*n,...) -> (G, n, ...) for the nested scan
+            out[kind]["self"] = jax.tree.map(
+                lambda sp: ParamSpec((count, n_self, *sp.shape[1:]), sp.dtype,
+                                     _maybe(m, None, *sp.pspec), sp.init),
+                out[kind]["self"], is_leaf=L.is_spec,
+            )
+            out[kind]["cross"] = jax.tree.map(
+                lambda sp: ParamSpec((count, *sp.shape[1:]), sp.dtype,
+                                     sp.pspec, sp.init),
+                out[kind]["cross"], is_leaf=L.is_spec,
+            )
+        else:
+            out[kind] = attn_lib.kv_cache_specs(cfg, m, batch, max_len, count)
+    return out
+
+
+def init_cache(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
+    return L.materialize(jax.random.PRNGKey(0), cache_specs(cfg, m, batch, max_len))
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
+            table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, new_cache = _run_stack(
+        params, cfg, x, positions, table=table, minfo=minfo, mesh=mesh,
+        caches=cache, cache_pos=jnp.int32(0),
+        memory=batch.get("image_embeds"),
+    )
+    x = _unboundary(x, cfg)
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
+                pos: Array, *, table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST,
+                mesh=None, memory: Array | None = None):
+    """One token: tokens (B, 1), pos scalar int32 (current length)."""
+    b = tokens.shape[0]
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x, new_cache = _run_stack(
+        params, cfg, x, positions, table=table, minfo=minfo, mesh=mesh,
+        caches=cache, cache_pos=pos, memory=memory,
+    )
+    x = _unboundary(x, cfg)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_cache

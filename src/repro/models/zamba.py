@@ -1,0 +1,208 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block.
+
+Layer plan for num_layers=81, attn_every=6:
+  13 groups of [6 mamba2 layers, then the shared attn+MLP block] + 3 tail
+  mamba2 layers. The shared block's weights are reused at every
+  invocation (zamba2's parameter-sharing trick) but each invocation keeps
+  its OWN KV cache (13 cache slots).
+
+long_500k runs here: the 81 mamba states are O(1) in sequence length and
+only the 13 shared-attn invocations keep (sharded) 500k KV caches —
+the hybrid's selling point, and why this arch keeps the long cell while
+pure-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.function_table import DEFAULT_TABLE
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+from repro.models.layers import MeshInfo, ParamSpec, _maybe
+from repro.models.mlp import mlp, mlp_param_specs
+
+Array = jax.Array
+
+
+def _plan(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, n_tail)."""
+    n_groups = cfg.num_layers // cfg.attn_every
+    return n_groups, cfg.num_layers - n_groups * cfg.attn_every
+
+
+def param_specs(cfg: ModelConfig, m: MeshInfo) -> dict:
+    fsdp = tuple(m.fsdp) or None
+    n_groups, n_tail = _plan(cfg)
+    mamba = ssm_lib.mamba2_param_specs(cfg, m)
+    shared = {
+        "attn_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "mlp_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "attn": attn_lib.gqa_param_specs(cfg, m),
+        "mlp": mlp_param_specs(cfg, m),
+    }
+    specs = {
+        "embed": ParamSpec((L.padded_vocab(cfg.vocab_size), cfg.d_model),
+                           cfg.dtype, _maybe(m, "model", fsdp), "embed"),
+        "final_norm": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones"),
+        "mamba_norm": L.stack_specs(
+            {"w": ParamSpec((cfg.d_model,), cfg.dtype, _maybe(m, None), "ones")},
+            cfg.num_layers,
+        ),
+        "groups": L.stack_specs(L.stack_specs(mamba, cfg.attn_every), n_groups),
+        "shared": shared,  # ONE copy — reused by all 13 invocations
+    }
+    if n_tail:
+        specs["tail"] = L.stack_specs(mamba, n_tail)
+    return specs
+
+
+def init(key, cfg: ModelConfig, m: MeshInfo = L.HOST) -> dict:
+    return L.materialize(key, param_specs(cfg, m))
+
+
+def state_specs(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
+    n_groups, n_tail = _plan(cfg)
+    ssm = ssm_lib.ssm_state_specs(cfg, m, batch, cfg.num_layers)
+    return {
+        "ssm": ssm,  # leading dim = num_layers (group-major then tail)
+        "kv": attn_lib.kv_cache_specs(cfg, m, batch, max_len, n_groups),
+    }
+
+
+def cache_specs(cfg, m, batch, max_len):
+    return state_specs(cfg, m, batch, max_len)
+
+
+def init_cache(cfg, m, batch, max_len):
+    return L.materialize(jax.random.PRNGKey(0), state_specs(cfg, m, batch, max_len))
+
+
+def _remat(fn, cfg):
+    return fn if cfg.remat == "none" else jax.checkpoint(fn)
+
+
+def _shared_block(params, cfg, x, positions, *, table, cache=None,
+                  cache_pos=None):
+    p = params["shared"]
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    a, nc = attn_lib.gqa_attention(p["attn"], cfg, h, positions,
+                                   cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h = L.rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    return x + mlp(p["mlp"], cfg, h, table=table), nc
+
+
+def _run(params, cfg: ModelConfig, x, positions, *, table,
+         state=None, cache_pos=None):
+    n_groups, n_tail = _plan(cfg)
+    per = cfg.attn_every
+    norms = params["mamba_norm"]["w"]          # (num_layers, D)
+
+    def mamba_body(x, xs, base_idx=None):
+        p_l, norm_w, s_l = xs
+        h = L.rms_norm(x, norm_w, cfg.norm_eps)
+        y, ns = ssm_lib.mamba2_block(p_l, cfg, h, table=table, state=s_l)
+        return x + y, ns
+
+    # group-major state slicing: ssm states [g*per:(g+1)*per], kv slot g
+    def group_body(x, xs):
+        p_g, norm_g, s_g, kv_g = xs
+
+        x, ns = jax.lax.scan(_remat(mamba_body, cfg), x, (p_g, norm_g, s_g))
+        x, nkv = _remat(
+            lambda x, kv: _shared_block(params, cfg, x, positions, table=table,
+                                        cache=kv, cache_pos=cache_pos),
+            cfg,
+        )(x, kv_g)
+        return x, (ns, nkv)
+
+    if state is not None:
+        ssm_states = state["ssm"]
+        group_ssm = jax.tree.map(
+            lambda a: a[: n_groups * per].reshape(n_groups, per, *a.shape[1:]),
+            ssm_states,
+        )
+        tail_ssm = jax.tree.map(lambda a: a[n_groups * per:], ssm_states)
+        kv = state["kv"]
+    else:
+        group_ssm = tail_ssm = kv = None
+
+    group_norms = norms[: n_groups * per].reshape(n_groups, per, -1)
+    x, (new_group_ssm, new_kv) = jax.lax.scan(
+        group_body, x, (params["groups"], group_norms, group_ssm, kv),
+    )
+
+    new_state = None
+    if n_tail:
+        tail_norms = norms[n_groups * per:]
+        x, new_tail_ssm = jax.lax.scan(
+            _remat(mamba_body, cfg), x,
+            (params["tail"], {"w": tail_norms}["w"], tail_ssm),
+        )
+    if state is not None:
+        flat_group = jax.tree.map(
+            lambda a: a.reshape(n_groups * per, *a.shape[2:]), new_group_ssm
+        )
+        if n_tail:
+            new_ssm = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0),
+                flat_group, new_tail_ssm,
+            )
+        else:
+            new_ssm = flat_group
+        new_state = {"ssm": new_ssm, "kv": new_kv}
+    return x, new_state
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+            minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, _ = _run(params, cfg, x, positions, table=table)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"])
+
+
+def loss(params, cfg: ModelConfig, batch: dict, *, table=DEFAULT_TABLE,
+         minfo: MeshInfo = L.HOST, mesh=None) -> Array:
+    logits = forward(params, cfg, batch, table=table, minfo=minfo, mesh=mesh)
+    return L.softmax_cross_entropy(
+        logits[:, :-1, :].reshape(-1, logits.shape[-1]),
+        batch["labels"][:, 1:].reshape(-1),
+        vocab=cfg.vocab_size,
+    )
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
+            table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, new_state = _run(params, cfg, x, positions, table=table,
+                        state=cache, cache_pos=jnp.int32(0))
+    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_state
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
+                pos: Array, *, table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST,
+                mesh=None, memory=None):
+    b = tokens.shape[0]
+    x = L.embed_lookup(params["embed"], tokens,
+                       sharded="model" in minfo.axis_names)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    x, new_state = _run(params, cfg, x, positions, table=table,
+                        state=cache, cache_pos=pos)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(x, params["embed"]), new_state

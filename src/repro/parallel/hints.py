@@ -1,0 +1,56 @@
+"""Activation-sharding hints (with_sharding_constraint at hot boundaries).
+
+XLA's SPMD sharding propagation loses the batch sharding of attention
+activations through the reshape -> transpose -> scan-slice chain (found
+via loop-aware HLO analysis: attention ran batch-REPLICATED over the data
+axis — a 16x compute blowup on the production mesh; EXPERIMENTS.md §Perf
+iteration 2). Step builders install the mesh here; models call
+``constrain`` at layout boundaries. No-op when no mesh is installed
+(single-device smoke tests).
+
+Slots: "batch" -> the fsdp/batch axes, "model" -> the TP axis, None.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current():
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh, minfo):
+    prev = _current()
+    _STATE.ctx = (mesh, minfo) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def constrain(x, dims: tuple):
+    """dims: per-axis slot names ("batch" | "model" | None)."""
+    ctx = _current()
+    if ctx is None or x is None:
+        return x
+    mesh, minfo = ctx
+    from repro.models.layers import sanitize_pspec
+
+    entries = []
+    for d in dims:
+        if d == "batch" or d == "fsdp":
+            entries.append(tuple(minfo.fsdp) or None)
+        elif d == "model":
+            entries.append("model" if "model" in minfo.axis_names else None)
+        else:
+            entries.append(None)
+    spec = sanitize_pspec(mesh, P(*entries), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

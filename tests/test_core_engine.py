@@ -1,0 +1,128 @@
+"""Engine behaviour: the paper's three designs over one task."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_TABLE,
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    StaticOp,
+    account,
+    build_monolithic,
+    estimate,
+    make_default_table,
+    normalized_edp,
+    run,
+    segment_static_chains,
+)
+
+
+def _mm(w, x):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@pytest.fixture
+def mlp_graph():
+    b, d, f = 8, 64, 256
+    return LayerGraph(
+        name="mlp",
+        ops=(
+            StaticOp("w1", _mm, (b, f), flops=2 * b * d * f, weight_bytes=d * f * 4),
+            FlexibleOp("softplus", (b, f)),
+            StaticOp("w2", _mm, (b, d), flops=2 * b * f * d, weight_bytes=f * d * 4),
+        ),
+        in_shape=(b, d),
+    )
+
+
+@pytest.fixture
+def mlp_params():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return {
+        "w1": jax.random.normal(k1, (64, 256), jnp.float32) * 0.05,
+        "w2": jax.random.normal(k2, (256, 64), jnp.float32) * 0.05,
+    }
+
+
+def test_modes_numerically_identical(mlp_graph, mlp_params):
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 64), jnp.float32)
+    outs = {
+        m: np.asarray(run(mlp_graph, mlp_params, x, m).output)
+        for m in ExecutionMode
+    }
+    ref = outs[ExecutionMode.MONOLITHIC]
+    for m, o in outs.items():
+        np.testing.assert_allclose(o, ref, rtol=1e-5, atol=1e-6, err_msg=str(m))
+
+
+def test_launch_counts(mlp_graph, mlp_params):
+    x = jnp.zeros((8, 64), jnp.float32)
+    assert run(mlp_graph, mlp_params, x, ExecutionMode.MONOLITHIC).launches == 1
+    assert run(mlp_graph, mlp_params, x, ExecutionMode.FLEXIBLE_DMA).launches == 2
+    assert run(mlp_graph, mlp_params, x, ExecutionMode.SIDEBAR).launches == 1
+
+
+def test_segmentation(mlp_graph):
+    chains = segment_static_chains(mlp_graph)
+    assert len(chains) == 2  # [w1, softplus], [w2]
+
+
+def test_accounting_modes_differ_only_in_movement(mlp_graph):
+    a_mono = account(mlp_graph, ExecutionMode.MONOLITHIC)
+    a_dma = account(mlp_graph, ExecutionMode.FLEXIBLE_DMA)
+    a_sb = account(mlp_graph, ExecutionMode.SIDEBAR)
+    # same static work everywhere
+    assert a_mono.mxu_flops == a_dma.mxu_flops == a_sb.mxu_flops
+    assert a_mono.hbm_weight_bytes == a_dma.hbm_weight_bytes == a_sb.hbm_weight_bytes
+    # only flexible-DMA round-trips intermediates through HBM
+    assert a_dma.hbm_intermediate_bytes > 0
+    assert a_mono.hbm_intermediate_bytes == a_sb.hbm_intermediate_bytes == 0
+    # only the sidebar uses sidebar traffic + handshakes
+    assert a_sb.sidebar_bytes > 0 and a_sb.handshakes == 2
+    assert a_dma.sidebar_bytes == 0
+
+
+def test_paper_ordering_edp(mlp_graph):
+    ests = {
+        m.value: estimate(account(mlp_graph, m)) for m in ExecutionMode
+    }
+    norm = normalized_edp(ests)
+    # Figure 8: flexible-DMA much worse; sidebar close to monolithic
+    assert norm["flexible_dma"] > 1.3
+    assert 1.0 <= norm["sidebar"] < 1.3
+    assert norm["sidebar"] < norm["flexible_dma"]
+
+
+def test_monolithic_is_frozen_at_build(mlp_graph, mlp_params):
+    """The paper's central claim about fixed-function hardware: changing
+    the algorithm after 'tape-out' does not change the monolithic design,
+    but the sidebar design picks it up via the function table."""
+    table = make_default_table()
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 64), jnp.float32)
+    mono = build_monolithic(mlp_graph, table)
+    before = np.asarray(mono(mlp_params, x))
+
+    # the field discovers a better activation: hot-swap softplus
+    table.register("softplus", lambda v: jnp.maximum(v, 0.0), overwrite=True)
+
+    after = np.asarray(mono(mlp_params, x))
+    np.testing.assert_array_equal(before, after)  # frozen silicon
+
+    sidebar_out = np.asarray(
+        run(mlp_graph, mlp_params, x, ExecutionMode.SIDEBAR, table).output
+    )
+    assert not np.allclose(sidebar_out, before)  # flexible design updated
+
+
+def test_sidebar_stats_collected(mlp_graph, mlp_params):
+    x = jnp.ones((8, 64), jnp.float32)
+    res = run(mlp_graph, mlp_params, x, ExecutionMode.SIDEBAR)
+    st = res.sidebar.stats
+    assert st.host_invocations == 1
+    assert st.handshakes == 2
+    assert st.bytes_written_acc == 8 * 256 * 4
+    assert st.bytes_read_host == 8 * 256 * 4

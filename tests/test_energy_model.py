@@ -1,0 +1,98 @@
+"""Energy-model invariants — hypothesis property tests.
+
+The analytical model must be *ordered* the way the paper's measurements
+are, for any workload in a broad parameter space, not just LeNet.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+from hypothesis import given, settings
+
+from repro.core import (
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    StaticOp,
+    account,
+    estimate,
+)
+
+
+def _graph(b, d, f, act, itemsize=4):
+    def mm(w, x):
+        return x
+
+    return LayerGraph(
+        name="g",
+        ops=(
+            StaticOp("w1", mm, (b, f), flops=2 * b * d * f,
+                     weight_bytes=d * f * itemsize),
+            FlexibleOp(act, (b, f)),
+            StaticOp("w2", mm, (b, d), flops=2 * b * f * d,
+                     weight_bytes=f * d * itemsize),
+        ),
+        in_shape=(b, d),
+        itemsize=itemsize,
+    )
+
+
+dims = st.integers(min_value=1, max_value=64).map(lambda v: v * 8)
+acts = st.sampled_from(["relu", "sigmoid", "tanh", "softplus", "gelu", "silu"])
+
+
+@given(b=dims, d=dims, f=dims, act=acts)
+@settings(max_examples=80, deadline=None)
+def test_flexible_dma_never_cheaper(b, d, f, act):
+    g = _graph(b, d, f, act)
+    e = {m: estimate(account(g, m)) for m in ExecutionMode}
+    assert e[ExecutionMode.FLEXIBLE_DMA].energy_j >= e[ExecutionMode.SIDEBAR].energy_j
+    assert e[ExecutionMode.FLEXIBLE_DMA].latency_s >= e[ExecutionMode.SIDEBAR].latency_s
+    assert e[ExecutionMode.FLEXIBLE_DMA].edp >= e[ExecutionMode.SIDEBAR].edp
+
+
+@given(b=dims, d=dims, f=dims, act=acts)
+@settings(max_examples=80, deadline=None)
+def test_sidebar_close_to_monolithic_and_above(b, d, f, act):
+    g = _graph(b, d, f, act)
+    e = {m: estimate(account(g, m)) for m in ExecutionMode}
+    mono, sb = e[ExecutionMode.MONOLITHIC], e[ExecutionMode.SIDEBAR]
+    # sidebar pays a nonnegative, bounded premium over fixed-function HW
+    assert sb.energy_j >= mono.energy_j * 0.999
+    assert sb.edp <= mono.edp * 3.0  # stays the same order of magnitude
+
+
+@given(b=dims, d=dims, f=dims)
+@settings(max_examples=40, deadline=None)
+def test_costlier_activation_widens_dma_gap(b, d, f):
+    """Paper §6.1: softplus widens the flexible-DMA gap more than the
+    sidebar gap (both measured against monolithic)."""
+    def gaps(act):
+        g = _graph(b, d, f, act)
+        e = {m: estimate(account(g, m)) for m in ExecutionMode}
+        mono = e[ExecutionMode.MONOLITHIC].latency_s
+        return (
+            e[ExecutionMode.FLEXIBLE_DMA].latency_s - mono,
+            e[ExecutionMode.SIDEBAR].latency_s - mono,
+        )
+
+    dma_relu, sb_relu = gaps("relu")
+    dma_sp, sb_sp = gaps("softplus")
+    assert dma_sp - dma_relu >= sb_sp - sb_relu  # DMA gap grows faster
+
+
+@given(b=dims, d=dims, f=dims, act=acts, scale=st.integers(2, 8))
+@settings(max_examples=40, deadline=None)
+def test_energy_monotone_in_workload(b, d, f, act, scale):
+    small = estimate(account(_graph(b, d, f, act), ExecutionMode.SIDEBAR))
+    big = estimate(account(_graph(b * scale, d, f, act), ExecutionMode.SIDEBAR))
+    assert big.energy_j > small.energy_j
+    assert big.latency_s >= small.latency_s
+
+
+@given(b=dims, d=dims, f=dims, act=acts)
+@settings(max_examples=40, deadline=None)
+def test_breakdown_sums_to_total(b, d, f, act):
+    for m in ExecutionMode:
+        e = estimate(account(_graph(b, d, f, act), m))
+        total = e.e_hbm_j + e.e_sidebar_j + e.e_compute_j + e.e_static_j
+        assert abs(total - e.energy_j) < 1e-12 * max(1.0, e.energy_j)

@@ -1,0 +1,115 @@
+"""Fault tolerance: watchdog behaviour + restartable trainer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.configs.base import ShapeCell, TrainConfig
+from repro.ft.watchdog import StragglerWatchdog, Verdict
+from repro.launch.train import Trainer
+
+CELL = ShapeCell("smoke", seq_len=16, global_batch=4, kind="train")
+
+
+# --------------------------- watchdog ---------------------------------------
+
+def test_watchdog_quiet_on_steady_steps():
+    wd = StragglerWatchdog(min_samples=4)
+    for _ in range(50):
+        assert wd.observe(0.10) is Verdict.OK
+    assert wd.history == []
+
+
+def test_watchdog_flags_stragglers_and_escalates():
+    wd = StragglerWatchdog(min_samples=4, warn_after=2, evict_after=4)
+    for _ in range(16):
+        wd.observe(0.10)
+    verdicts = [wd.observe(1.0) for _ in range(4)]
+    assert verdicts[0] is Verdict.OK      # single event: log only
+    assert verdicts[1] is Verdict.WARN
+    assert verdicts[3] is Verdict.EVICT
+    assert len(wd.history) == 4
+
+
+def test_watchdog_straggler_not_poisoning_baseline():
+    wd = StragglerWatchdog(min_samples=4)
+    for _ in range(16):
+        wd.observe(0.10)
+    wd.observe(10.0)  # huge outlier
+    assert abs(wd.median_step_s - 0.10) < 1e-9  # baseline unchanged
+
+
+def test_watchdog_tolerates_jitter():
+    wd = StragglerWatchdog(min_samples=8)
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        v = wd.observe(0.1 + rng.normal(0, 0.004))
+        assert v is Verdict.OK
+
+
+# --------------------------- trainer ----------------------------------------
+
+@pytest.fixture
+def tiny():
+    cfg = cfglib.get_smoke_config("deepseek-7b")
+    tcfg = TrainConfig(microbatch_per_device=4, warmup_steps=2,
+                       learning_rate=1e-3)
+    return cfg, tcfg
+
+
+def test_trainer_runs_and_checkpoints(tmp_path, tiny):
+    cfg, tcfg = tiny
+    tr = Trainer(cfg, tcfg, CELL, ckpt_dir=str(tmp_path), ckpt_every=2)
+    rep = tr.run(4)
+    assert rep.steps_run == 4
+    assert tr.ckpt.latest_step() == 4
+    assert np.isfinite(rep.final_loss)
+
+
+def test_trainer_resume_is_bitwise_deterministic(tmp_path, tiny):
+    """Kill after step 3, resume, finish at 6 == uninterrupted 6-step run.
+    This is the checkpoint/restart contract at the heart of FT."""
+    cfg, tcfg = tiny
+    a = Trainer(cfg, tcfg, CELL, ckpt_dir=str(tmp_path / "a"), ckpt_every=3)
+    rep_a = a.run(3)          # 'preemption' right after a checkpoint
+    assert a.ckpt.latest_step() == 3
+    a2 = Trainer(cfg, tcfg, CELL, ckpt_dir=str(tmp_path / "a"), ckpt_every=3)
+    rep_resumed = a2.run(6)
+    assert rep_resumed.resumed_from == 3
+
+    b = Trainer(cfg, tcfg, CELL, ckpt_dir=str(tmp_path / "b"), ckpt_every=100)
+    rep_b = b.run(6)
+
+    np.testing.assert_allclose(rep_resumed.losses, rep_b.losses[3:],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_trainer_eviction_hook_fires(tmp_path, tiny):
+    cfg, tcfg = tiny
+    evicted = []
+    wd = StragglerWatchdog(min_samples=2, warn_after=1, evict_after=2)
+    tr = Trainer(
+        cfg, tcfg, CELL, ckpt_dir=str(tmp_path), ckpt_every=100,
+        watchdog=wd, on_evict=lambda: evicted.append(True),
+    )
+    # steps 0-5 normal, 6+ straggling badly (simulated slow host)
+    times = lambda step: 0.1 if step < 6 else 5.0
+    rep = tr.run(9, inject_step_times=times)
+    assert rep.straggler_events >= 2
+    assert rep.evictions >= 1 and evicted
+    # eviction checkpointed synchronously
+    assert tr.ckpt.latest_step() is not None
+
+
+def test_trainer_data_stream_restart_alignment(tiny):
+    """Data pipeline is step-keyed: the resumed stream must serve the
+    same batches the original run would have seen."""
+    from repro.data import pipeline
+
+    cfg, _ = tiny
+    b1 = pipeline.make_batch(cfg, CELL, step=7)
+    b2 = pipeline.make_batch(cfg, CELL, step=7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = pipeline.make_batch(cfg, CELL, step=8)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])

@@ -1,0 +1,58 @@
+"""Host function table semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FunctionTable, make_default_table
+from repro.core.constants import FLEXIBLE_OP_COST
+
+
+def test_paper_table1_present():
+    t = make_default_table()
+    for name in ("heaviside", "tanh", "sigmoid", "relu", "leaky_relu",
+                 "elu", "softplus"):
+        assert name in t, f"paper Table 1 activation {name} missing"
+
+
+def test_register_duplicate_requires_overwrite():
+    t = FunctionTable()
+    t.register("f", lambda x: x)
+    with pytest.raises(ValueError, match="already registered"):
+        t.register("f", lambda x: x)
+    t.register("f", lambda x: x + 1, overwrite=True)  # the upgrade path
+
+
+def test_version_bumps_on_mutation():
+    t = FunctionTable()
+    v0 = t.version
+    t.register("f", lambda x: x)
+    assert t.version == v0 + 1
+    t.unregister("f")
+    assert t.version == v0 + 2
+
+
+def test_unknown_lookup_message():
+    t = make_default_table()
+    with pytest.raises(KeyError, match="not in the function table"):
+        t.lookup("mystery_activation_2030")
+
+
+def test_costs_encode_relu_softplus_asymmetry():
+    t = make_default_table()
+    assert t.cost("softplus") > 5 * t.cost("relu")
+    assert t.cost("relu") == FLEXIBLE_OP_COST["relu"]
+
+
+def test_numerics_match_closed_forms():
+    t = make_default_table()
+    x = jnp.linspace(-4, 4, 33, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        t.lookup("softplus")(x), np.log1p(np.exp(np.asarray(x))), rtol=1e-5
+    )
+    np.testing.assert_allclose(
+        t.lookup("squared_relu")(x), np.maximum(np.asarray(x), 0) ** 2, rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        t.lookup("exp_decay")(x), np.exp(-np.exp(np.asarray(x))), rtol=1e-5
+    )

@@ -1,0 +1,75 @@
+"""SidebarBuffer protocol model: ownership, placement, capacity."""
+
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_TABLE, Owner, SidebarBuffer, SidebarCall
+from repro.core.sidebar import CONTROL_BYTES, SidebarProtocolError, required_capacity
+
+
+def test_placement_and_rw():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 256)
+    arr = np.arange(64, dtype=np.float32)
+    sb.write(Owner.ACCELERATOR, "a", arr)
+    out = sb.read(Owner.ACCELERATOR, "a")
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_wrong_owner_raises():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 256)
+    with pytest.raises(SidebarProtocolError, match="owned by accelerator"):
+        sb.write(Owner.HOST, "a", np.zeros(4, np.float32))
+
+
+def test_ownership_transfer_counts_handshakes():
+    sb = SidebarBuffer(4096)
+    sb.pass_ownership(Owner.HOST)
+    sb.pass_ownership(Owner.ACCELERATOR)
+    assert sb.stats.handshakes == 2
+    with pytest.raises(SidebarProtocolError):
+        sb.pass_ownership(Owner.ACCELERATOR)  # already owner
+
+
+def test_capacity_overflow():
+    sb = SidebarBuffer(1024)
+    with pytest.raises(SidebarProtocolError, match="overflow"):
+        sb.allocate("big", 2048)
+
+
+def test_write_exceeding_region():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 64)
+    with pytest.raises(SidebarProtocolError, match="exceeds region"):
+        sb.write(Owner.ACCELERATOR, "a", np.zeros(64, np.float32))  # 256 B
+
+
+def test_read_before_write():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 64)
+    with pytest.raises(SidebarProtocolError, match="never written"):
+        sb.read(Owner.ACCELERATOR, "a")
+
+
+def test_full_invocation_cycle():
+    sb = SidebarBuffer(required_capacity((16,), 4, copies=2))
+    sb.allocate("in", 64)
+    sb.allocate("out", 64)
+    x = np.linspace(-1, 1, 16).astype(np.float32)
+    sb.write(Owner.ACCELERATOR, "in", x)
+    sb.invoke_host(
+        SidebarCall("relu", ("in",), ("out",), 16), DEFAULT_TABLE
+    )
+    out = sb.read(Owner.ACCELERATOR, "out")
+    np.testing.assert_allclose(out, np.maximum(x, 0))
+    assert sb.owner is Owner.ACCELERATOR
+    assert sb.stats.host_invocations == 1
+
+
+def test_free_all_resets_intermediates_only():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 64)
+    sb.free_all()
+    sb.allocate("a", 64)  # re-placeable after task end
+    assert sb.utilization() > 0

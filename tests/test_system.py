@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's LeNet workload through the full engine in all three modes:
+numerics identical, costs ordered as in Figures 6-8, sidebar capacity
+respected, policy choices sane. Plus the multi-device distribution path
+(run in a subprocess so the main test process keeps 1 device).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_TABLE,
+    AutoPolicy,
+    ExecutionMode,
+    account_model,
+    estimate,
+    normalized_edp,
+    run,
+)
+from repro.models import lenet
+
+
+@pytest.fixture(scope="module")
+def lenet_setup():
+    lenet.register_pooling(DEFAULT_TABLE)
+    params = lenet.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 32, 32), jnp.float32)
+    graphs = lenet.to_layer_graphs(batch=8, activation="relu")
+    return params, x, graphs
+
+
+def test_lenet_three_modes_equal(lenet_setup):
+    params, x, graphs = lenet_setup
+    eng_params = lenet.engine_params(params)
+    outs = {}
+    for mode in ExecutionMode:
+        out = x
+        for g in graphs:
+            out = run(g, eng_params, out, mode, DEFAULT_TABLE).output
+        outs[mode] = np.asarray(out)
+    ref = lenet.forward(params, x, DEFAULT_TABLE.lookup("relu"))
+    for mode, o in outs.items():
+        np.testing.assert_allclose(o, np.asarray(ref), rtol=1e-4, atol=1e-5,
+                                   err_msg=str(mode))
+
+
+@pytest.mark.parametrize("act", ["relu", "softplus"])
+def test_lenet_paper_bands(lenet_setup, act):
+    """Paper §6: flexible-DMA +8-14% latency / +32% energy / ~+50% EDP;
+    sidebar <=2% latency / +6% energy / +7% EDP. Our hardware model is a
+    TPU not the paper's gem5 SoC, so we assert the bands loosely: the
+    ordering, the sign, and the magnitude class."""
+    graphs = lenet.to_layer_graphs(batch=256, activation=act)
+    ests = {
+        m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
+        for m in ExecutionMode
+    }
+    lat = {k: v.latency_s for k, v in ests.items()}
+    edp = normalized_edp(ests)
+    # ordering
+    assert lat["monolithic"] <= lat["sidebar"] < lat["flexible_dma"]
+    # sidebar latency within ~10% of monolithic; DMA at least 8% worse
+    assert lat["sidebar"] / lat["monolithic"] < 1.10
+    assert lat["flexible_dma"] / lat["monolithic"] > 1.08
+    # EDP: sidebar slight increase; flexible-DMA >= ~1.3x
+    assert edp["sidebar"] < 1.25
+    assert edp["flexible_dma"] > 1.30
+
+
+def test_lenet_softplus_widens_dma_gap(lenet_setup):
+    """Paper §6.1: a costlier activation widens the flexible-DMA gap while
+    the sidebar stays ~flat. We assert the ABSOLUTE latency gaps (robust
+    in any hardware regime); the paper's relative 8->14% widening is a
+    property of its gem5 SoC regime where accelerator time ~ DMA time —
+    on a TPU-class chip the base DMA penalty is so large (~9x) that the
+    ratio saturates (see EXPERIMENTS.md §Paper-validation)."""
+    def gaps(act):
+        graphs = lenet.to_layer_graphs(batch=256, activation=act)
+        e = {m: estimate(account_model(graphs, m, DEFAULT_TABLE))
+             for m in ExecutionMode}
+        mono = e[ExecutionMode.MONOLITHIC].latency_s
+        return (e[ExecutionMode.FLEXIBLE_DMA].latency_s - mono,
+                e[ExecutionMode.SIDEBAR].latency_s - mono)
+
+    dma_r, sb_r = gaps("relu")
+    dma_s, sb_s = gaps("softplus")
+    assert dma_s > dma_r                     # DMA gap widens
+    assert (sb_s - sb_r) < (dma_s - dma_r)   # sidebar stays ~flat
+
+
+def test_auto_policy_picks_sidebar_for_lenet(lenet_setup):
+    _, _, graphs = lenet_setup
+    policy = AutoPolicy(table=DEFAULT_TABLE)
+    modes = [policy(g) for g in graphs]
+    assert all(m is ExecutionMode.SIDEBAR for m in modes)
+
+
+def test_multi_device_training_subprocess():
+    """Sharded FSDP x TP train step on 8 host devices — must run and the
+    loss must decrease. Subprocess so this test owns its device count."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro import configs as cfglib
+from repro.configs.base import TrainConfig, ShapeCell
+from repro.launch.train import make_train_step
+from repro.models import layers as L
+from repro.models.registry import get_model
+from repro.optim.optimizer import init_state
+from repro.data import pipeline
+
+mesh = jax.make_mesh((2,4), ("data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+minfo = L.MeshInfo.from_axes(("data","model"))
+cfg = cfglib.get_smoke_config("qwen3-14b")
+cell = ShapeCell("mini", 16, 8, "train")
+tcfg = TrainConfig(microbatch_per_device=2, warmup_steps=2)
+api = get_model(cfg)
+specs = api.param_specs(cfg, minfo)
+with mesh:
+    params = jax.device_put(api.init(jax.random.PRNGKey(0), cfg, minfo),
+                            L.shardings(mesh, specs))
+    opt = init_state(params, tcfg)
+    step_fn, n_micro, _ = make_train_step(cfg, tcfg, api, minfo, mesh, cell)
+    jitted = jax.jit(step_fn, donate_argnums=(0,1))
+    losses = []
+    for step in range(4):
+        batch = pipeline.shard_batch(
+            pipeline.make_batch(cfg, cell, step), mesh, minfo)
+        params, opt, _, m = jitted(params, opt, None, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    print("OK", losses[0], "->", losses[-1])
+"""
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "OK" in res.stdout
