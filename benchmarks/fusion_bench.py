@@ -1,16 +1,25 @@
-"""Measured (wall-clock) sidebar-vs-DMA microbenchmark on this host.
+"""Measured (wall-clock) four-mode sidebar microbenchmark on this host.
 
 The sidebar principle — fuse the flexible function into the producer so
 the intermediate never leaves near-compute memory — is measurable on ANY
 backend as fused-one-dispatch vs three-dispatches-with-materialization.
-This bench times the same f(x@W1)@W2 computation:
+This bench times the same f(x@W1)@W2 computation under all four designs:
 
-  monolithic/sidebar : one jitted program (XLA fuses the activation)
-  flexible_dma       : three jitted programs with block_until_ready
-                       between them (forced materialization = the DMA)
+  monolithic : one jitted program (XLA fuses the activation)
+  flexible_dma : three jitted programs with block_until_ready between
+               them (forced materialization = the DMA round-trip)
+  sidebar    : one jitted program with the activation looked up in the
+               FunctionTable at trace time (the hot-swappable fused path)
+  sidebar_pipelined : one jitted program running the ping-pong schedule —
+               the f-axis is split into blocks and the activation of
+               block j-1 is interleaved with the producer matmul of
+               block j, mirroring kernels/sidebar_mlp.sidebar_mlp_pipelined
 
 CPU numbers are not TPU numbers, but the RATIO demonstrates the paper's
-mechanism with real measured time.
+mechanism with real measured time. The ``derived`` column is the
+analytical model's latency for the same task on the target chip
+(core.engine.account -> core.energy.estimate), where the pipelined
+overlap win is visible even when XLA fuses the serial variants equally.
 """
 
 from __future__ import annotations
@@ -20,10 +29,20 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.function_table import DEFAULT_TABLE
+from repro.core import (
+    DEFAULT_TABLE,
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    StaticOp,
+    account,
+    estimate,
+)
 
 SHAPES = [(256, 512, 2048), (512, 1024, 4096)]
 ACTS = ["relu", "softplus"]
+MODES = list(ExecutionMode)
+F_BLOCKS = 4  # ping-pong schedule granularity for the pipelined variant
 
 
 def _time(fn, *args, repeats=5) -> float:
@@ -37,6 +56,70 @@ def _time(fn, *args, repeats=5) -> float:
     return ts[len(ts) // 2]
 
 
+def _mlp_graph(m: int, d: int, f: int, act: str) -> LayerGraph:
+    def mm(w, x):
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+    return LayerGraph(
+        name=f"mlp{m}x{d}x{f}",
+        ops=(
+            StaticOp("w1", mm, (m, f), flops=2 * m * d * f,
+                     weight_bytes=d * f * 4),
+            FlexibleOp(act, (m, f)),
+            StaticOp("w2", mm, (m, d), flops=2 * m * f * d,
+                     weight_bytes=f * d * 4),
+        ),
+        in_shape=(m, d),
+    )
+
+
+def _variants(act_name: str):
+    """Measured implementations, one dispatch count per mode."""
+    act = DEFAULT_TABLE.lookup(act_name)
+
+    fused = jax.jit(lambda x, w1, w2: act(x @ w1) @ w2)
+
+    mm1 = jax.jit(lambda x, w1: x @ w1)
+    act_j = jax.jit(act)
+    mm2 = jax.jit(lambda h, w2: h @ w2)
+
+    def dma_style(x, w1, w2):
+        h = jax.block_until_ready(mm1(x, w1))   # DMA out
+        h = jax.block_until_ready(act_j(h))     # host step
+        return mm2(h, w2)                        # DMA in
+
+    # sidebar: identical fusion, but the flexible fn comes from the table
+    # at trace time (register a new activation -> re-jit, no source change)
+    sidebar = jax.jit(
+        lambda x, w1, w2: DEFAULT_TABLE.lookup(act_name)(x @ w1) @ w2
+    )
+
+    def pipelined(x, w1, w2):
+        # ping-pong schedule: activation of f-block j-1 interleaves with
+        # the producer matmul of f-block j (one fused dispatch); a ceil
+        # block size plus explicit spans covers any remainder exactly
+        f = w1.shape[1]
+        bf = -(-f // F_BLOCKS)
+        spans = [(s, min(s + bf, f)) for s in range(0, f, bf)]
+        y = jnp.zeros((x.shape[0], w2.shape[1]), jnp.float32)
+        h_prev = x @ w1[:, spans[0][0]:spans[0][1]]
+        for j in range(1, len(spans) + 1):
+            h_next = (
+                x @ w1[:, spans[j][0]:spans[j][1]] if j < len(spans) else None
+            )
+            lo, hi = spans[j - 1]
+            y = y + act(h_prev) @ w2[lo:hi]
+            h_prev = h_next
+        return y.astype(x.dtype)
+
+    return {
+        ExecutionMode.MONOLITHIC: fused,
+        ExecutionMode.FLEXIBLE_DMA: dma_style,
+        ExecutionMode.SIDEBAR: sidebar,
+        ExecutionMode.SIDEBAR_PIPELINED: jax.jit(pipelined),
+    }
+
+
 def rows() -> list[tuple[str, float, float]]:
     out = []
     for m, d, f in SHAPES:
@@ -46,21 +129,11 @@ def rows() -> list[tuple[str, float, float]]:
         w1 = jax.random.normal(k2, (d, f), jnp.float32) * 0.02
         w2 = jax.random.normal(k3, (f, d), jnp.float32) * 0.02
         for act_name in ACTS:
-            act = DEFAULT_TABLE.lookup(act_name)
-
-            fused = jax.jit(lambda x, w1, w2: act(x @ w1) @ w2)
-            mm1 = jax.jit(lambda x, w1: x @ w1)
-            act_j = jax.jit(act)
-            mm2 = jax.jit(lambda h, w2: h @ w2)
-
-            def dma_style(x, w1, w2):
-                h = jax.block_until_ready(mm1(x, w1))   # DMA out
-                h = jax.block_until_ready(act_j(h))     # host step
-                return mm2(h, w2)                        # DMA in
-
-            t_fused = _time(fused, x, w1, w2)
-            t_dma = _time(dma_style, x, w1, w2)
+            impls = _variants(act_name)
+            graph = _mlp_graph(m, d, f, act_name)
             tag = f"fusion/{m}x{d}x{f}/{act_name}"
-            out.append((f"{tag}/fused_us", t_fused, 1.0))
-            out.append((f"{tag}/dma_us", t_dma, t_dma / t_fused))
+            for mode in MODES:
+                us = _time(impls[mode], x, w1, w2)
+                model_lat = estimate(account(graph, mode, DEFAULT_TABLE)).latency_s
+                out.append((f"{tag}/{mode.value}_us", us, model_lat))
     return out

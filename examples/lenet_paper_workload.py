@@ -30,7 +30,7 @@ def main():
     for act in ("relu", "softplus"):
         graphs = lenet.to_layer_graphs(batch=256, activation=act)
         print(f"\n=== LeNet inference, activation = {act} ===")
-        print(f"{'design':<14}{'latency (us)':>13}{'energy (mJ)':>13}"
+        print(f"{'design':<18}{'latency (us)':>13}{'energy (mJ)':>13}"
               f"{'norm. EDP':>11}{'vs mono':>9}")
         ests = {m.value: estimate(account_model(graphs, m, DEFAULT_TABLE))
                 for m in ExecutionMode}
@@ -38,7 +38,7 @@ def main():
         mono_lat = ests["monolithic"].latency_s
         for mode in ExecutionMode:
             e = ests[mode.value]
-            print(f"{mode.value:<14}{e.latency_s*1e6:>13.1f}"
+            print(f"{mode.value:<18}{e.latency_s*1e6:>13.1f}"
                   f"{e.energy_j*1e3:>13.3f}{norm[mode.value]:>11.3f}"
                   f"{e.latency_s/mono_lat:>9.3f}")
 

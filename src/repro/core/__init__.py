@@ -12,7 +12,14 @@ Public surface:
 
 from repro.core.constants import V5E, ChipSpec
 from repro.core.energy import Estimate, TaskAccounting, estimate, normalized_edp
-from repro.core.engine import account, account_model, build_monolithic, run
+from repro.core.engine import (
+    StageTiming,
+    account,
+    account_model,
+    build_monolithic,
+    pipeline_schedule,
+    run,
+)
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable, make_default_table
 from repro.core.modes import (
     ExecutionMode,
@@ -25,11 +32,13 @@ from repro.core.modes import (
 from repro.core.policy import AutoPolicy, fixed, plan
 from repro.core.sidebar import (
     Owner,
+    PingPongPair,
     Region,
     SidebarBuffer,
     SidebarCall,
     SidebarProtocolError,
     SidebarStats,
+    pipelined_capacity,
 )
 
 __all__ = [
@@ -56,9 +65,13 @@ __all__ = [
     "fixed",
     "plan",
     "Owner",
+    "PingPongPair",
     "Region",
     "SidebarBuffer",
     "SidebarCall",
     "SidebarProtocolError",
     "SidebarStats",
+    "StageTiming",
+    "pipeline_schedule",
+    "pipelined_capacity",
 ]

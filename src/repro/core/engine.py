@@ -1,8 +1,9 @@
 """The Sidebar execution engine.
 
 Runs a ``LayerGraph`` (alternating static/flexible ops) under each of the
-paper's three designs, producing *numerically identical results* (the math
-is mode-invariant — tests assert this) while differing in:
+paper's three designs plus the double-buffered SIDEBAR_PIPELINED
+refinement, producing *numerically identical results* (the math is
+mode-invariant — tests assert this) while differing in:
 
   * how many accelerator launches happen,
   * where intermediates live (HBM round-trip vs sidebar scratch vs internal
@@ -24,6 +25,16 @@ Two layers of fidelity:
      ``core.energy.estimate``. The dry-run/roofline path uses this at
      production scale where numeric execution is impossible on CPU.
 
+Pipelined timeline (SIDEBAR_PIPELINED, per flexible op, 2 tiles):
+
+    acc : write A.op | write B.op      | read A.res+prologue | read B.res
+    host:            | f(A.op)->A.res  | f(B.op)->B.res      |
+                  ^invoke A         ^ret A / invoke B     ^ret B
+
+  The accelerator's wait shrinks from the host's full busy time to
+  ``host - min(host/2, prologue/2)``; ``pipeline_schedule`` is the single
+  source of truth for those counters, shared by ``run`` and ``account``.
+
 The fused TPU fast path for the hot pattern (matmul → activation → matmul)
 is ``kernels/sidebar_mlp.py``; the engine is the general mechanism and the
 place where mode semantics are defined.
@@ -41,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import constants
-from repro.core.energy import TaskAccounting
+from repro.core.energy import VPU_RATE_DIV, TaskAccounting
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
 from repro.core.modes import (
     ExecutionMode,
@@ -50,9 +61,110 @@ from repro.core.modes import (
     StaticOp,
     segment_static_chains,
 )
-from repro.core.sidebar import Owner, SidebarBuffer, SidebarCall, required_capacity
+from repro.core.sidebar import (
+    Owner,
+    PingPongPair,
+    SidebarBuffer,
+    SidebarCall,
+    pipelined_capacity,
+    required_capacity,
+)
 
 Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Pipeline schedule: the shared overlap model of SIDEBAR_PIPELINED.
+#
+# Abstract cycle unit: one MXU flop-time at peak. A host VPU op costs
+# VPU_RATE_DIV cycles (the vector unit runs at peak/VPU_RATE_DIV), so the
+# two sides' busy time is directly comparable. account() and run() both
+# derive their stall/overlap counters from this one schedule, which is what
+# lets tests assert they agree exactly.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTiming:
+    """Timing of one flexible op under the double-buffered protocol.
+
+    With two tiles, each half of the host's busy time can hide behind a
+    *different* piece of accelerator work: while the host computes tile 0,
+    the producer chain's epilogue fills tile 1 into the other half; while
+    the host computes tile 1, the consumer chain's prologue eats tile 0's
+    returned result. Each adjacent static op donates at most half its
+    flops to one flexible neighbour, so overlap never double-counts MXU
+    time.
+    """
+
+    index: int             # position of the flexible op in graph.ops
+    host_cycles: int       # total host VPU time for this op (all tiles)
+    producer_cycles: int   # preceding static op's work (epilogue overlap)
+    consumer_cycles: int   # following static op's work (prologue overlap)
+    tiles: int             # 2 when double-buffered, 1 (serial) when unsplit
+
+    @property
+    def overlap_cycles(self) -> int:
+        """Cycles where host and accelerator are busy simultaneously."""
+        if self.tiles < 2:
+            return 0
+        half = self.host_cycles // 2
+        return min(half, self.producer_cycles // 2) + min(
+            half, self.consumer_cycles // 2
+        )
+
+    @property
+    def stall_cycles(self) -> int:
+        """Accelerator cycles spent polling the return flag. Serial mode
+        stalls for the whole host computation; pipelining hides the
+        overlapped part behind adjacent static work."""
+        return self.host_cycles - self.overlap_cycles
+
+
+def host_cycles_of(op: FlexibleOp, operand_shape: tuple[int, ...],
+                   table: FunctionTable) -> int:
+    """Host VPU time of one flexible op, in MXU-flop-time cycles."""
+    n = int(math.prod(operand_shape))
+    return int(n * table.cost(op.function) * VPU_RATE_DIV)
+
+
+def _splittable(operand_shape: tuple[int, ...],
+                out_shape: tuple[int, ...]) -> bool:
+    """A flexible op can be double-buffered when its operand and result
+    tile along a shared leading axis (elementwise, pooling, and rowwise
+    functions all preserve the leading/batch axis)."""
+    return (
+        len(operand_shape) >= 1
+        and len(out_shape) >= 1
+        and operand_shape[0] >= 2
+        and operand_shape[0] == out_shape[0]
+    )
+
+
+def pipeline_schedule(
+    graph: LayerGraph, table: FunctionTable = DEFAULT_TABLE
+) -> list[StageTiming]:
+    """Per-flexible-op overlap schedule for SIDEBAR_PIPELINED."""
+    shapes = graph.shapes()
+    stages = []
+    for i, op in enumerate(graph.ops):
+        if not isinstance(op, FlexibleOp):
+            continue
+        prev = graph.ops[i - 1] if i > 0 else None
+        nxt = graph.ops[i + 1] if i + 1 < len(graph.ops) else None
+        producer = prev.flops if isinstance(prev, StaticOp) else 0
+        consumer = nxt.flops if isinstance(nxt, StaticOp) else 0
+        tiles = 2 if _splittable(shapes[i], op.out_shape) else 1
+        stages.append(
+            StageTiming(
+                index=i,
+                host_cycles=host_cycles_of(op, shapes[i], table),
+                producer_cycles=int(producer),
+                consumer_cycles=int(consumer),
+                tiles=tiles,
+            )
+        )
+    return stages
 
 
 # ---------------------------------------------------------------------------
@@ -140,37 +252,144 @@ def run(
                 x = jax.block_until_ready(x)  # host writes back to DRAM
         return RunResult(x, acct, launches=launches)
 
-    # SIDEBAR: single fused launch; every flexible op routes its operand
-    # through the SidebarBuffer protocol model (ownership + traffic checks).
-    capacity = sidebar_capacity or required_capacity(
-        graph.shapes()[0], graph.itemsize, copies=2
-    )
-    for _, op, shape in graph.flexible_ops():
-        need = required_capacity(shape, graph.itemsize, copies=2)
-        capacity = max(capacity, need)
-    sb = SidebarBuffer(capacity, name=f"{graph.name}.sidebar")
+    if mode is ExecutionMode.SIDEBAR:
+        # Serial sidebar: single fused launch; every flexible op routes its
+        # operand through the SidebarBuffer protocol model (ownership +
+        # traffic checks). Regions are recycled through the free list — no
+        # whole-buffer teardown between ops.
+        capacity = sidebar_capacity or required_capacity(
+            graph.shapes()[0], graph.itemsize, copies=2
+        )
+        for _, op, shape in graph.flexible_ops():
+            need = required_capacity(shape, graph.itemsize, copies=2)
+            capacity = max(
+                capacity, need,
+                required_capacity(op.out_shape, graph.itemsize, copies=2),
+            )
+        sb = SidebarBuffer(capacity, name=f"{graph.name}.sidebar")
 
-    for op in graph.ops:
+        for i, op in enumerate(graph.ops):
+            if isinstance(op, StaticOp):
+                x = op.fn(params[op.name], x)
+                sb.stats.acc_busy_cycles += int(op.flops)
+            else:
+                operand = np.asarray(x)
+                opn, res = f"op{i}.operand", f"op{i}.result"
+                sb.allocate(opn, operand.nbytes)
+                out_nbytes = (
+                    int(math.prod(op.out_shape)) * operand.dtype.itemsize
+                )
+                sb.allocate(res, out_nbytes)
+                sb.write(Owner.ACCELERATOR, opn, operand)
+                sb.invoke_host(
+                    SidebarCall(
+                        function=op.function,
+                        in_regions=(opn,),
+                        out_regions=(res,),
+                        n_elements=int(operand.size),
+                    ),
+                    table,
+                    dtype=operand.dtype,
+                )
+                x = jnp.asarray(sb.read(Owner.ACCELERATOR, res)).reshape(
+                    op.out_shape
+                )
+                # the accelerator polled the return flag for the whole
+                # host computation — fully serialized
+                h = host_cycles_of(op, operand.shape, table)
+                sb.stats.host_busy_cycles += h
+                sb.stats.stall_cycles += h
+                sb.free(opn)
+                sb.free(res)
+        return RunResult(x, acct, launches=1, sidebar=sb)
+
+    # SIDEBAR_PIPELINED: single fused launch; each flexible op's operand is
+    # split into two tiles along the leading axis and traded through a
+    # ping-pong region pair — the accelerator fills half B (and consumes
+    # half A's returned result) while the host computes half A.
+    assert mode is ExecutionMode.SIDEBAR_PIPELINED, mode
+    schedule = {s.index: s for s in pipeline_schedule(graph, table)}
+    capacity = sidebar_capacity or 0
+    for _, op, shape in graph.flexible_ops():
+        capacity = max(
+            capacity, pipelined_capacity(shape, op.out_shape, graph.itemsize)
+        )
+    sb = SidebarBuffer(max(capacity, 512), name=f"{graph.name}.sidebar2")
+
+    for i, op in enumerate(graph.ops):
         if isinstance(op, StaticOp):
             x = op.fn(params[op.name], x)
-        else:
-            operand = np.asarray(x)
-            sb.free_all()
-            in_region = sb.allocate("operand", operand.nbytes)
-            out_nbytes = int(math.prod(op.out_shape)) * operand.dtype.itemsize
-            sb.allocate("result", out_nbytes)
-            sb.write(Owner.ACCELERATOR, "operand", operand)
+            sb.stats.acc_busy_cycles += int(op.flops)
+            continue
+        stage = schedule[i]
+        operand = np.asarray(x)
+        itemsize = operand.dtype.itemsize
+        if stage.tiles == 1:
+            # unsplittable operand (leading axis too small or reshaped):
+            # degrade to the serial handshake on a single recycled pair
+            opn, res = f"op{i}.operand", f"op{i}.result"
+            sb.allocate(opn, operand.nbytes)
+            sb.allocate(res, int(math.prod(op.out_shape)) * itemsize)
+            sb.write(Owner.ACCELERATOR, opn, operand)
             sb.invoke_host(
-                SidebarCall(
-                    function=op.function,
-                    in_regions=("operand",),
-                    out_regions=("result",),
-                    n_elements=int(operand.size),
-                ),
-                table,
-                dtype=operand.dtype,
+                SidebarCall(op.function, (opn,), (res,), int(operand.size)),
+                table, dtype=operand.dtype,
             )
-            x = jnp.asarray(sb.read(Owner.ACCELERATOR, "result")).reshape(op.out_shape)
+            x = jnp.asarray(sb.read(Owner.ACCELERATOR, res)).reshape(
+                op.out_shape
+            )
+            sb.free(opn)
+            sb.free(res)
+        else:
+            split = operand.shape[0] - operand.shape[0] // 2  # ceil half
+            tiles = (operand[:split], operand[split:])
+            lead = (split, operand.shape[0] - split)
+            res_rest = int(math.prod(op.out_shape[1:]))
+            pair = PingPongPair(
+                sb, f"op{i}",
+                operand_nbytes=int(tiles[0].nbytes),
+                result_nbytes=lead[0] * res_rest * itemsize,
+            )
+            results = [None, None]
+            # t=0: fill ping, raise its invoke flag
+            h0 = pair.acquire(0)
+            sb.write(Owner.ACCELERATOR, h0.operand.name, tiles[0])
+            pair.to_host(h0)
+            # while the "host computes" ping, the accelerator fills pong —
+            # legal only because ownership is per region
+            h1 = pair.acquire(1)
+            sb.write(Owner.ACCELERATOR, h1.operand.name, tiles[1])
+            # host finishes ping: result written, return flag raised
+            sb.host_call(
+                SidebarCall(op.function, (h0.operand.name,),
+                            (h0.result.name,), int(tiles[0].size)),
+                table, dtype=operand.dtype,
+            )
+            pair.to_accelerator(h0)
+            # host takes pong; accelerator concurrently consumes ping's
+            # result (the next static chain's prologue in the timeline)
+            pair.to_host(h1)
+            results[0] = np.asarray(
+                sb.read(Owner.ACCELERATOR, h0.result.name)
+            )
+            pair.release(h0)
+            sb.host_call(
+                SidebarCall(op.function, (h1.operand.name,),
+                            (h1.result.name,), int(tiles[1].size)),
+                table, dtype=operand.dtype,
+            )
+            pair.to_accelerator(h1)
+            results[1] = np.asarray(
+                sb.read(Owner.ACCELERATOR, h1.result.name)
+            )
+            pair.release(h1)
+            pair.free()
+            x = jnp.asarray(np.concatenate(results, axis=0)).reshape(
+                op.out_shape
+            )
+        sb.stats.host_busy_cycles += stage.host_cycles
+        sb.stats.overlap_cycles += stage.overlap_cycles
+        sb.stats.stall_cycles += stage.stall_cycles
     return RunResult(x, acct, launches=1, sidebar=sb)
 
 
@@ -215,6 +434,7 @@ def account(
             flex_elements=flex_elems_total,
             datapath_bytes=flex_bytes_total,  # internal registers/SRAM
             launches=1,
+            flex_stages=len(flex),
             dma_flushes=2,                    # initial in + final out
         )
 
@@ -234,10 +454,38 @@ def account(
             launches=n_chains,
             dma_flushes=2 + 2 * len(flex),    # per-handoff flush+invalidate
             host_invocations=len(flex),
+            flex_stages=len(flex),
         )
 
-    # SIDEBAR
-    sidebar_bytes = 2 * flex_bytes_total      # acc<->sb and host<->sb
+    # SIDEBAR / SIDEBAR_PIPELINED share all data movement: the intermediate
+    # crosses the scratchpad twice (acc<->sb and host<->sb) and never
+    # touches HBM. They differ only in the protocol-event counts and in how
+    # much of the host's busy time the accelerator actually waits out.
+    sidebar_bytes = 2 * flex_bytes_total
+    stages = pipeline_schedule(graph, table)
+    host_busy = sum(s.host_cycles for s in stages)
+
+    if mode is ExecutionMode.SIDEBAR:
+        return TaskAccounting(
+            mode=mode.value,
+            hbm_io_bytes=io_bytes,
+            hbm_weight_bytes=weight_bytes,
+            sidebar_bytes=sidebar_bytes,
+            mxu_flops=mxu,
+            flex_vpu_ops=flex_ops_total,
+            flex_elements=flex_elems_total,
+            launches=1,
+            dma_flushes=2,
+            handshakes=2 * len(flex),
+            host_invocations=len(flex),
+            flex_stages=len(flex),
+            host_busy_cycles=host_busy,
+            acc_busy_cycles=mxu,
+            stall_cycles=host_busy,   # fully serialized (paper §4: the FSM
+            overlap_cycles=0,         # polls until the CPU signals)
+        )
+
+    assert mode is ExecutionMode.SIDEBAR_PIPELINED, mode
     return TaskAccounting(
         mode=mode.value,
         hbm_io_bytes=io_bytes,
@@ -248,8 +496,14 @@ def account(
         flex_elements=flex_elems_total,
         launches=1,
         dma_flushes=2,
-        handshakes=2 * len(flex),
-        host_invocations=len(flex),
+        # one flag per half per direction: 2 tiles x (invoke + return)
+        handshakes=sum(2 * s.tiles for s in stages),
+        host_invocations=sum(s.tiles for s in stages),
+        flex_stages=len(stages),
+        host_busy_cycles=host_busy,
+        acc_busy_cycles=mxu,
+        stall_cycles=sum(s.stall_cycles for s in stages),
+        overlap_cycles=sum(s.overlap_cycles for s in stages),
     )
 
 

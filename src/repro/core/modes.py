@@ -17,6 +17,16 @@ dataflow alternates *static* tensor primitives with *flexible* functions:
                  VMEM scratch; the flexible function is looked up in the
                  function table at trace time).
 
+plus the overlapped refinement this repo adds on top of the paper:
+
+  SIDEBAR_PIPELINED — SIDEBAR with the scratchpad split into a ping-pong
+                 region pair and ownership tracked per region: the host
+                 computes flexible op *i* on one half while the
+                 accelerator fills / consumes the other half (tile t+1,
+                 or the next static chain's prologue). Latency per stage
+                 becomes max(host, accelerator) instead of host +
+                 accelerator; the numerics are bit-identical.
+
 The IR below expresses a layer as an alternating op list. Models in
 ``repro.models`` emit these graphs; ``core.engine`` executes/accounts them;
 ``kernels/`` provides the fused TPU implementations for the hot shapes.
@@ -36,6 +46,7 @@ class ExecutionMode(enum.Enum):
     MONOLITHIC = "monolithic"
     FLEXIBLE_DMA = "flexible_dma"
     SIDEBAR = "sidebar"
+    SIDEBAR_PIPELINED = "sidebar_pipelined"
 
 
 class OpKind(enum.Enum):

@@ -3,10 +3,12 @@
 A production deployment doesn't pick one mode globally: the paper itself
 notes the trade depends on the intermediate size and the flexible-function
 cost. A ``Policy`` maps each layer graph to an ``ExecutionMode``; the
-``auto`` policy picks SIDEBAR when the intermediate fits the sidebar and
-the predicted EDP beats the alternatives, falling back to FLEXIBLE_DMA for
-oversized intermediates (with a warning counter) — monolithic is only
-chosen when the layer has no flexible ops at all (nothing to flex).
+``auto`` policy picks a sidebar mode (SIDEBAR or the double-buffered
+SIDEBAR_PIPELINED, whichever the EDP model prefers — pipelined wins
+whenever the graph exposes overlap) when the intermediate fits the
+sidebar, falling back to FLEXIBLE_DMA for oversized intermediates (with a
+warning counter) — monolithic is only chosen when the layer has no
+flexible ops at all (nothing to flex).
 """
 
 from __future__ import annotations
@@ -45,6 +47,7 @@ class AutoPolicy:
         candidates = [ExecutionMode.FLEXIBLE_DMA]
         if graph.max_intermediate_bytes() <= self.sidebar_capacity:
             candidates.append(ExecutionMode.SIDEBAR)
+            candidates.append(ExecutionMode.SIDEBAR_PIPELINED)
         else:
             self.fallbacks += 1
         best = min(

@@ -3,7 +3,8 @@
 The paper's Sidebar is a physical SRAM with:
   * explicit, compile-time-agreed data placement (§3.1),
   * hardware-enforced mutual exclusion — accelerator and host never access
-    it simultaneously; ownership is passed by writing a hardware register,
+    the same location simultaneously; ownership is passed by writing a
+    hardware register,
   * dedicated slots for call arguments (function pointer, data pointers) and
     the invoke/return flags (§3.3),
   * capacity at the L1 level (small; intermediates only).
@@ -18,6 +19,40 @@ testable and so the engine can account handshakes/bytes exactly:
     analogue of the hardware mutex).
   * ``SidebarCall`` is the argument block the accelerator writes before
     raising the invoke flag: function-table key + region handles.
+
+Pipelined protocol (ExecutionMode.SIDEBAR_PIPELINED)
+----------------------------------------------------
+
+Ownership is tracked **per region**, not per buffer: the mutual-exclusion
+guarantee the hardware needs is per-location, so the host may own one set
+of regions (one *half*) while the accelerator concurrently fills another.
+``PingPongPair`` packages the double-buffering discipline on top of that:
+two halves, each an (operand, result) region pair with a four-state
+lifecycle
+
+    free -> filled -> at_host -> returned -> free
+            (acc wrote   (invoke     (return    (acc read result,
+             operand)     flag)       flag)      half released)
+
+Acquiring a half that has not completed its previous cycle raises
+``SidebarProtocolError`` ("reuse before release") — the software analogue
+of clobbering a buffer the host is still reading. The timeline the engine
+models (host computes flexible op *i* tile t on half A while the
+accelerator works tile t+1 / the next static chain's prologue on half B):
+
+    acc : fill A | fill B         | prologue(A.res) | prologue(B.res) ...
+    host:        | f(A) -> A.res  | f(B) -> B.res   |
+    flag:   A->h   B->h  A->acc     B->acc
+
+Regions are recycled through a first-fit **free list** (``free``), so a
+task with many flexible ops reuses the same sidebar area without the
+whole-buffer ``free_all`` teardown between ops.
+
+``SidebarStats`` carries the overlap counters the energy model consumes:
+``host_busy_cycles`` / ``acc_busy_cycles`` (abstract cycles, 1 cycle = one
+MXU flop-time; host VPU work is scaled by the VPU/MXU rate ratio),
+``overlap_cycles`` (both sides busy) and ``stall_cycles`` (accelerator
+idle, polling the return flag).
 """
 
 from __future__ import annotations
@@ -25,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -73,6 +108,11 @@ class SidebarStats:
     handshakes: int = 0          # ownership transfers (flag writes)
     host_invocations: int = 0    # complete invoke->return cycles
     peak_bytes: int = 0          # high-water allocation mark
+    # Overlap counters (abstract cycles; 1 cycle = one MXU flop-time).
+    host_busy_cycles: int = 0    # host VPU busy on flexible functions
+    acc_busy_cycles: int = 0     # accelerator MXU busy on static ops
+    overlap_cycles: int = 0      # both sides busy simultaneously
+    stall_cycles: int = 0        # accelerator idle, polling a flag
 
     @property
     def total_bytes(self) -> int:
@@ -85,13 +125,17 @@ class SidebarStats:
 
     def merge(self, other: "SidebarStats") -> "SidebarStats":
         return SidebarStats(
-            self.bytes_written_acc + other.bytes_written_acc,
-            self.bytes_read_acc + other.bytes_read_acc,
-            self.bytes_written_host + other.bytes_written_host,
-            self.bytes_read_host + other.bytes_read_host,
-            self.handshakes + other.handshakes,
-            self.host_invocations + other.host_invocations,
-            max(self.peak_bytes, other.peak_bytes),
+            bytes_written_acc=self.bytes_written_acc + other.bytes_written_acc,
+            bytes_read_acc=self.bytes_read_acc + other.bytes_read_acc,
+            bytes_written_host=self.bytes_written_host + other.bytes_written_host,
+            bytes_read_host=self.bytes_read_host + other.bytes_read_host,
+            handshakes=self.handshakes + other.handshakes,
+            host_invocations=self.host_invocations + other.host_invocations,
+            peak_bytes=max(self.peak_bytes, other.peak_bytes),
+            host_busy_cycles=self.host_busy_cycles + other.host_busy_cycles,
+            acc_busy_cycles=self.acc_busy_cycles + other.acc_busy_cycles,
+            overlap_cycles=self.overlap_cycles + other.overlap_cycles,
+            stall_cycles=self.stall_cycles + other.stall_cycles,
         )
 
 
@@ -100,13 +144,27 @@ class SidebarStats:
 # specific set of Sidebar locations").
 CONTROL_BYTES = 256
 
+_ALIGN = 128  # TPU lane alignment for every placement
+
+
+def _align(n: int) -> int:
+    return (n + _ALIGN - 1) // _ALIGN * _ALIGN
+
 
 class SidebarBuffer:
-    """Ownership-checked, capacity-checked sidebar with a bump allocator.
+    """Ownership-checked, capacity-checked sidebar with a recycling
+    (free-list + bump) allocator and per-region ownership.
 
     ``capacity`` defaults to a VMEM-scale budget; kernels using the real
     VMEM scratch must keep their working set within this (the dry-run
     checks kernel BlockSpec footprints against the same constant).
+
+    Ownership model: ``self.owner`` is the buffer-level default — newly
+    placed regions belong to it, and ``pass_ownership`` (the single
+    buffer-wide flag of the serial protocol) moves the buffer *and* every
+    region. ``pass_region`` is the pipelined refinement: one flag write
+    transfers a named set of regions (a ping-pong half) while the rest of
+    the sidebar stays with its current owner.
     """
 
     def __init__(self, capacity: int, *, name: str = "sidebar") -> None:
@@ -117,7 +175,9 @@ class SidebarBuffer:
         self.owner = Owner.ACCELERATOR
         self.stats = SidebarStats()
         self._regions: dict[str, Region] = {}
+        self._owners: dict[str, Owner] = {}
         self._cursor = CONTROL_BYTES
+        self._free: list[tuple[int, int]] = []  # (offset, span) 128B-aligned
         self._data: dict[str, np.ndarray] = {}
 
     # -- placement (compile-time agreement, §3.1) -------------------------
@@ -125,7 +185,20 @@ class SidebarBuffer:
         if name in self._regions:
             raise SidebarProtocolError(f"region {name!r} already placed")
         nbytes = int(nbytes)
-        aligned = (self._cursor + 127) // 128 * 128  # 128B lane alignment
+        span = _align(max(nbytes, 1))
+        # first-fit from the free list (recycled placements)
+        for idx, (off, sz) in enumerate(self._free):
+            if sz >= span:
+                if sz == span:
+                    self._free.pop(idx)
+                else:
+                    self._free[idx] = (off + span, sz - span)
+                region = Region(name, off, nbytes)
+                self._regions[name] = region
+                self._owners[name] = self.owner
+                return region
+        # bump allocation
+        aligned = _align(self._cursor)
         if aligned + nbytes > self.capacity:
             raise SidebarProtocolError(
                 f"sidebar {self.name!r} overflow: need {nbytes} B at offset "
@@ -134,15 +207,41 @@ class SidebarBuffer:
             )
         region = Region(name, aligned, nbytes)
         self._regions[name] = region
-        self._cursor = region.end
-        self.stats.peak_bytes = max(self.stats.peak_bytes, self._cursor)
+        self._owners[name] = self.owner
+        self._cursor = aligned + span
+        self.stats.peak_bytes = max(self.stats.peak_bytes, region.end)
         return region
+
+    def free(self, name: str) -> None:
+        """Return one placement to the free list (recycled, unlike
+        ``free_all`` which tears the whole map down between tasks)."""
+        region = self.region(name)
+        del self._regions[name]
+        self._owners.pop(name, None)
+        self._data.pop(name, None)
+        span = (region.offset, _align(max(region.nbytes, 1)))
+        self._free.append(span)
+        self._free.sort()
+        # coalesce adjacent spans
+        merged: list[tuple[int, int]] = []
+        for off, sz in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == off:
+                merged[-1] = (merged[-1][0], merged[-1][1] + sz)
+            else:
+                merged.append((off, sz))
+        # reclaim a free tail into the bump cursor (defragments the common
+        # alternating allocate/free pattern completely)
+        if merged and merged[-1][0] + merged[-1][1] >= self._cursor:
+            self._cursor = merged.pop()[0]
+        self._free = merged
 
     def free_all(self) -> None:
         """Reset placements between accelerator tasks (intermediates only —
         the sidebar never persists application state, §3.4)."""
         self._regions.clear()
+        self._owners.clear()
         self._data.clear()
+        self._free.clear()
         self._cursor = CONTROL_BYTES
 
     def region(self, name: str) -> Region:
@@ -152,22 +251,45 @@ class SidebarBuffer:
             raise SidebarProtocolError(f"no region {name!r} placed") from None
 
     # -- ownership (hardware mutex, §3.1) ---------------------------------
-    def _check_owner(self, who: Owner) -> None:
-        if self.owner is not who:
+    def region_owner(self, name: str) -> Owner:
+        self.region(name)  # existence check
+        return self._owners[name]
+
+    def _check_owner(self, who: Owner, region_name: str) -> None:
+        owner = self.region_owner(region_name)
+        if owner is not who:
             raise SidebarProtocolError(
-                f"{who.value} accessed sidebar owned by {self.owner.value}; "
-                "ownership must be passed via the flag register first"
+                f"{who.value} accessed region {region_name!r} owned by "
+                f"{owner.value}; ownership must be passed via the flag "
+                "register first"
             )
 
     def pass_ownership(self, to: Owner) -> None:
+        """Serial protocol: one flag transfers the whole sidebar."""
         if to is self.owner:
             raise SidebarProtocolError(f"ownership already with {to.value}")
         self.owner = to
+        for name in self._owners:
+            self._owners[name] = to
+        self.stats.handshakes += 1
+
+    def pass_region(self, names: Sequence[str] | str, to: Owner) -> None:
+        """Pipelined protocol: one flag write transfers a set of regions
+        (a ping-pong half) while the rest of the sidebar stays put."""
+        if isinstance(names, str):
+            names = (names,)
+        for name in names:
+            if self.region_owner(name) is to:
+                raise SidebarProtocolError(
+                    f"region {name!r} ownership already with {to.value}"
+                )
+        for name in names:
+            self._owners[name] = to
         self.stats.handshakes += 1
 
     # -- data movement ----------------------------------------------------
     def write(self, who: Owner, region_name: str, array: np.ndarray) -> None:
-        self._check_owner(who)
+        self._check_owner(who, region_name)
         region = self.region(region_name)
         nbytes = int(array.nbytes)
         if nbytes > region.nbytes:
@@ -182,7 +304,7 @@ class SidebarBuffer:
             self.stats.bytes_written_host += nbytes
 
     def read(self, who: Owner, region_name: str) -> np.ndarray:
-        self._check_owner(who)
+        self._check_owner(who, region_name)
         region = self.region(region_name)
         if region_name not in self._data:
             raise SidebarProtocolError(f"region {region_name!r} never written")
@@ -193,25 +315,37 @@ class SidebarBuffer:
             self.stats.bytes_read_host += int(arr.nbytes)
         return arr
 
-    # -- full invocation cycle (paper §3.3) --------------------------------
-    def invoke_host(self, call: SidebarCall, table, dtype=np.float32) -> None:
-        """Run one accelerator->host->accelerator cycle through the sidebar.
-
-        The accelerator must own the buffer and have written ``in_regions``.
-        This models: write args -> raise flag (pass to host) -> host reads,
-        computes via the function table, writes results -> lower flag (pass
-        back to accelerator).
-        """
-        self._check_owner(Owner.ACCELERATOR)
+    # -- host-side computation (paper §3.3) --------------------------------
+    def host_call(self, call: SidebarCall, table, dtype=np.float32) -> None:
+        """Host side of one invocation: read host-owned operand regions,
+        compute via the function table, write host-owned result regions.
+        Assumes the regions were already passed to the host (the pipelined
+        path passes a ping-pong half; ``invoke_host`` passes the buffer)."""
         entry = table[call.function]
-        self.pass_ownership(Owner.HOST)
         inputs = [self.read(Owner.HOST, r) for r in call.in_regions]
         out = np.asarray(entry.fn(*[i for i in inputs])).astype(dtype)
         outs = [out] if len(call.out_regions) == 1 else list(out)
         for region_name, arr in zip(call.out_regions, outs):
             self.write(Owner.HOST, region_name, arr)
-        self.pass_ownership(Owner.ACCELERATOR)
         self.stats.host_invocations += 1
+
+    def invoke_host(self, call: SidebarCall, table, dtype=np.float32) -> None:
+        """Run one serial accelerator->host->accelerator cycle.
+
+        The accelerator must own the buffer and have written ``in_regions``.
+        This models: write args -> raise flag (pass to host) -> host reads,
+        computes via the function table, writes results -> lower flag (pass
+        back to accelerator). The accelerator stalls for the whole cycle —
+        the pipelined path (``PingPongPair``) is the overlapped variant.
+        """
+        if self.owner is not Owner.ACCELERATOR:
+            raise SidebarProtocolError(
+                f"accelerator accessed sidebar owned by {self.owner.value}; "
+                "ownership must be passed via the flag register first"
+            )
+        self.pass_ownership(Owner.HOST)
+        self.host_call(call, table, dtype)
+        self.pass_ownership(Owner.ACCELERATOR)
 
     # -- introspection ------------------------------------------------------
     def utilization(self) -> float:
@@ -221,10 +355,125 @@ class SidebarBuffer:
         return iter(self._regions.values())
 
 
+# ---------------------------------------------------------------------------
+# Ping-pong double buffering (the pipelined protocol's region discipline).
+# ---------------------------------------------------------------------------
+
+
+_HALF_LABELS = ("ping", "pong")
+
+
+@dataclasses.dataclass
+class PingPongHalf:
+    """One half of a double buffer: an (operand, result) region pair plus
+    the lifecycle state the protocol enforces."""
+
+    label: str
+    operand: Region
+    result: Region
+    state: str = "free"  # free -> filled -> at_host -> returned -> free
+
+    @property
+    def region_names(self) -> tuple[str, str]:
+        return (self.operand.name, self.result.name)
+
+
+class PingPongPair:
+    """Two sidebar halves traded between accelerator and host.
+
+    The accelerator fills half ``t % 2`` with tile ``t`` while the host
+    computes on the other half — per-region ownership makes the concurrent
+    access legal; this class makes the *ordering* discipline checkable:
+    a half must complete free -> filled -> at_host -> returned -> free
+    before it can be acquired again ("reuse before release" raises).
+    """
+
+    def __init__(self, sb: SidebarBuffer, name: str,
+                 operand_nbytes: int, result_nbytes: int) -> None:
+        self._sb = sb
+        self.name = name
+        self.halves = [
+            PingPongHalf(
+                label,
+                sb.allocate(f"{name}.{label}.operand", operand_nbytes),
+                sb.allocate(f"{name}.{label}.result", result_nbytes),
+            )
+            for label in _HALF_LABELS
+        ]
+
+    def half(self, tile_index: int) -> PingPongHalf:
+        return self.halves[tile_index % 2]
+
+    def acquire(self, tile_index: int) -> PingPongHalf:
+        h = self.half(tile_index)
+        if h.state != "free":
+            raise SidebarProtocolError(
+                f"ping-pong half {self.name}.{h.label} reused before release "
+                f"(state={h.state!r}); the previous tile's result must be "
+                "read back and the half released first"
+            )
+        h.state = "filled"
+        return h
+
+    def to_host(self, h: PingPongHalf) -> None:
+        if h.state != "filled":
+            raise SidebarProtocolError(
+                f"half {self.name}.{h.label} invoked in state {h.state!r} "
+                "(operand not filled)"
+            )
+        self._sb.pass_region(h.region_names, Owner.HOST)
+        h.state = "at_host"
+
+    def to_accelerator(self, h: PingPongHalf) -> None:
+        if h.state != "at_host":
+            raise SidebarProtocolError(
+                f"half {self.name}.{h.label} returned in state {h.state!r}"
+            )
+        self._sb.pass_region(h.region_names, Owner.ACCELERATOR)
+        h.state = "returned"
+
+    def release(self, h: PingPongHalf) -> None:
+        if h.state != "returned":
+            raise SidebarProtocolError(
+                f"half {self.name}.{h.label} released in state {h.state!r} "
+                "(result not returned to the accelerator)"
+            )
+        h.state = "free"
+
+    def free(self) -> None:
+        """Return both halves' placements to the buffer's free list."""
+        for h in self.halves:
+            if h.state not in ("free",):
+                raise SidebarProtocolError(
+                    f"half {self.name}.{h.label} freed mid-flight "
+                    f"(state={h.state!r})"
+                )
+            self._sb.free(h.operand.name)
+            self._sb.free(h.result.name)
+
+
 def required_capacity(shape: tuple[int, ...], itemsize: int, copies: int = 1) -> int:
     """Capacity needed to stage an intermediate of ``shape``: control area
     plus ``copies`` regions, each rounded up to the 128 B lane alignment
     the allocator enforces."""
     nbytes = int(math.prod(shape)) * itemsize
-    aligned = (nbytes + 127) // 128 * 128
-    return CONTROL_BYTES + copies * aligned
+    return CONTROL_BYTES + copies * _align(nbytes)
+
+
+def pipelined_capacity(
+    operand_shape: tuple[int, ...],
+    out_shape: tuple[int, ...],
+    itemsize: int,
+    tiles: int = 2,
+) -> int:
+    """Capacity for one double-buffered flexible op: two halves, each an
+    (operand-tile, result-tile) pair, tiles split along the leading axis."""
+    def tile_bytes(shape: tuple[int, ...]) -> int:
+        if not shape:
+            return itemsize
+        lead = -(-shape[0] // tiles)  # ceil: the larger tile
+        return int(lead * math.prod(shape[1:])) * itemsize
+
+    return CONTROL_BYTES + 2 * (
+        _align(tile_bytes(operand_shape)) + _align(tile_bytes(out_shape))
+    )

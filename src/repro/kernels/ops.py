@@ -12,19 +12,25 @@ Each op:
 
 from __future__ import annotations
 
+import contextlib
 import functools
+import threading
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
+from repro.core.modes import ExecutionMode
 from repro.kernels import ref
 from repro.kernels.activations import activation as _activation_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.sidebar_gated_mlp import sidebar_gated_mlp as _gated_kernel
 from repro.kernels.sidebar_matmul import sidebar_matmul as _matmul_kernel
 from repro.kernels.sidebar_mlp import sidebar_mlp as _mlp_kernel
+from repro.kernels.sidebar_mlp import (
+    sidebar_mlp_pipelined as _mlp_kernel_pipelined,
+)
 
 Array = jax.Array
 
@@ -37,6 +43,37 @@ def _tileable(n: int, t: int = 128) -> bool:
     return n % t == 0
 
 
+# -- execution-mode selection (wired from launch.serve.Server) -------------
+# Models call the sidebar ops unconditionally; which kernel variant backs
+# them (serial VMEM scratch vs ping-pong pipelined) is a deployment choice,
+# so it is carried here as thread-local ambient state rather than threaded
+# through every model signature.
+
+_MODE_STATE = threading.local()
+
+
+def current_execution_mode() -> ExecutionMode:
+    return getattr(_MODE_STATE, "mode", ExecutionMode.SIDEBAR)
+
+
+def set_execution_mode(mode: ExecutionMode | str) -> ExecutionMode:
+    """Set the ambient sidebar kernel variant; returns the previous one."""
+    if isinstance(mode, str):
+        mode = ExecutionMode(mode)
+    prev = current_execution_mode()
+    _MODE_STATE.mode = mode
+    return prev
+
+
+@contextlib.contextmanager
+def execution_mode(mode: ExecutionMode | str):
+    prev = set_execution_mode(mode)
+    try:
+        yield
+    finally:
+        set_execution_mode(prev)
+
+
 def sidebar_mlp(
     x: Array,
     w1: Array,
@@ -46,8 +83,14 @@ def sidebar_mlp(
     table: FunctionTable = DEFAULT_TABLE,
     use_kernel: bool | None = None,
     interpret: bool = False,
+    pipelined: bool | None = None,
 ) -> Array:
-    """y = f(x @ w1) @ w2 — fused sidebar kernel when eligible."""
+    """y = f(x @ w1) @ w2 — fused sidebar kernel when eligible.
+
+    ``pipelined`` selects the double-buffered ping-pong variant; when
+    None it follows the ambient ``execution_mode`` (SIDEBAR_PIPELINED =>
+    pipelined). Both variants are numerically identical.
+    """
     m, d = x.shape
     _, f = w1.shape
     eligible = _tileable(m, 8) and _tileable(f) and _tileable(d)
@@ -56,8 +99,11 @@ def sidebar_mlp(
         if use_kernel is not None
         else (eligible and (_on_tpu() or interpret))
     )
+    if pipelined is None:
+        pipelined = current_execution_mode() is ExecutionMode.SIDEBAR_PIPELINED
     if use:
-        return _mlp_kernel(x, w1, w2, activation, table=table, interpret=interpret)
+        kernel = _mlp_kernel_pipelined if pipelined else _mlp_kernel
+        return kernel(x, w1, w2, activation, table=table, interpret=interpret)
     return ref.sidebar_mlp_ref(x, w1, w2, activation, table)
 
 

@@ -54,14 +54,15 @@ SUBLANE = 8
 
 
 def choose_tiles(m: int, d: int, f: int, itemsize: int = 2,
-                 vmem_budget: int = constants.VMEM_BYTES_PER_CHIP // 8) -> tuple[int, int]:
+                 vmem_budget: int = constants.VMEM_BYTES_PER_CHIP // 8,
+                 sidebar_copies: int = 1) -> tuple[int, int]:
     """Pick (bm, bf) so the per-step working set fits the VMEM budget.
 
     working_set(bm, bf) = bm*d*itemsize   (x tile)
                         + d*bf*itemsize   (w1 panel)
                         + bf*d*itemsize   (w2 panel)
                         + bm*d*itemsize   (out tile)
-                        + 4*bm*bf         (sidebar, fp32)
+                        + 4*bm*bf*copies  (sidebar; 2 copies when ping-pong)
                         + 4*bm*d          (accumulator, fp32)
     """
     for bm in (256, 128, 64, 32, 16, 8):
@@ -74,7 +75,7 @@ def choose_tiles(m: int, d: int, f: int, itemsize: int = 2,
                 bm * d * itemsize
                 + 2 * d * bf * itemsize
                 + bm * d * itemsize
-                + 4 * bm * bf
+                + 4 * bm * bf * sidebar_copies
                 + 4 * bm * d
             )
             if ws <= vmem_budget:
@@ -111,6 +112,55 @@ def _kernel(x_ref, w1_ref, w2_ref, o_ref, sidebar_ref, acc_ref, *,
         acc_ref[...] += part
 
     @pl.when(j == n_f_blocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _pipelined_kernel(x_ref, w1_ref, w2_ref, o_ref, sidebar_ref, acc_ref, *,
+                      activation: Callable, n_f_blocks: int, out_dtype):
+    """One (i, j) step of the double-buffered schedule, j in [0, n_f].
+
+    The sidebar is a ping-pong pair ``(2, bm, bf)``; stage 1 (produce) and
+    stage 2 (consume) of the same step touch *different* halves, so there
+    is no data dependence between them and the MXU matmul of stage 1 can
+    overlap the VPU activation + MXU accumulate of stage 2 — the VMEM
+    realization of the engine's per-region ownership trade:
+
+        j:       0          1              2         ...   n_f
+        produce  h0 -> A    h1 -> B        h2 -> A
+        consume             f(A) @ w2_0    f(B) @ w2_1     f(.) @ w2_last
+
+    The grid runs one step past the last f-block (the pipeline drain).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j < n_f_blocks)
+    def _produce():
+        # static primitive #1 (MXU): fill this step's half of the sidebar
+        h = jnp.dot(
+            x_ref[...], w1_ref[...], preferred_element_type=jnp.float32
+        )
+        sidebar_ref[j % 2] = h
+
+    @pl.when(j > 0)
+    def _consume():
+        # flexible function (VPU) + static primitive #2 (MXU) on the half
+        # filled by the PREVIOUS step — the other half of the ping-pong
+        act = activation(sidebar_ref[(j - 1) % 2])
+        part = jnp.dot(
+            act.astype(w2_ref.dtype), w2_ref[...],
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(j == 1)
+        def _init():
+            acc_ref[...] = part
+
+        @pl.when(j > 1)
+        def _accum():
+            acc_ref[...] += part
+
+    @pl.when(j == n_f_blocks)
     def _flush():
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
@@ -166,6 +216,64 @@ def sidebar_mlp(
         scratch_shapes=[
             pltpu.VMEM((bm, bf), jnp.float32),   # the Sidebar
             pltpu.VMEM((bm, d2), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(x, w1, w2)
+
+
+def sidebar_mlp_pipelined(
+    x: Array,
+    w1: Array,
+    w2: Array,
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+    block_m: int | None = None,
+    block_f: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Double-buffered f(x @ w1) @ w2: the sidebar is a ping-pong VMEM
+    pair and the f-axis grid is software-pipelined one step deep, so the
+    producer matmul of block j and the activation+consumer matmul of
+    block j-1 are independent within every grid step (the kernel analogue
+    of ExecutionMode.SIDEBAR_PIPELINED). Numerically identical to
+    ``sidebar_mlp``.
+    """
+    m, d = x.shape
+    d1, f = w1.shape
+    f2, d2 = w2.shape
+    if d != d1 or f != f2:
+        raise ValueError(f"shape mismatch: x{x.shape} w1{w1.shape} w2{w2.shape}")
+    fn = table.lookup(activation) if isinstance(activation, str) else activation
+
+    bm, bf = choose_tiles(m, d, f, x.dtype.itemsize, sidebar_copies=2)
+    bm = block_m or bm
+    bf = block_f or bf
+    if m % bm or f % bf:
+        raise ValueError(f"M={m} % bm={bm} or F={f} % bf={bf} != 0")
+    n_f_blocks = f // bf
+
+    # one drain step past the last f-block; weight index maps clamp so the
+    # warm-up/drain steps re-read a valid (ignored) panel
+    grid = (m // bm, n_f_blocks + 1)
+    last = n_f_blocks - 1
+    kernel = functools.partial(
+        _pipelined_kernel, activation=fn, n_f_blocks=n_f_blocks,
+        out_dtype=x.dtype,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bf), lambda i, j: (0, jnp.minimum(j, last))),
+            pl.BlockSpec((bf, d2), lambda i, j: (jnp.maximum(j - 1, 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d2), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, bm, bf), jnp.float32),  # ping-pong Sidebar pair
+            pltpu.VMEM((bm, d2), jnp.float32),     # output accumulator
         ],
         interpret=interpret,
     )(x, w1, w2)

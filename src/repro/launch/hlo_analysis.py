@@ -56,11 +56,27 @@ _COLL_OP = re.compile(
     r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
     r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
 )
+# dot operands appear typed ("dot(f32[64,64]{1,0} %lhs, ...)") in newer
+# HLO text and bare ("dot(%lhs, ...)") in older text; capture the inline
+# lhs dims when present, else the lhs name for a symbol-table lookup.
 _DOT = re.compile(
-    r"=\s*\w+\[([0-9,]*)\][^ ]*\s+dot\(\s*%?([\w.\-]+)"
+    r"=\s*\w+\[([0-9,]*)\][^ ]*\s+dot\(\s*"
+    r"(?:\w+\[([0-9,]*)\]\S*\s+)?%?([\w.\-]+)"
 )
 _DEF = re.compile(r"^\s*%?([\w.\-]+)\s*=\s*(\w+)\[([0-9,]*)\]")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a single-element list of per-program dicts; newer
+    jax returns the dict directly. Normalize to a plain dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -139,7 +155,10 @@ def analyze_hlo(txt: str) -> HloCosts:
             dm = _DOT.search(line)
             if dm:
                 out_dims = [int(d) for d in dm.group(1).split(",") if d]
-                lhs_dims = symtab.get(dm.group(2), [])
+                if dm.group(2) is not None:
+                    lhs_dims = [int(d) for d in dm.group(2).split(",") if d]
+                else:
+                    lhs_dims = symtab.get(dm.group(3), [])
                 ct = _CONTRACT.search(line)
                 cdims = [int(d) for d in ct.group(1).split(",") if d] if ct else []
                 contract = 1

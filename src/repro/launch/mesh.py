@@ -17,17 +17,14 @@ reduce-scatter / param all-gather over ("pod","data") — DCN-friendly.
 
 from __future__ import annotations
 
-import jax
-
 from repro.models.layers import MULTI_POD, SINGLE_POD, MeshInfo
+from repro.parallel.compat import auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return auto_mesh(shape, axes)
 
 
 def mesh_info(mesh) -> MeshInfo:
@@ -38,10 +35,7 @@ def mesh_info(mesh) -> MeshInfo:
 def make_host_mesh():
     """Single-device mesh with the production axis names (all size 1) —
     lets the same sharded step functions run on one CPU for smoke tests."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return auto_mesh((1, 1), ("data", "model"))
 
 
 def num_chips(mesh) -> int:

@@ -4,6 +4,13 @@
 the decode_32k / long_500k dry-run cells lower); ``Server`` is a small
 batched-request driver (pad-to-bucket, prefill once, greedy decode) used
 by the serving example and integration tests.
+
+``Server(execution_mode=...)`` selects which sidebar kernel variant backs
+the model's fused MLP ops: ``ExecutionMode.SIDEBAR`` (single VMEM scratch)
+or ``ExecutionMode.SIDEBAR_PIPELINED`` (ping-pong double buffer — the
+host-side flexible function of tile t overlaps the MXU work of tile t±1).
+The choice is applied as ambient state around trace time, so the same
+model code serves under either variant with no signature changes.
 """
 
 from __future__ import annotations
@@ -16,6 +23,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.modes import ExecutionMode
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
 
@@ -66,7 +75,9 @@ class Server:
     """Minimal batched greedy-decoding server."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
-                 max_len: int = 256) -> None:
+                 max_len: int = 256,
+                 execution_mode: ExecutionMode | str = ExecutionMode.SIDEBAR,
+                 ) -> None:
         self.cfg = cfg
         self.params = params
         self.api = get_model(cfg)
@@ -75,6 +86,17 @@ class Server:
             L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
         )
         self.max_len = max_len
+        if isinstance(execution_mode, str):
+            execution_mode = ExecutionMode(execution_mode)
+        if execution_mode not in (
+            ExecutionMode.SIDEBAR, ExecutionMode.SIDEBAR_PIPELINED
+        ):
+            raise ValueError(
+                "Server serves through the sidebar fast path; "
+                f"execution_mode must be SIDEBAR or SIDEBAR_PIPELINED, got "
+                f"{execution_mode}"
+            )
+        self.execution_mode = execution_mode
         self._prefill = jax.jit(
             make_prefill_step(cfg, self.api, self.minfo, mesh)
         )
@@ -94,22 +116,25 @@ class Server:
             )
         cache = self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
         batch = {"tokens": prompts, **(extra or {})}
-        memory = None
-        if self.cfg.family == "audio":
-            from repro.models import whisper as W
+        # ambient kernel-variant selection must wrap trace time (the first
+        # _prefill/_decode call below traces the model through kops)
+        with kops.execution_mode(self.execution_mode):
+            memory = None
+            if self.cfg.family == "audio":
+                from repro.models import whisper as W
 
-            memory = W.encode(self.params, self.cfg, batch["frames"])
-        if self.cfg.family == "vlm":
-            memory = batch.get("image_embeds")
-        nxt, cache = self._prefill(self.params, batch, cache)
-        out = [prompts, nxt]
-        pos = s
-        for _ in range(num_tokens - 1):
-            nxt, cache = self._decode(
-                self.params, nxt, cache, jnp.int32(pos), memory
-            )
-            out.append(nxt)
-            pos += 1
+                memory = W.encode(self.params, self.cfg, batch["frames"])
+            if self.cfg.family == "vlm":
+                memory = batch.get("image_embeds")
+            nxt, cache = self._prefill(self.params, batch, cache)
+            out = [prompts, nxt]
+            pos = s
+            for _ in range(num_tokens - 1):
+                nxt, cache = self._decode(
+                    self.params, nxt, cache, jnp.int32(pos), memory
+                )
+                out.append(nxt)
+                pos += 1
         return ServeResult(
             tokens=jnp.concatenate(out, axis=1), prompt_len=s,
             generated=num_tokens,

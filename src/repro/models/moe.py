@@ -149,7 +149,9 @@ def moe(
             )
             return jax.lax.psum(y_l, "model")
 
-        y = jax.shard_map(
+        from repro.parallel.compat import shard_map
+
+        y = shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(tok_spec, r_spec, ew_spec, ew_spec, ed_spec),

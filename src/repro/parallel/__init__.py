@@ -1,1 +1,5 @@
-"""Parallelism substrate: sharding hints."""
+"""Parallelism substrate: sharding hints + jax mesh-API compat."""
+
+from repro.parallel.compat import AxisType, auto_mesh, make_mesh, shard_map
+
+__all__ = ["AxisType", "auto_mesh", "make_mesh", "shard_map"]

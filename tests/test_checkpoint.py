@@ -81,8 +81,9 @@ def test_elastic_reshard_roundtrip(tmp_path):
     m = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     m.save(3, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import auto_mesh
+
+    mesh = auto_mesh((1, 1), ("data", "model"))
     shard = {"w": NamedSharding(mesh, P("data", "model"))}
     restored, _ = m.restore(3, tree, shardings=shard)
     assert restored["w"].sharding == shard["w"]

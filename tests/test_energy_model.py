@@ -4,6 +4,10 @@ The analytical model must be *ordered* the way the paper's measurements
 are, for any workload in a broad parameter space, not just LeNet.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 from hypothesis import given, settings

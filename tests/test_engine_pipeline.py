@@ -1,0 +1,367 @@
+"""SIDEBAR_PIPELINED: protocol, numerics, and overlap accounting.
+
+Three layers of coverage for the double-buffered engine path:
+
+  (a) mode-equivalence over random alternating ``LayerGraph``s — all four
+      execution modes agree numerically, and the two sidebar variants are
+      *bit-identical* (same eager op sequence, tiles split/concatenated
+      losslessly). Hypothesis-driven when available, seeded-random always.
+  (b) the per-region ownership + ping-pong protocol: every illegal
+      transition raises ``SidebarProtocolError``; the legal concurrent
+      access (accelerator fills one half while the host owns the other)
+      does not. Free-list recycling reuses placements.
+  (c) overlap accounting on hand-computed graphs: stall/overlap cycle
+      counts, handshake and invocation counts, and exact agreement
+      between ``engine.account`` and the counters ``engine.run`` collects.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_TABLE,
+    ExecutionMode,
+    FlexibleOp,
+    LayerGraph,
+    Owner,
+    PingPongPair,
+    SidebarBuffer,
+    SidebarProtocolError,
+    StaticOp,
+    account,
+    estimate,
+    pipeline_schedule,
+    run,
+)
+from repro.core.energy import VPU_RATE_DIV
+from repro.models import lenet
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # property tests skip, seeded-random ones still run
+    HAS_HYPOTHESIS = False
+
+ALL_MODES = list(ExecutionMode)
+SIDEBAR_MODES = (ExecutionMode.SIDEBAR, ExecutionMode.SIDEBAR_PIPELINED)
+ACTS = ["relu", "tanh", "sigmoid", "softplus", "gelu"]
+
+
+def _mm(w, x):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _random_graph(rng: np.random.Generator):
+    """Random alternating static/flexible graph + matching params/input."""
+    b = int(rng.integers(1, 5)) * 2
+    dims = [int(rng.integers(1, 9)) * 4]
+    ops = []
+    params = {}
+    n_ops = int(rng.integers(2, 7))
+    for i in range(n_ops):
+        if rng.random() < 0.5:
+            d_in, d_out = dims[-1], int(rng.integers(1, 9)) * 4
+            name = f"w{i}"
+            ops.append(
+                StaticOp(name, _mm, (b, d_out), flops=2 * b * d_in * d_out,
+                         weight_bytes=d_in * d_out * 4)
+            )
+            params[name] = np.asarray(
+                rng.normal(size=(d_in, d_out)) * 0.1, np.float32
+            )
+            dims.append(d_out)
+        else:
+            act = ACTS[int(rng.integers(0, len(ACTS)))]
+            ops.append(FlexibleOp(act, (b, dims[-1])))
+    graph = LayerGraph("rand", tuple(ops), (b, dims[0]))
+    x = np.asarray(rng.normal(size=(b, dims[0])) * 0.5, np.float32)
+    return graph, params, jnp.asarray(x)
+
+
+def _check_mode_equivalence(graph, params, x):
+    outs = {
+        m: np.asarray(run(graph, params, x, m, DEFAULT_TABLE).output)
+        for m in ALL_MODES
+    }
+    ref = outs[ExecutionMode.MONOLITHIC]
+    for m, o in outs.items():
+        np.testing.assert_allclose(o, ref, rtol=1e-5, atol=1e-6,
+                                   err_msg=str(m))
+    # the two sidebar variants run the identical eager op sequence —
+    # the ping-pong tile split must be lossless, i.e. bit-identical
+    np.testing.assert_array_equal(
+        outs[ExecutionMode.SIDEBAR], outs[ExecutionMode.SIDEBAR_PIPELINED]
+    )
+
+
+# ---------------------------------------------------------------------------
+# (a) mode equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_graphs_mode_equivalent_seeded(seed):
+    graph, params, x = _random_graph(np.random.default_rng(seed))
+    _check_mode_equivalence(graph, params, x)
+
+
+if HAS_HYPOTHESIS:
+
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_random_graphs_mode_equivalent_property(seed):
+        graph, params, x = _random_graph(np.random.default_rng(seed))
+        _check_mode_equivalence(graph, params, x)
+
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_pipelined_never_stalls_more_property(seed):
+        graph, _, _ = _random_graph(np.random.default_rng(seed))
+        a_serial = account(graph, ExecutionMode.SIDEBAR, DEFAULT_TABLE)
+        a_pipe = account(graph, ExecutionMode.SIDEBAR_PIPELINED, DEFAULT_TABLE)
+        assert a_pipe.stall_cycles <= a_serial.stall_cycles
+        assert a_pipe.stall_cycles + a_pipe.overlap_cycles == a_pipe.host_busy_cycles
+        assert a_serial.host_busy_cycles == a_pipe.host_busy_cycles
+
+
+def test_lenet_pipelined_matches_forward():
+    lenet.register_pooling(DEFAULT_TABLE)
+    params = lenet.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 32, 32), jnp.float32)
+    graph = lenet.to_layer_graphs(batch=8, activation="relu")[0]
+    out = run(graph, lenet.engine_params(params), x,
+              ExecutionMode.SIDEBAR_PIPELINED, DEFAULT_TABLE).output
+    ref = lenet.forward(params, x, DEFAULT_TABLE.lookup("relu"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (b) per-region ownership + ping-pong protocol
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_halves_are_legal():
+    """The accelerator may fill one half while the host owns the other —
+    the whole point of per-region ownership."""
+    sb = SidebarBuffer(8192)
+    pair = PingPongPair(sb, "op", 256, 256)
+    h0 = pair.acquire(0)
+    sb.write(Owner.ACCELERATOR, h0.operand.name, np.zeros(16, np.float32))
+    pair.to_host(h0)
+    # host owns h0; accelerator can still fill h1
+    h1 = pair.acquire(1)
+    sb.write(Owner.ACCELERATOR, h1.operand.name, np.ones(16, np.float32))
+    # ...but not touch h0
+    with pytest.raises(SidebarProtocolError, match="owned by host"):
+        sb.write(Owner.ACCELERATOR, h0.operand.name, np.ones(4, np.float32))
+    # and the host cannot reach h1
+    with pytest.raises(SidebarProtocolError, match="owned by accelerator"):
+        sb.read(Owner.HOST, h1.operand.name)
+
+
+def test_pingpong_reuse_before_release_raises():
+    sb = SidebarBuffer(8192)
+    pair = PingPongPair(sb, "op", 256, 256)
+    pair.acquire(0)
+    with pytest.raises(SidebarProtocolError, match="reused before release"):
+        pair.acquire(2)  # tile 2 maps back onto the un-released ping half
+
+
+def test_pingpong_state_machine_enforced():
+    sb = SidebarBuffer(8192)
+    pair = PingPongPair(sb, "op", 256, 256)
+    h0 = pair.acquire(0)
+    with pytest.raises(SidebarProtocolError, match="returned in state"):
+        pair.to_accelerator(h0)          # never invoked
+    with pytest.raises(SidebarProtocolError, match="released in state"):
+        pair.release(h0)                 # result never returned
+    pair.to_host(h0)
+    with pytest.raises(SidebarProtocolError, match="invoked in state"):
+        pair.to_host(h0)                 # double invoke
+    pair.to_accelerator(h0)
+    with pytest.raises(SidebarProtocolError, match="freed mid-flight"):
+        pair.free()                      # h0 returned but not released
+    pair.release(h0)
+
+
+def test_pass_region_already_owned_raises():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 64)
+    with pytest.raises(SidebarProtocolError, match="already with"):
+        sb.pass_region("a", Owner.ACCELERATOR)
+
+
+def test_free_list_recycles_placements():
+    sb = SidebarBuffer(4096)
+    r1 = sb.allocate("a", 200)
+    sb.free("a")
+    r2 = sb.allocate("b", 100)            # reuses the freed span
+    assert r2.offset == r1.offset
+    r3 = sb.allocate("c", 100)            # fits in the remainder of it
+    assert r3.offset < r1.offset + 256
+    # a long alternating sequence must not grow past capacity
+    for i in range(64):
+        sb.allocate(f"t{i}", 1024)
+        sb.free(f"t{i}")
+    assert sb.utilization() <= 1.0
+
+
+def test_region_owner_introspection():
+    sb = SidebarBuffer(4096)
+    sb.allocate("a", 64)
+    sb.allocate("b", 64)
+    assert sb.region_owner("a") is Owner.ACCELERATOR
+    sb.pass_region("a", Owner.HOST)
+    assert sb.region_owner("a") is Owner.HOST
+    assert sb.region_owner("b") is Owner.ACCELERATOR
+    assert sb.stats.handshakes == 1
+
+
+# ---------------------------------------------------------------------------
+# (c) overlap accounting
+# ---------------------------------------------------------------------------
+
+
+def _three_op_graph(b=2, d=8, act="relu", f1=1000, f2=2000):
+    return LayerGraph(
+        "tiny",
+        ops=(
+            StaticOp("w1", _mm, (b, d), flops=f1, weight_bytes=0),
+            FlexibleOp(act, (b, d)),
+            StaticOp("w2", _mm, (b, d), flops=f2, weight_bytes=0),
+        ),
+        in_shape=(b, d),
+    )
+
+
+def test_hand_computed_stage_timing():
+    g = _three_op_graph(b=2, d=8)          # operand 16 elements, relu cost 1
+    (stage,) = pipeline_schedule(g, DEFAULT_TABLE)
+    H = int(16 * 1 * VPU_RATE_DIV)          # 256 host cycles
+    assert stage.host_cycles == H
+    assert stage.producer_cycles == 1000
+    assert stage.consumer_cycles == 2000
+    assert stage.tiles == 2
+    # both halves (128 each) hide fully behind the adjacent statics
+    assert stage.overlap_cycles == min(H // 2, 500) + min(H // 2, 1000) == H
+    assert stage.stall_cycles == 0
+
+    a_serial = account(g, ExecutionMode.SIDEBAR, DEFAULT_TABLE)
+    a_pipe = account(g, ExecutionMode.SIDEBAR_PIPELINED, DEFAULT_TABLE)
+    assert a_serial.stall_cycles == H and a_serial.overlap_cycles == 0
+    assert a_pipe.stall_cycles == 0 and a_pipe.overlap_cycles == H
+    assert a_serial.handshakes == 2 and a_pipe.handshakes == 4
+    assert a_serial.host_invocations == 1 and a_pipe.host_invocations == 2
+
+
+def test_trailing_flexible_overlaps_producer_only():
+    g = LayerGraph(
+        "tail",
+        ops=(
+            StaticOp("w1", _mm, (2, 8), flops=60, weight_bytes=0),
+            FlexibleOp("relu", (2, 8)),     # H = 256, producer only
+        ),
+        in_shape=(2, 8),
+    )
+    (stage,) = pipeline_schedule(g, DEFAULT_TABLE)
+    assert stage.overlap_cycles == min(128, 30) + 0 == 30
+    assert stage.stall_cycles == 256 - 30
+
+
+def test_unsplittable_operand_degrades_to_serial():
+    g = _three_op_graph(b=1)                # leading axis 1: no tile split
+    (stage,) = pipeline_schedule(g, DEFAULT_TABLE)
+    assert stage.tiles == 1
+    assert stage.overlap_cycles == 0
+    a = account(g, ExecutionMode.SIDEBAR_PIPELINED, DEFAULT_TABLE)
+    assert a.stall_cycles == a.host_busy_cycles
+    assert a.handshakes == 2 and a.host_invocations == 1
+
+
+@pytest.mark.parametrize("mode", SIDEBAR_MODES)
+def test_run_counters_match_account(mode):
+    lenet.register_pooling(DEFAULT_TABLE)
+    params = lenet.engine_params(lenet.init(jax.random.PRNGKey(0)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 3, 32, 32), jnp.float32)
+    g = lenet.to_layer_graphs(batch=8, activation="relu")[0]
+    res = run(g, params, x, mode, DEFAULT_TABLE)
+    acct = account(g, mode, DEFAULT_TABLE)
+    st = res.sidebar.stats
+    assert st.stall_cycles == acct.stall_cycles
+    assert st.overlap_cycles == acct.overlap_cycles
+    assert st.host_busy_cycles == acct.host_busy_cycles
+    assert st.acc_busy_cycles == acct.acc_busy_cycles == g.static_flops
+    assert st.handshakes == acct.handshakes
+    assert st.host_invocations == acct.host_invocations
+
+
+@pytest.mark.parametrize("workload", ["lenet", "mlp"])
+@pytest.mark.parametrize("act", ["relu", "softplus"])
+def test_pipelined_strictly_fewer_stalls_and_faster(workload, act):
+    """Acceptance: on graphs with >= 2 flexible ops the pipelined mode
+    stalls strictly less and the model estimates strictly lower latency."""
+    if workload == "lenet":
+        lenet.register_pooling(DEFAULT_TABLE)
+        g = lenet.to_layer_graphs(batch=256, activation=act)[0]
+    else:
+        b, d, f = 64, 128, 512
+        g = LayerGraph(
+            "mlp2",
+            ops=(
+                StaticOp("w1", _mm, (b, f), flops=2 * b * d * f,
+                         weight_bytes=d * f * 4),
+                FlexibleOp(act, (b, f)),
+                StaticOp("w2", _mm, (b, d), flops=2 * b * f * d,
+                         weight_bytes=f * d * 4),
+                FlexibleOp(act, (b, d)),
+                StaticOp("w3", _mm, (b, d), flops=2 * b * d * d,
+                         weight_bytes=d * d * 4),
+            ),
+            in_shape=(b, d),
+        )
+    assert len(g.flexible_ops()) >= 2
+    a_serial = account(g, ExecutionMode.SIDEBAR, DEFAULT_TABLE)
+    a_pipe = account(g, ExecutionMode.SIDEBAR_PIPELINED, DEFAULT_TABLE)
+    assert a_pipe.stall_cycles < a_serial.stall_cycles
+    e_serial = estimate(a_serial)
+    e_pipe = estimate(a_pipe)
+    assert e_pipe.latency_s < e_serial.latency_s
+    assert e_pipe.edp < e_serial.edp
+    # same data movement and compute — only the schedule differs
+    assert a_pipe.sidebar_bytes == a_serial.sidebar_bytes
+    assert a_pipe.flex_vpu_ops == a_serial.flex_vpu_ops
+    assert a_pipe.mxu_flops == a_serial.mxu_flops
+
+
+def test_pipelined_kernel_matches_serial_kernel():
+    """The TPU realization: ping-pong VMEM pair == single-scratch kernel."""
+    from repro.kernels import ops as kops
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (16, 128), jnp.float32) * 0.1
+    w1 = jax.random.normal(k2, (128, 256), jnp.float32) * 0.05
+    w2 = jax.random.normal(k3, (256, 128), jnp.float32) * 0.05
+    for act in ("relu", "softplus"):
+        serial = kops.sidebar_mlp(x, w1, w2, act, use_kernel=True,
+                                  interpret=True, pipelined=False)
+        pipe = kops.sidebar_mlp(x, w1, w2, act, use_kernel=True,
+                                interpret=True, pipelined=True)
+        np.testing.assert_allclose(np.asarray(pipe), np.asarray(serial),
+                                   rtol=2e-5, atol=2e-5, err_msg=act)
+
+
+def test_ops_execution_mode_ambient_switch():
+    from repro.kernels import ops as kops
+
+    assert kops.current_execution_mode() is ExecutionMode.SIDEBAR
+    with kops.execution_mode(ExecutionMode.SIDEBAR_PIPELINED):
+        assert (kops.current_execution_mode()
+                is ExecutionMode.SIDEBAR_PIPELINED)
+    assert kops.current_execution_mode() is ExecutionMode.SIDEBAR

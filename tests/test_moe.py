@@ -80,8 +80,9 @@ def test_shard_map_matches_local_on_unit_mesh():
 
     y_local = M.moe(params, cfg, x, table=DEFAULT_TABLE, minfo=L.HOST,
                     mesh=None)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.parallel.compat import auto_mesh
+
+    mesh = auto_mesh((1, 1), ("data", "model"))
     minfo = L.MeshInfo.from_axes(("data", "model"))
     with mesh:
         y_sm = M.moe(params, cfg, x, table=DEFAULT_TABLE, minfo=minfo,

@@ -5,6 +5,10 @@ sequential recurrences exactly — for random decays, dts, and chunk sizes
 that do / don't divide the sequence (hypothesis-driven).
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

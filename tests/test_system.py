@@ -99,9 +99,11 @@ def test_auto_policy_picks_sidebar_for_lenet(lenet_setup):
     _, _, graphs = lenet_setup
     policy = AutoPolicy(table=DEFAULT_TABLE)
     modes = [policy(g) for g in graphs]
-    assert all(m is ExecutionMode.SIDEBAR for m in modes)
+    sidebar_modes = (ExecutionMode.SIDEBAR, ExecutionMode.SIDEBAR_PIPELINED)
+    assert all(m in sidebar_modes for m in modes)
 
 
+@pytest.mark.slow
 def test_multi_device_training_subprocess():
     """Sharded FSDP x TP train step on 8 host devices — must run and the
     loss must decrease. Subprocess so this test owns its device count."""
@@ -117,8 +119,8 @@ from repro.models.registry import get_model
 from repro.optim.optimizer import init_state
 from repro.data import pipeline
 
-mesh = jax.make_mesh((2,4), ("data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.parallel.compat import auto_mesh
+mesh = auto_mesh((2,4), ("data","model"))
 minfo = L.MeshInfo.from_axes(("data","model"))
 cfg = cfglib.get_smoke_config("qwen3-14b")
 cell = ShapeCell("mini", 16, 8, "train")
