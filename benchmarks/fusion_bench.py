@@ -42,7 +42,8 @@ from repro.core import (
 SHAPES = [(256, 512, 2048), (512, 1024, 4096)]
 ACTS = ["relu", "softplus"]
 MODES = list(ExecutionMode)
-F_BLOCKS = 4  # ping-pong schedule granularity for the pipelined variant
+F_BLOCKS = 4  # ring schedule granularity for the pipelined variant
+DEPTHS = (2, 3, 4, 8)  # ring depths swept by depth_sweep_rows
 
 
 def _time(fn, *args, repeats=5) -> float:
@@ -94,12 +95,24 @@ def _variants(act_name: str):
         lambda x, w1, w2: DEFAULT_TABLE.lookup(act_name)(x @ w1) @ w2
     )
 
+    return {
+        ExecutionMode.MONOLITHIC: fused,
+        ExecutionMode.FLEXIBLE_DMA: dma_style,
+        ExecutionMode.SIDEBAR: sidebar,
+        ExecutionMode.SIDEBAR_PIPELINED: _pipelined_impl(act_name, F_BLOCKS),
+    }
+
+
+def _pipelined_impl(act_name: str, f_blocks: int):
+    """Jitted T-deep ring schedule: the activation of f-block j-1
+    interleaves with the producer matmul of f-block j (one fused
+    dispatch); a ceil block size plus explicit spans covers any
+    remainder exactly."""
+    act = DEFAULT_TABLE.lookup(act_name)
+
     def pipelined(x, w1, w2):
-        # ping-pong schedule: activation of f-block j-1 interleaves with
-        # the producer matmul of f-block j (one fused dispatch); a ceil
-        # block size plus explicit spans covers any remainder exactly
         f = w1.shape[1]
-        bf = -(-f // F_BLOCKS)
+        bf = -(-f // f_blocks)
         spans = [(s, min(s + bf, f)) for s in range(0, f, bf)]
         y = jnp.zeros((x.shape[0], w2.shape[1]), jnp.float32)
         h_prev = x @ w1[:, spans[0][0]:spans[0][1]]
@@ -112,12 +125,64 @@ def _variants(act_name: str):
             h_prev = h_next
         return y.astype(x.dtype)
 
-    return {
-        ExecutionMode.MONOLITHIC: fused,
-        ExecutionMode.FLEXIBLE_DMA: dma_style,
-        ExecutionMode.SIDEBAR: sidebar,
-        ExecutionMode.SIDEBAR_PIPELINED: jax.jit(pipelined),
-    }
+    return jax.jit(pipelined)
+
+
+def _uneven_graph(m: int, d: int, f: int, d2: int, act: str) -> LayerGraph:
+    """MLP with deliberately uneven producer/consumer cost: the producer
+    matmul (d -> f) dwarfs the consumer (f -> d2, d2 << d), so the
+    consumer prologue's donation saturates early and deeper rings keep
+    winning — the regime where T matters."""
+    def mm(w, x):
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+    return LayerGraph(
+        name=f"uneven{m}x{d}x{f}x{d2}",
+        ops=(
+            StaticOp("w1", mm, (m, f), flops=2 * m * d * f,
+                     weight_bytes=d * f * 4),
+            FlexibleOp(act, (m, f)),
+            StaticOp("w2", mm, (m, d2), flops=2 * m * f * d2,
+                     weight_bytes=f * d2 * 4),
+        ),
+        in_shape=(m, d),
+    )
+
+
+def depth_sweep_rows() -> list[tuple[str, float, float]]:
+    """Ring-depth sweep (T in DEPTHS) on the uneven-cost graph: for each
+    depth, the measured wall time of the T-block ring schedule plus the
+    engine-run (measured) and schedule-model (modeled) stall/overlap
+    cycle counts — emitted as (tag, measured, modeled) rows."""
+    import numpy as np
+
+    from repro.core import run
+
+    m, d, f, d2 = 256, 512, 2048, 4
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (m, d), jnp.float32) * 0.1
+    w1 = jax.random.normal(k2, (d, f), jnp.float32) * 0.02
+    w2 = jax.random.normal(k3, (f, d2), jnp.float32) * 0.02
+    out = []
+    for act_name in ACTS:
+        graph = _uneven_graph(m, d, f, d2, act_name)
+        params = {"w1": np.asarray(w1), "w2": np.asarray(w2)}
+        tag = f"depth/{m}x{d}x{f}x{d2}/{act_name}"
+        for t in DEPTHS:
+            acct = account(graph, ExecutionMode.SIDEBAR_PIPELINED,
+                           DEFAULT_TABLE, depth=t)
+            res = run(graph, params, x, ExecutionMode.SIDEBAR_PIPELINED,
+                      DEFAULT_TABLE, depth=t)
+            st = res.sidebar.stats
+            us = _time(_pipelined_impl(act_name, t), x, w1, w2)
+            lat = estimate(acct).latency_s
+            out.append((f"{tag}/T{t}_us", us, lat))
+            out.append((f"{tag}/T{t}_stall_cycles",
+                        float(st.stall_cycles), float(acct.stall_cycles)))
+            out.append((f"{tag}/T{t}_overlap_cycles",
+                        float(st.overlap_cycles), float(acct.overlap_cycles)))
+    return out
 
 
 def rows() -> list[tuple[str, float, float]]:

@@ -8,6 +8,8 @@
   activation_sweep  — paper §6.1 (gap vs activation cost)
   claims            — pass/fail of the paper's quantitative claims
   fusion            — measured wall-clock sidebar-vs-DMA on this host
+  depth_sweep       — ring-depth sweep T in {2,3,4,8}: measured wall +
+                      measured/modeled stall and overlap cycles
   roofline          — per-(arch x shape x mesh) dry-run roofline terms
 
 Run: PYTHONPATH=src python -m benchmarks.run [section ...]
@@ -29,6 +31,7 @@ def main() -> None:
         "activation_sweep": paper_figures.activation_sweep,
         "claims": paper_figures.validate_paper_claims,
         "fusion": fusion_bench.rows,
+        "depth_sweep": fusion_bench.depth_sweep_rows,
         "roofline": roofline_report.rows,
     }
     wanted = sys.argv[1:] or list(sections)

@@ -17,7 +17,6 @@ from repro.core import (
     FlexibleOp,
     LayerGraph,
     StaticOp,
-    account,
     build_monolithic,
     estimate,
     make_default_table,

@@ -5,7 +5,8 @@ greedy-decode N tokens per request, report tokens/s. Architecture is
 selectable (--arch, smoke-scale configs on CPU).
 
 Run: PYTHONPATH=src python examples/serve_batch.py --arch deepseek-7b \
-         --batch 4 --prompt-len 32 --gen 16
+         --batch 4 --prompt-len 32 --gen 16 \
+         --execution-mode sidebar_pipelined --pipeline-depth 4
 """
 
 import argparse
@@ -15,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as cfglib
+from repro.core.modes import ExecutionMode, LayerPlan
 from repro.launch.serve import Server
 from repro.models.registry import get_model
 
@@ -25,15 +27,29 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument(
+        "--execution-mode", default="sidebar",
+        choices=[ExecutionMode.SIDEBAR.value,
+                 ExecutionMode.SIDEBAR_PIPELINED.value],
+        help="sidebar kernel variant backing the fused MLP ops",
+    )
+    ap.add_argument(
+        "--pipeline-depth", type=int, default=2,
+        help="VMEM ring depth T for sidebar_pipelined (>= 1)",
+    )
     args = ap.parse_args()
 
     cfg = cfglib.get_smoke_config(args.arch)
     api = get_model(cfg)
+    plan = LayerPlan(ExecutionMode(args.execution_mode),
+                     depth=args.pipeline_depth)
     print(f"arch={cfg.arch_id} (reduced config for CPU), "
-          f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}")
+          f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}, "
+          f"mode={plan.mode.value}, depth={plan.depth}")
 
     params = api.init(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, params, max_len=args.prompt_len + args.gen)
+    server = Server(cfg, params, max_len=args.prompt_len + args.gen,
+                    plan=plan)
 
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,

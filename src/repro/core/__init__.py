@@ -23,20 +23,31 @@ from repro.core.engine import (
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable, make_default_table
 from repro.core.modes import (
     ExecutionMode,
+    ExecutionPlan,
     FlexibleOp,
     LayerGraph,
+    LayerPlan,
     OpKind,
     StaticOp,
+    flexible_runs,
     segment_static_chains,
 )
-from repro.core.policy import AutoPolicy, fixed, plan
+from repro.core.policy import (
+    AutoPolicy,
+    PlanDiagnostics,
+    PlanResult,
+    fixed,
+    plan,
+)
 from repro.core.sidebar import (
     Owner,
     PingPongPair,
     Region,
+    RingSlot,
     SidebarBuffer,
     SidebarCall,
     SidebarProtocolError,
+    SidebarRing,
     SidebarStats,
     pipelined_capacity,
 )
@@ -56,20 +67,27 @@ __all__ = [
     "FunctionTable",
     "make_default_table",
     "ExecutionMode",
+    "ExecutionPlan",
     "FlexibleOp",
     "LayerGraph",
+    "LayerPlan",
     "OpKind",
     "StaticOp",
+    "flexible_runs",
     "segment_static_chains",
     "AutoPolicy",
+    "PlanDiagnostics",
+    "PlanResult",
     "fixed",
     "plan",
     "Owner",
     "PingPongPair",
     "Region",
+    "RingSlot",
     "SidebarBuffer",
     "SidebarCall",
     "SidebarProtocolError",
+    "SidebarRing",
     "SidebarStats",
     "StageTiming",
     "pipeline_schedule",

@@ -23,11 +23,16 @@ cost structure:
     as any vector engine (peak/16) — this reproduces the paper's
     Table 3, where the softplus monolithic is 21% slower than the relu
     monolithic (dedicated HW is not magic for transcendentals);
-  * SIDEBAR_PIPELINED keeps SIDEBAR's energy (same bytes, same compute)
-    but double buffering hides the overlapped fraction of the host work
-    (``overlap_cycles / host_busy_cycles``) behind accelerator compute —
-    only the ``stall_cycles`` fraction stays on the critical path, so
-    latency (and leakage energy, which scales with it) drops.
+  * SIDEBAR_PIPELINED keeps SIDEBAR's compute energy but the T-deep ring
+    hides the overlapped fraction of the host work (``overlap_cycles /
+    host_busy_cycles``, which grows with the ring depth the schedule was
+    accounted at) behind accelerator compute — only the ``stall_cycles``
+    fraction stays on the critical path, so latency (and leakage energy,
+    which scales with it) drops. Fused runs of consecutive flexible ops
+    also shrink ``sidebar_bytes`` (inter-op intermediates stay in host
+    registers) and the exposed handshake count (one invoke + one return
+    per *stage*). This is the model ``policy.AutoPolicy`` sweeps ring
+    depth against, under the sidebar-capacity constraint.
 
 Rates derived from the chip spec:
   vpu_rate        = peak_flops / 16   (vector unit vs systolic array)

@@ -25,15 +25,21 @@ Two layers of fidelity:
      ``core.energy.estimate``. The dry-run/roofline path uses this at
      production scale where numeric execution is impossible on CPU.
 
-Pipelined timeline (SIDEBAR_PIPELINED, per flexible op, 2 tiles):
+Pipelined timeline (SIDEBAR_PIPELINED, per flexible stage, T=2 tiles):
 
     acc : write A.op | write B.op      | read A.res+prologue | read B.res
     host:            | f(A.op)->A.res  | f(B.op)->B.res      |
                   ^invoke A         ^ret A / invoke B     ^ret B
 
-  The accelerator's wait shrinks from the host's full busy time to
-  ``host - min(host/2, prologue/2)``; ``pipeline_schedule`` is the single
-  source of truth for those counters, shared by ``run`` and ``account``.
+  At ring depth T the operand splits into T tiles and the accelerator
+  runs up to T-1 tiles ahead of the host, so all but ``host/T`` of the
+  host's busy time can hide behind the producer epilogue / consumer
+  prologue (each adjacent static op still donates at most half its
+  flops). Runs of consecutive flexible ops fuse into ONE host invocation
+  per tile: the inter-op intermediate stays in host registers, saving
+  both the per-op ownership round-trips and the extra sidebar crossings.
+  ``pipeline_schedule`` is the single source of truth for those
+  counters, shared by ``run`` and ``account`` at every depth.
 
 The fused TPU fast path for the hot pattern (matmul → activation → matmul)
 is ``kernels/sidebar_mlp.py``; the engine is the general mechanism and the
@@ -51,21 +57,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import constants
 from repro.core.energy import VPU_RATE_DIV, TaskAccounting
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
 from repro.core.modes import (
     ExecutionMode,
     FlexibleOp,
     LayerGraph,
+    LayerPlan,
     StaticOp,
+    flexible_runs,
     segment_static_chains,
 )
 from repro.core.sidebar import (
     Owner,
-    PingPongPair,
     SidebarBuffer,
     SidebarCall,
+    SidebarRing,
     pipelined_capacity,
     required_capacity,
 )
@@ -86,31 +93,39 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class StageTiming:
-    """Timing of one flexible op under the double-buffered protocol.
+    """Timing of one flexible *stage* (a fused run of one or more
+    consecutive flexible ops) under the T-deep ring protocol.
 
-    With two tiles, each half of the host's busy time can hide behind a
-    *different* piece of accelerator work: while the host computes tile 0,
-    the producer chain's epilogue fills tile 1 into the other half; while
-    the host computes tile 1, the consumer chain's prologue eats tile 0's
-    returned result. Each adjacent static op donates at most half its
-    flops to one flexible neighbour, so overlap never double-counts MXU
-    time.
+    With T tiles, all but the first tile's host time can hide behind the
+    producer chain's epilogue (the accelerator fills tiles t+1..T-1 while
+    the host computes tile t), and all but the last tile's host time can
+    hide behind the consumer chain's prologue (the accelerator eats
+    returned results while the host finishes the tail). Each adjacent
+    static op donates at most half its flops to one flexible neighbour,
+    so overlap never double-counts MXU time; total overlap is capped at
+    the host's busy time. T=2 reduces to PR 1's ping-pong math.
     """
 
-    index: int             # position of the flexible op in graph.ops
-    host_cycles: int       # total host VPU time for this op (all tiles)
+    index: int             # position of the stage's first op in graph.ops
+    host_cycles: int       # total host VPU time for this stage (all tiles)
     producer_cycles: int   # preceding static op's work (epilogue overlap)
     consumer_cycles: int   # following static op's work (prologue overlap)
-    tiles: int             # 2 when double-buffered, 1 (serial) when unsplit
+    tiles: int             # ring depth T; 1 (serial) when unsplittable
+    indices: tuple[int, ...] = ()   # all fused op positions (>= 1)
+    functions: tuple[str, ...] = ()  # function-table keys, in order
+    operand_bytes: int = 0  # stage input crossing acc -> sidebar -> host
+    result_bytes: int = 0   # stage output crossing host -> sidebar -> acc
 
     @property
     def overlap_cycles(self) -> int:
         """Cycles where host and accelerator are busy simultaneously."""
         if self.tiles < 2:
             return 0
-        half = self.host_cycles // 2
-        return min(half, self.producer_cycles // 2) + min(
-            half, self.consumer_cycles // 2
+        ahead = self.host_cycles * (self.tiles - 1) // self.tiles
+        return min(
+            self.host_cycles,
+            min(ahead, self.producer_cycles // 2)
+            + min(ahead, self.consumer_cycles // 2),
         )
 
     @property
@@ -130,7 +145,7 @@ def host_cycles_of(op: FlexibleOp, operand_shape: tuple[int, ...],
 
 def _splittable(operand_shape: tuple[int, ...],
                 out_shape: tuple[int, ...]) -> bool:
-    """A flexible op can be double-buffered when its operand and result
+    """A flexible op can be ring-buffered when its operand and result
     tile along a shared leading axis (elementwise, pooling, and rowwise
     functions all preserve the leading/batch axis)."""
     return (
@@ -142,26 +157,53 @@ def _splittable(operand_shape: tuple[int, ...],
 
 
 def pipeline_schedule(
-    graph: LayerGraph, table: FunctionTable = DEFAULT_TABLE
+    graph: LayerGraph,
+    table: FunctionTable = DEFAULT_TABLE,
+    *,
+    depth: int = 2,
+    fuse: bool = True,
 ) -> list[StageTiming]:
-    """Per-flexible-op overlap schedule for SIDEBAR_PIPELINED."""
+    """Per-flexible-stage overlap schedule for SIDEBAR_PIPELINED.
+
+    ``depth`` is the sidebar ring depth T: each splittable stage tiles
+    its operand into ``min(depth, leading_axis)`` chunks. ``fuse`` merges
+    runs of consecutive flexible ops into one stage (one host invocation
+    per tile). ``depth=2, fuse=True`` on an alternating graph reproduces
+    PR 1's double-buffered schedule exactly.
+    """
+    if depth < 1:
+        raise ValueError(f"ring depth must be >= 1, got {depth}")
     shapes = graph.shapes()
     stages = []
-    for i, op in enumerate(graph.ops):
-        if not isinstance(op, FlexibleOp):
-            continue
-        prev = graph.ops[i - 1] if i > 0 else None
-        nxt = graph.ops[i + 1] if i + 1 < len(graph.ops) else None
+    for indices in flexible_runs(graph, fuse=fuse):
+        first, last = indices[0], indices[-1]
+        prev = graph.ops[first - 1] if first > 0 else None
+        nxt = graph.ops[last + 1] if last + 1 < len(graph.ops) else None
         producer = prev.flops if isinstance(prev, StaticOp) else 0
         consumer = nxt.flops if isinstance(nxt, StaticOp) else 0
-        tiles = 2 if _splittable(shapes[i], op.out_shape) else 1
+        # the whole run must tile along one shared leading axis: every
+        # member's operand AND result keep the stage operand's lead
+        lead = shapes[first][0] if shapes[first] else 0
+        splittable = all(
+            _splittable(shapes[i], graph.ops[i].out_shape)
+            and shapes[i][0] == lead
+            for i in indices
+        )
+        tiles = min(depth, lead) if splittable and depth >= 2 else 1
         stages.append(
             StageTiming(
-                index=i,
-                host_cycles=host_cycles_of(op, shapes[i], table),
+                index=first,
+                host_cycles=sum(
+                    host_cycles_of(graph.ops[i], shapes[i], table)
+                    for i in indices
+                ),
                 producer_cycles=int(producer),
                 consumer_cycles=int(consumer),
                 tiles=tiles,
+                indices=indices,
+                functions=tuple(graph.ops[i].function for i in indices),
+                operand_bytes=graph.bytes_of(shapes[first]),
+                result_bytes=graph.bytes_of(graph.ops[last].out_shape),
             )
         )
     return stages
@@ -222,13 +264,21 @@ def run(
     graph: LayerGraph,
     params: dict[str, Any],
     x: Array,
-    mode: ExecutionMode,
+    mode: ExecutionMode | LayerPlan,
     table: FunctionTable = DEFAULT_TABLE,
     *,
     sidebar_capacity: int | None = None,
+    depth: int = 2,
+    fuse: bool = True,
 ) -> RunResult:
-    """Execute the task under ``mode``; returns output + exact accounting."""
-    acct = account(graph, mode, table)
+    """Execute the task under ``mode``; returns output + exact accounting.
+
+    ``depth``/``fuse`` shape the SIDEBAR_PIPELINED ring (ignored by the
+    other modes); passing a ``LayerPlan`` as ``mode`` supplies all three.
+    """
+    if isinstance(mode, LayerPlan):
+        mode, depth, fuse = mode.mode, mode.depth, mode.fuse
+    acct = account(graph, mode, table, depth=depth, fuse=fuse)
 
     if mode is ExecutionMode.MONOLITHIC:
         out = build_monolithic(graph, table)(params, x)
@@ -303,89 +353,100 @@ def run(
                 sb.free(res)
         return RunResult(x, acct, launches=1, sidebar=sb)
 
-    # SIDEBAR_PIPELINED: single fused launch; each flexible op's operand is
-    # split into two tiles along the leading axis and traded through a
-    # ping-pong region pair — the accelerator fills half B (and consumes
-    # half A's returned result) while the host computes half A.
+    # SIDEBAR_PIPELINED: single fused launch; each flexible stage's operand
+    # is split into T tiles along the leading axis and traded through a
+    # T-deep ring of region pairs — the accelerator fills slots up to T-1
+    # tiles ahead (and consumes returned results) while the host computes.
+    # Runs of consecutive flexible ops share one host invocation per tile.
     assert mode is ExecutionMode.SIDEBAR_PIPELINED, mode
-    schedule = {s.index: s for s in pipeline_schedule(graph, table)}
+    stages = pipeline_schedule(graph, table, depth=depth, fuse=fuse)
+    schedule = {s.index: s for s in stages}
+    shapes = graph.shapes()
     capacity = sidebar_capacity or 0
-    for _, op, shape in graph.flexible_ops():
+    for s in stages:
         capacity = max(
-            capacity, pipelined_capacity(shape, op.out_shape, graph.itemsize)
+            capacity,
+            pipelined_capacity(
+                shapes[s.index], graph.ops[s.indices[-1]].out_shape,
+                graph.itemsize, tiles=s.tiles,
+            ),
         )
     sb = SidebarBuffer(max(capacity, 512), name=f"{graph.name}.sidebar2")
+    fused_tail = {i for s in stages for i in s.indices[1:]}
 
     for i, op in enumerate(graph.ops):
         if isinstance(op, StaticOp):
             x = op.fn(params[op.name], x)
             sb.stats.acc_busy_cycles += int(op.flops)
             continue
+        if i in fused_tail:
+            continue  # already computed by its stage leader's invocation
         stage = schedule[i]
+        chain = stage.functions[1:]
+        out_shape = graph.ops[stage.indices[-1]].out_shape
         operand = np.asarray(x)
         itemsize = operand.dtype.itemsize
         if stage.tiles == 1:
             # unsplittable operand (leading axis too small or reshaped):
-            # degrade to the serial handshake on a single recycled pair
+            # degrade to the serial handshake on a single recycled pair —
+            # the fused chain still rides one invocation
             opn, res = f"op{i}.operand", f"op{i}.result"
             sb.allocate(opn, operand.nbytes)
-            sb.allocate(res, int(math.prod(op.out_shape)) * itemsize)
+            sb.allocate(res, int(math.prod(out_shape)) * itemsize)
             sb.write(Owner.ACCELERATOR, opn, operand)
             sb.invoke_host(
-                SidebarCall(op.function, (opn,), (res,), int(operand.size)),
+                SidebarCall(op.function, (opn,), (res,),
+                            int(operand.size), chain=chain),
                 table, dtype=operand.dtype,
             )
             x = jnp.asarray(sb.read(Owner.ACCELERATOR, res)).reshape(
-                op.out_shape
+                out_shape
             )
             sb.free(opn)
             sb.free(res)
         else:
-            split = operand.shape[0] - operand.shape[0] // 2  # ceil half
-            tiles = (operand[:split], operand[split:])
-            lead = (split, operand.shape[0] - split)
-            res_rest = int(math.prod(op.out_shape[1:]))
-            pair = PingPongPair(
+            tiles = np.array_split(operand, stage.tiles, axis=0)
+            res_rest = int(math.prod(out_shape[1:]))
+            ring = SidebarRing(
                 sb, f"op{i}",
                 operand_nbytes=int(tiles[0].nbytes),
-                result_nbytes=lead[0] * res_rest * itemsize,
+                result_nbytes=tiles[0].shape[0] * res_rest * itemsize,
+                depth=stage.tiles,
             )
-            results = [None, None]
-            # t=0: fill ping, raise its invoke flag
-            h0 = pair.acquire(0)
-            sb.write(Owner.ACCELERATOR, h0.operand.name, tiles[0])
-            pair.to_host(h0)
-            # while the "host computes" ping, the accelerator fills pong —
-            # legal only because ownership is per region
-            h1 = pair.acquire(1)
-            sb.write(Owner.ACCELERATOR, h1.operand.name, tiles[1])
-            # host finishes ping: result written, return flag raised
-            sb.host_call(
-                SidebarCall(op.function, (h0.operand.name,),
-                            (h0.result.name,), int(tiles[0].size)),
-                table, dtype=operand.dtype,
-            )
-            pair.to_accelerator(h0)
-            # host takes pong; accelerator concurrently consumes ping's
-            # result (the next static chain's prologue in the timeline)
-            pair.to_host(h1)
-            results[0] = np.asarray(
-                sb.read(Owner.ACCELERATOR, h0.result.name)
-            )
-            pair.release(h0)
-            sb.host_call(
-                SidebarCall(op.function, (h1.operand.name,),
-                            (h1.result.name,), int(tiles[1].size)),
-                table, dtype=operand.dtype,
-            )
-            pair.to_accelerator(h1)
-            results[1] = np.asarray(
-                sb.read(Owner.ACCELERATOR, h1.result.name)
-            )
-            pair.release(h1)
-            pair.free()
+            results: list[np.ndarray | None] = [None] * stage.tiles
+
+            def _retire(t: int, slot) -> None:
+                # host finishes tile t: result written, return flag
+                # raised; the accelerator reads it back (the next static
+                # chain's prologue in the timeline) and frees the slot
+                sb.host_call(
+                    SidebarCall(op.function, (slot.operand.name,),
+                                (slot.result.name,), int(tiles[t].size),
+                                chain=chain),
+                    table, dtype=operand.dtype,
+                )
+                ring.to_accelerator(slot)
+                results[t] = np.asarray(
+                    sb.read(Owner.ACCELERATOR, slot.result.name)
+                )
+                ring.release(slot)
+
+            # ring depth == tile count, so every tile gets its own slot
+            # and the accelerator can fill/invoke all T tiles ahead of
+            # the host — legal only because ownership is per region.
+            # Retirement then drains FIFO (slot-reuse at depth < tiles
+            # is exercised by the ring protocol tests, not this path).
+            window: list[tuple[int, Any]] = []
+            for t in range(stage.tiles):
+                slot = ring.acquire(t)
+                sb.write(Owner.ACCELERATOR, slot.operand.name, tiles[t])
+                ring.to_host(slot)
+                window.append((t, slot))
+            for entry in window:  # pipeline drain
+                _retire(*entry)
+            ring.free()
             x = jnp.asarray(np.concatenate(results, axis=0)).reshape(
-                op.out_shape
+                out_shape
             )
         sb.stats.host_busy_cycles += stage.host_cycles
         sb.stats.overlap_cycles += stage.overlap_cycles
@@ -400,15 +461,22 @@ def run(
 
 def account(
     graph: LayerGraph,
-    mode: ExecutionMode,
+    mode: ExecutionMode | LayerPlan,
     table: FunctionTable = DEFAULT_TABLE,
+    *,
+    depth: int = 2,
+    fuse: bool = True,
 ) -> TaskAccounting:
     """Exact byte/flop/protocol counts for one task under ``mode``.
 
     Shared by all modes (paper: "the initial and final DMA processes must
     still take place"): task input DMA-in, task output DMA-out, weight
-    streaming, and the MXU flops of the static ops.
+    streaming, and the MXU flops of the static ops. ``depth``/``fuse``
+    shape the SIDEBAR_PIPELINED ring schedule; a ``LayerPlan`` supplies
+    all three at once.
     """
+    if isinstance(mode, LayerPlan):
+        mode, depth, fuse = mode.mode, mode.depth, mode.fuse
     io_bytes = graph.in_bytes + graph.out_bytes
     weight_bytes = graph.weight_bytes
     mxu = graph.static_flops
@@ -457,12 +525,14 @@ def account(
             flex_stages=len(flex),
         )
 
-    # SIDEBAR / SIDEBAR_PIPELINED share all data movement: the intermediate
-    # crosses the scratchpad twice (acc<->sb and host<->sb) and never
-    # touches HBM. They differ only in the protocol-event counts and in how
-    # much of the host's busy time the accelerator actually waits out.
+    # SIDEBAR / SIDEBAR_PIPELINED: the intermediate crosses the scratchpad
+    # twice (acc<->sb and host<->sb) and never touches HBM. They differ in
+    # the protocol-event counts, in how much of the host's busy time the
+    # accelerator actually waits out, and — when pipelining fuses a run of
+    # consecutive flexible ops — in the inter-op intermediates that stay
+    # in host registers instead of re-crossing the sidebar.
     sidebar_bytes = 2 * flex_bytes_total
-    stages = pipeline_schedule(graph, table)
+    stages = pipeline_schedule(graph, table, depth=depth, fuse=fuse)
     host_busy = sum(s.host_cycles for s in stages)
 
     if mode is ExecutionMode.SIDEBAR:
@@ -490,13 +560,16 @@ def account(
         mode=mode.value,
         hbm_io_bytes=io_bytes,
         hbm_weight_bytes=weight_bytes,
-        sidebar_bytes=sidebar_bytes,
+        # only each stage's input and final output cross the sidebar;
+        # fused inter-op intermediates stay in host registers
+        sidebar_bytes=2 * sum(s.operand_bytes + s.result_bytes
+                              for s in stages),
         mxu_flops=mxu,
         flex_vpu_ops=flex_ops_total,
         flex_elements=flex_elems_total,
         launches=1,
         dma_flushes=2,
-        # one flag per half per direction: 2 tiles x (invoke + return)
+        # one flag per slot per direction: T tiles x (invoke + return)
         handshakes=sum(2 * s.tiles for s in stages),
         host_invocations=sum(s.tiles for s in stages),
         flex_stages=len(stages),
@@ -509,11 +582,14 @@ def account(
 
 def account_model(
     graphs: list[LayerGraph],
-    mode: ExecutionMode,
+    mode: ExecutionMode | LayerPlan,
     table: FunctionTable = DEFAULT_TABLE,
+    *,
+    depth: int = 2,
+    fuse: bool = True,
 ) -> TaskAccounting:
     """Accounting for a whole model = merged per-layer tasks."""
-    accts = [account(g, mode, table) for g in graphs]
+    accts = [account(g, mode, table, depth=depth, fuse=fuse) for g in graphs]
     total = accts[0]
     for a in accts[1:]:
         total = total.merge(a)

@@ -19,17 +19,25 @@ dataflow alternates *static* tensor primitives with *flexible* functions:
 
 plus the overlapped refinement this repo adds on top of the paper:
 
-  SIDEBAR_PIPELINED — SIDEBAR with the scratchpad split into a ping-pong
-                 region pair and ownership tracked per region: the host
-                 computes flexible op *i* on one half while the
-                 accelerator fills / consumes the other half (tile t+1,
-                 or the next static chain's prologue). Latency per stage
+  SIDEBAR_PIPELINED — SIDEBAR with the scratchpad split into a T-deep
+                 ring of (operand, result) region pairs and ownership
+                 tracked per region: the host computes flexible op *i*
+                 tile t on one slot while the accelerator fills /
+                 consumes up to T-1 other slots (tiles t+1..t+T-1, or
+                 the next static chain's prologue). Latency per stage
                  becomes max(host, accelerator) instead of host +
-                 accelerator; the numerics are bit-identical.
+                 accelerator; the numerics are bit-identical. Runs of
+                 *consecutive* flexible ops fuse into one host
+                 invocation per tile (one ownership round-trip for the
+                 whole run).
 
 The IR below expresses a layer as an alternating op list. Models in
 ``repro.models`` emit these graphs; ``core.engine`` executes/accounts them;
 ``kernels/`` provides the fused TPU implementations for the hot shapes.
+
+``LayerPlan``/``ExecutionPlan`` carry the *deployment* choice — which
+mode, how deep a ring, whether to fuse — per layer; ``core.policy``
+produces them, ``core.engine`` and ``kernels.ops`` consume them.
 """
 
 from __future__ import annotations
@@ -37,7 +45,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import math
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import jax
 
@@ -144,6 +152,105 @@ class LayerGraph:
             max(self.bytes_of(shape), self.bytes_of(op.out_shape))
             for _, op, shape in flex
         )
+
+
+def flexible_runs(
+    graph: LayerGraph, fuse: bool = True
+) -> list[tuple[int, ...]]:
+    """Indices of flexible ops grouped into maximal consecutive runs.
+
+    A run of adjacent ``FlexibleOp``s shares one host invocation per tile
+    under SIDEBAR_PIPELINED (the intermediate between fused ops stays in
+    host registers and never re-crosses the sidebar). With ``fuse=False``
+    every flexible op is its own singleton run.
+    """
+    runs: list[tuple[int, ...]] = []
+    current: list[int] = []
+    for i, op in enumerate(graph.ops):
+        if isinstance(op, FlexibleOp):
+            if current and (not fuse or current[-1] != i - 1):
+                runs.append(tuple(current))
+                current = []
+            current.append(i)
+        elif current:
+            runs.append(tuple(current))
+            current = []
+    if current:
+        runs.append(tuple(current))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# Execution plans: the deployment knobs threaded from policy to engine,
+# kernels, and serving.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """How one layer graph should execute: mode + ring depth + fusion.
+
+    ``depth`` is the sidebar ring depth (= tile count T the overlap
+    schedule uses); it only matters for SIDEBAR_PIPELINED. ``fuse``
+    controls whether runs of consecutive flexible ops share one host
+    invocation per tile.
+    """
+
+    mode: ExecutionMode
+    depth: int = 2
+    fuse: bool = True
+
+    def __post_init__(self) -> None:
+        if self.depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {self.depth}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A per-layer mapping of ``LayerPlan``s plus a default.
+
+    Produced by ``core.policy.AutoPolicy.plan`` (or built uniformly via
+    ``ExecutionPlan.uniform``); consumed by ``core.engine`` (schedule /
+    accounting), ``kernels.ops`` (ambient kernel-variant selection), and
+    ``launch.serve.Server``.
+    """
+
+    default: LayerPlan
+    layers: Mapping[str, LayerPlan] = dataclasses.field(
+        default_factory=dict
+    )
+
+    @classmethod
+    def uniform(cls, mode: ExecutionMode | str, depth: int = 2,
+                fuse: bool = True) -> "ExecutionPlan":
+        if isinstance(mode, str):
+            mode = ExecutionMode(mode)
+        return cls(default=LayerPlan(mode, depth, fuse))
+
+    def for_layer(self, name: str) -> LayerPlan:
+        return self.layers.get(name, self.default)
+
+
+def coerce_layer_plan(
+    plan: "LayerPlan | ExecutionPlan | ExecutionMode | str",
+    depth: int | None = None,
+) -> LayerPlan:
+    """Normalize any plan spelling to a single ``LayerPlan`` — the one
+    coercion shared by ``kernels.ops`` and ``launch.serve`` so the two
+    entry points cannot drift. A whole ``ExecutionPlan`` collapses to its
+    default (kernels are layer-agnostic); a bare mode gets depth 2 when
+    pipelined, else the ring-less depth 1; ``depth`` overrides either.
+    """
+    if isinstance(plan, ExecutionPlan):
+        plan = plan.default
+    if isinstance(plan, str):
+        plan = ExecutionMode(plan)
+    if isinstance(plan, ExecutionMode):
+        base = 2 if plan is ExecutionMode.SIDEBAR_PIPELINED else 1
+        plan = LayerPlan(plan, depth=depth if depth is not None else base)
+    elif depth is not None and depth != plan.depth:
+        plan = dataclasses.replace(plan, depth=depth)
+    return plan
 
 
 def segment_static_chains(graph: LayerGraph) -> list[list[Op]]:

@@ -1,28 +1,48 @@
-"""Per-layer execution-mode policies.
+"""Per-layer execution planning.
 
 A production deployment doesn't pick one mode globally: the paper itself
 notes the trade depends on the intermediate size and the flexible-function
-cost. A ``Policy`` maps each layer graph to an ``ExecutionMode``; the
-``auto`` policy picks a sidebar mode (SIDEBAR or the double-buffered
-SIDEBAR_PIPELINED, whichever the EDP model prefers — pipelined wins
-whenever the graph exposes overlap) when the intermediate fits the
-sidebar, falling back to FLEXIBLE_DMA for oversized intermediates (with a
-warning counter) — monolithic is only chosen when the layer has no
-flexible ops at all (nothing to flex).
+cost, and FlexNN-style dataflow tuning shows the *buffer depth* matters as
+much as the mode. ``AutoPolicy`` therefore plans per layer:
+
+  * mode — a sidebar mode when the intermediate fits the sidebar (SIDEBAR
+    or SIDEBAR_PIPELINED, whichever the EDP model prefers), falling back
+    to FLEXIBLE_DMA for oversized intermediates; MONOLITHIC only when the
+    layer has no flexible ops at all (nothing to flex);
+  * ring depth — swept over ``depth_candidates`` under the
+    sidebar-capacity constraint (a T-deep ring needs T slot pairs), EDP
+    scored via ``core.energy.estimate``;
+  * fusion — runs of consecutive flexible ops share one host invocation
+    per tile (always beneficial in the model: fewer exposed handshakes
+    and fewer sidebar crossings for identical compute).
+
+``AutoPolicy.plan`` returns a ``PlanResult`` — the ``ExecutionPlan`` plus
+``PlanDiagnostics`` — rather than mutating policy state, so a policy
+object can be shared/reused concurrently. Calling the policy like a plain
+``Policy`` (``policy(graph) -> ExecutionMode``) remains supported.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections import Counter
+from typing import Callable, Sequence
 
 from repro.core import constants
 from repro.core.energy import estimate
 from repro.core.engine import account
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
-from repro.core.modes import ExecutionMode, LayerGraph
+from repro.core.modes import (
+    ExecutionMode,
+    ExecutionPlan,
+    LayerGraph,
+    LayerPlan,
+)
+from repro.core.sidebar import pipelined_capacity
 
 Policy = Callable[[LayerGraph], ExecutionMode]
+
+DEFAULT_DEPTH_CANDIDATES = (1, 2, 3, 4, 8)
 
 
 def fixed(mode: ExecutionMode) -> Policy:
@@ -32,31 +52,151 @@ def fixed(mode: ExecutionMode) -> Policy:
     return policy
 
 
-@dataclasses.dataclass
-class AutoPolicy:
-    """EDP-minimizing mode choice with a sidebar-capacity constraint."""
+@dataclasses.dataclass(frozen=True)
+class PlanDiagnostics:
+    """What the planner saw while choosing — returned, never mutated in.
 
-    table: FunctionTable = dataclasses.field(default_factory=lambda: DEFAULT_TABLE)
+    ``fallbacks`` lists layers forced off the sidebar modes by capacity;
+    ``edp`` maps layer name -> the chosen plan's modeled EDP (J*s);
+    ``depth_sweep`` maps layer name -> {depth: EDP} for every capacity-
+    feasible SIDEBAR_PIPELINED depth that was scored.
+    """
+
+    fallbacks: tuple[str, ...] = ()
+    edp: dict[str, float] = dataclasses.field(default_factory=dict)
+    depth_sweep: dict[str, dict[int, float]] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanResult:
+    """An ``ExecutionPlan`` plus the diagnostics of producing it."""
+
+    plan: ExecutionPlan
+    diagnostics: PlanDiagnostics
+
+    def for_layer(self, name: str) -> LayerPlan:
+        return self.plan.for_layer(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoPolicy:
+    """EDP-minimizing per-layer (mode, ring depth, fusion) choice under a
+    sidebar-capacity constraint. Stateless: diagnostics come back in the
+    ``PlanResult``, not as instance mutation."""
+
+    table: FunctionTable = dataclasses.field(
+        default_factory=lambda: DEFAULT_TABLE
+    )
     sidebar_capacity: int = constants.VMEM_BYTES_PER_CHIP // 2
     chip: constants.ChipSpec = constants.V5E
-    fallbacks: int = 0  # count of layers forced off SIDEBAR by capacity
+    depth_candidates: Sequence[int] = DEFAULT_DEPTH_CANDIDATES
 
-    def __call__(self, graph: LayerGraph) -> ExecutionMode:
-        if not graph.flexible_ops():
-            return ExecutionMode.MONOLITHIC
-        candidates = [ExecutionMode.FLEXIBLE_DMA]
-        if graph.max_intermediate_bytes() <= self.sidebar_capacity:
-            candidates.append(ExecutionMode.SIDEBAR)
-            candidates.append(ExecutionMode.SIDEBAR_PIPELINED)
-        else:
-            self.fallbacks += 1
-        best = min(
-            candidates,
-            key=lambda m: estimate(account(graph, m, self.table), self.chip).edp,
+    # -- per-layer planning ------------------------------------------------
+    def _ring_fits(self, graph: LayerGraph, depth: int) -> bool:
+        """A T-deep ring stages T (operand, result) slot pairs per stage;
+        the largest stage's ring must fit the sidebar."""
+        need = max(
+            (
+                pipelined_capacity(
+                    shape, op.out_shape, graph.itemsize, tiles=depth
+                )
+                for _, op, shape in graph.flexible_ops()
+            ),
+            default=0,
         )
-        return best
+        return need <= self.sidebar_capacity
+
+    def plan_layer(self, graph: LayerGraph) -> tuple[LayerPlan, dict]:
+        """Choose (mode, depth, fuse) for one layer; returns the plan and
+        a diagnostics dict: {"fallback": bool, "edp": float,
+        "depth_sweep": {depth: edp}}."""
+        if not graph.flexible_ops():
+            plan = LayerPlan(ExecutionMode.MONOLITHIC, depth=1)
+            edp = estimate(account(graph, plan.mode, self.table),
+                           self.chip).edp
+            return plan, {"fallback": False, "edp": edp, "depth_sweep": {}}
+
+        candidates: list[LayerPlan] = [
+            LayerPlan(ExecutionMode.FLEXIBLE_DMA, depth=1)
+        ]
+        sweep: dict[int, float] = {}
+        fallback = graph.max_intermediate_bytes() > self.sidebar_capacity
+        if not fallback:
+            candidates.append(LayerPlan(ExecutionMode.SIDEBAR, depth=1))
+            for d in self.depth_candidates:
+                if d >= 1 and self._ring_fits(graph, d):
+                    candidates.append(
+                        LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=d)
+                    )
+
+        scored: list[tuple[float, LayerPlan]] = []
+        for plan in candidates:
+            edp = estimate(account(graph, plan, self.table), self.chip).edp
+            if plan.mode is ExecutionMode.SIDEBAR_PIPELINED:
+                sweep[plan.depth] = edp
+            scored.append((edp, plan))
+        # stable min: ties keep candidate order (DMA < SIDEBAR < deeper)
+        best_edp, best = min(scored, key=lambda t: t[0])
+        return best, {
+            "fallback": fallback, "edp": best_edp, "depth_sweep": sweep,
+        }
+
+    # -- whole-model planning ----------------------------------------------
+    def plan(self, graphs: Sequence[LayerGraph]) -> PlanResult:
+        """Resolve an ``ExecutionPlan`` over ``graphs`` ('compilation
+        tool' of paper §3.1), plus the diagnostics of choosing it.
+
+        The plan's ``default`` is the modal per-layer choice: consumers
+        that can only apply one plan globally (``Server`` traces kernels
+        layer-agnostically and uses ``plan.default``) then follow what
+        the sweep actually chose for most layers, not a hardcoded one.
+        """
+        layers: dict[str, LayerPlan] = {}
+        fallbacks: list[str] = []
+        edp: dict[str, float] = {}
+        depth_sweep: dict[str, dict[int, float]] = {}
+        for g in graphs:
+            lp, diag = self.plan_layer(g)
+            layers[g.name] = lp
+            edp[g.name] = diag["edp"]
+            if diag["depth_sweep"]:
+                depth_sweep[g.name] = diag["depth_sweep"]
+            if diag["fallback"]:
+                fallbacks.append(g.name)
+        if layers:
+            counts = Counter(layers.values())
+            default = counts.most_common(1)[0][0]
+        else:
+            default = LayerPlan(ExecutionMode.SIDEBAR_PIPELINED)
+        return PlanResult(
+            plan=ExecutionPlan(default=default, layers=layers),
+            diagnostics=PlanDiagnostics(
+                fallbacks=tuple(fallbacks), edp=edp,
+                depth_sweep=depth_sweep,
+            ),
+        )
+
+    # -- Policy-callable compatibility --------------------------------------
+    def __call__(self, graph: LayerGraph) -> ExecutionMode:
+        return self.plan_layer(graph)[0].mode
 
 
-def plan(graphs: list[LayerGraph], policy: Policy) -> dict[str, ExecutionMode]:
-    """Resolve a mode per layer (the 'compilation tool' of paper §3.1)."""
-    return {g.name: policy(g) for g in graphs}
+def plan(graphs: Sequence[LayerGraph],
+         policy: Policy | AutoPolicy | None = None) -> PlanResult:
+    """Resolve a plan per layer. With an ``AutoPolicy`` (the default) the
+    full (mode, depth, fuse) sweep runs; a plain ``Policy`` callable only
+    chooses modes and gets default ring parameters."""
+    if policy is None:
+        policy = AutoPolicy()
+    if isinstance(policy, AutoPolicy):
+        return policy.plan(graphs)
+    layers = {g.name: LayerPlan(policy(g)) for g in graphs}
+    return PlanResult(
+        plan=ExecutionPlan(
+            default=LayerPlan(ExecutionMode.SIDEBAR_PIPELINED),
+            layers=layers,
+        ),
+        diagnostics=PlanDiagnostics(),
+    )

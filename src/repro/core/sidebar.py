@@ -25,24 +25,30 @@ Pipelined protocol (ExecutionMode.SIDEBAR_PIPELINED)
 
 Ownership is tracked **per region**, not per buffer: the mutual-exclusion
 guarantee the hardware needs is per-location, so the host may own one set
-of regions (one *half*) while the accelerator concurrently fills another.
-``PingPongPair`` packages the double-buffering discipline on top of that:
-two halves, each an (operand, result) region pair with a four-state
+of regions (one *slot*) while the accelerator concurrently fills another.
+``SidebarRing`` packages the T-deep buffering discipline on top of that:
+``depth`` slots, each an (operand, result) region pair with a four-state
 lifecycle
 
     free -> filled -> at_host -> returned -> free
             (acc wrote   (invoke     (return    (acc read result,
-             operand)     flag)       flag)      half released)
+             operand)     flag)       flag)      slot released)
 
-Acquiring a half that has not completed its previous cycle raises
-``SidebarProtocolError`` ("reuse before release") — the software analogue
-of clobbering a buffer the host is still reading. The timeline the engine
-models (host computes flexible op *i* tile t on half A while the
-accelerator works tile t+1 / the next static chain's prologue on half B):
+Tile ``t`` maps onto slot ``t % depth``; acquiring a slot that has not
+completed its previous cycle raises ``SidebarProtocolError`` ("reuse
+before release") — the software analogue of clobbering a buffer the host
+is still reading. The timeline the engine models at depth 2 (host
+computes flexible op *i* tile t on slot A while the accelerator works
+tile t+1 / the next static chain's prologue on slot B):
 
     acc : fill A | fill B         | prologue(A.res) | prologue(B.res) ...
     host:        | f(A) -> A.res  | f(B) -> B.res   |
     flag:   A->h   B->h  A->acc     B->acc
+
+Deeper rings let the accelerator run up to ``depth`` tiles ahead of the
+host, so a larger fraction of the host's busy time hides behind the
+producer epilogue / consumer prologue (see ``engine.StageTiming``).
+``PingPongPair`` survives as the fixed ``depth=2`` special case.
 
 Regions are recycled through a first-fit **free list** (``free``), so a
 task with many flexible ops reuses the same sidebar area without the
@@ -89,12 +95,24 @@ class Region:
 
 @dataclasses.dataclass(frozen=True)
 class SidebarCall:
-    """The argument block of one host invocation (paper §3.3)."""
+    """The argument block of one host invocation (paper §3.3).
+
+    ``chain`` carries the *fused* tail of a run of consecutive flexible
+    ops: the host applies ``function`` to the operand regions, then each
+    chained function to the running result, and only the final result is
+    written back — one ownership round-trip covers the whole run, and the
+    inter-op intermediates never re-cross the sidebar.
+    """
 
     function: str          # function-table key ("function pointer")
     in_regions: tuple[str, ...]
     out_regions: tuple[str, ...]
     n_elements: int        # payload size (drives VPU cost)
+    chain: tuple[str, ...] = ()  # fused follow-on function-table keys
+
+    @property
+    def functions(self) -> tuple[str, ...]:
+        return (self.function, *self.chain)
 
 
 @dataclasses.dataclass
@@ -323,7 +341,10 @@ class SidebarBuffer:
         path passes a ping-pong half; ``invoke_host`` passes the buffer)."""
         entry = table[call.function]
         inputs = [self.read(Owner.HOST, r) for r in call.in_regions]
-        out = np.asarray(entry.fn(*[i for i in inputs])).astype(dtype)
+        out = np.asarray(entry.fn(*[i for i in inputs]))
+        for fused in call.chain:  # fused run: stays in host registers
+            out = np.asarray(table[fused].fn(out))
+        out = out.astype(dtype)
         outs = [out] if len(call.out_regions) == 1 else list(out)
         for region_name, arr in zip(call.out_regions, outs):
             self.write(Owner.HOST, region_name, arr)
@@ -336,7 +357,7 @@ class SidebarBuffer:
         This models: write args -> raise flag (pass to host) -> host reads,
         computes via the function table, writes results -> lower flag (pass
         back to accelerator). The accelerator stalls for the whole cycle —
-        the pipelined path (``PingPongPair``) is the overlapped variant.
+        the pipelined path (``SidebarRing``) is the overlapped variant.
         """
         if self.owner is not Owner.ACCELERATOR:
             raise SidebarProtocolError(
@@ -356,16 +377,13 @@ class SidebarBuffer:
 
 
 # ---------------------------------------------------------------------------
-# Ping-pong double buffering (the pipelined protocol's region discipline).
+# T-deep ring buffering (the pipelined protocol's region discipline).
 # ---------------------------------------------------------------------------
 
 
-_HALF_LABELS = ("ping", "pong")
-
-
 @dataclasses.dataclass
-class PingPongHalf:
-    """One half of a double buffer: an (operand, result) region pair plus
+class RingSlot:
+    """One slot of a sidebar ring: an (operand, result) region pair plus
     the lifecycle state the protocol enforces."""
 
     label: str
@@ -378,78 +396,103 @@ class PingPongHalf:
         return (self.operand.name, self.result.name)
 
 
-class PingPongPair:
-    """Two sidebar halves traded between accelerator and host.
+# Back-compat alias: PR 1 called a depth-2 slot a "half".
+PingPongHalf = RingSlot
 
-    The accelerator fills half ``t % 2`` with tile ``t`` while the host
-    computes on the other half — per-region ownership makes the concurrent
-    access legal; this class makes the *ordering* discipline checkable:
-    a half must complete free -> filled -> at_host -> returned -> free
-    before it can be acquired again ("reuse before release" raises).
+
+class SidebarRing:
+    """``depth`` sidebar slots traded between accelerator and host.
+
+    The accelerator fills slot ``t % depth`` with tile ``t`` while the
+    host computes on earlier slots — per-region ownership makes the
+    concurrent access legal; this class makes the *ordering* discipline
+    checkable: a slot must complete free -> filled -> at_host ->
+    returned -> free before it can be acquired again ("reuse before
+    release" raises). ``depth=2`` is the classic ping-pong pair; deeper
+    rings let the accelerator run further ahead of the host.
     """
 
     def __init__(self, sb: SidebarBuffer, name: str,
-                 operand_nbytes: int, result_nbytes: int) -> None:
+                 operand_nbytes: int, result_nbytes: int,
+                 depth: int = 2) -> None:
+        if depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
         self._sb = sb
         self.name = name
-        self.halves = [
-            PingPongHalf(
-                label,
-                sb.allocate(f"{name}.{label}.operand", operand_nbytes),
-                sb.allocate(f"{name}.{label}.result", result_nbytes),
+        self.depth = depth
+        self.slots = [
+            RingSlot(
+                f"slot{k}",
+                sb.allocate(f"{name}.slot{k}.operand", operand_nbytes),
+                sb.allocate(f"{name}.slot{k}.result", result_nbytes),
             )
-            for label in _HALF_LABELS
+            for k in range(depth)
         ]
 
-    def half(self, tile_index: int) -> PingPongHalf:
-        return self.halves[tile_index % 2]
+    def slot(self, tile_index: int) -> RingSlot:
+        return self.slots[tile_index % self.depth]
 
-    def acquire(self, tile_index: int) -> PingPongHalf:
-        h = self.half(tile_index)
-        if h.state != "free":
+    # PR-1 vocabulary, kept so depth-2 call sites read naturally.
+    half = slot
+
+    @property
+    def halves(self) -> list[RingSlot]:
+        return self.slots
+
+    def acquire(self, tile_index: int) -> RingSlot:
+        s = self.slot(tile_index)
+        if s.state != "free":
             raise SidebarProtocolError(
-                f"ping-pong half {self.name}.{h.label} reused before release "
-                f"(state={h.state!r}); the previous tile's result must be "
-                "read back and the half released first"
+                f"ring slot {self.name}.{s.label} reused before release "
+                f"(state={s.state!r}); the tile {self.depth} back must have "
+                "its result read back and the slot released first"
             )
-        h.state = "filled"
-        return h
+        s.state = "filled"
+        return s
 
-    def to_host(self, h: PingPongHalf) -> None:
-        if h.state != "filled":
+    def to_host(self, s: RingSlot) -> None:
+        if s.state != "filled":
             raise SidebarProtocolError(
-                f"half {self.name}.{h.label} invoked in state {h.state!r} "
+                f"slot {self.name}.{s.label} invoked in state {s.state!r} "
                 "(operand not filled)"
             )
-        self._sb.pass_region(h.region_names, Owner.HOST)
-        h.state = "at_host"
+        self._sb.pass_region(s.region_names, Owner.HOST)
+        s.state = "at_host"
 
-    def to_accelerator(self, h: PingPongHalf) -> None:
-        if h.state != "at_host":
+    def to_accelerator(self, s: RingSlot) -> None:
+        if s.state != "at_host":
             raise SidebarProtocolError(
-                f"half {self.name}.{h.label} returned in state {h.state!r}"
+                f"slot {self.name}.{s.label} returned in state {s.state!r}"
             )
-        self._sb.pass_region(h.region_names, Owner.ACCELERATOR)
-        h.state = "returned"
+        self._sb.pass_region(s.region_names, Owner.ACCELERATOR)
+        s.state = "returned"
 
-    def release(self, h: PingPongHalf) -> None:
-        if h.state != "returned":
+    def release(self, s: RingSlot) -> None:
+        if s.state != "returned":
             raise SidebarProtocolError(
-                f"half {self.name}.{h.label} released in state {h.state!r} "
+                f"slot {self.name}.{s.label} released in state {s.state!r} "
                 "(result not returned to the accelerator)"
             )
-        h.state = "free"
+        s.state = "free"
 
     def free(self) -> None:
-        """Return both halves' placements to the buffer's free list."""
-        for h in self.halves:
-            if h.state not in ("free",):
+        """Return every slot's placements to the buffer's free list."""
+        for s in self.slots:
+            if s.state not in ("free",):
                 raise SidebarProtocolError(
-                    f"half {self.name}.{h.label} freed mid-flight "
-                    f"(state={h.state!r})"
+                    f"slot {self.name}.{s.label} freed mid-flight "
+                    f"(state={s.state!r})"
                 )
-            self._sb.free(h.operand.name)
-            self._sb.free(h.result.name)
+            self._sb.free(s.operand.name)
+            self._sb.free(s.result.name)
+
+
+class PingPongPair(SidebarRing):
+    """The fixed depth-2 ring of PR 1 — kept as the named special case."""
+
+    def __init__(self, sb: SidebarBuffer, name: str,
+                 operand_nbytes: int, result_nbytes: int) -> None:
+        super().__init__(sb, name, operand_nbytes, result_nbytes, depth=2)
 
 
 def required_capacity(shape: tuple[int, ...], itemsize: int, copies: int = 1) -> int:
@@ -465,15 +508,19 @@ def pipelined_capacity(
     out_shape: tuple[int, ...],
     itemsize: int,
     tiles: int = 2,
+    depth: int | None = None,
 ) -> int:
-    """Capacity for one double-buffered flexible op: two halves, each an
-    (operand-tile, result-tile) pair, tiles split along the leading axis."""
+    """Capacity for one ring-buffered flexible op: ``depth`` slots, each an
+    (operand-tile, result-tile) pair, tiles split along the leading axis.
+    ``depth`` defaults to ``tiles`` (every in-flight tile gets a slot)."""
+    depth = tiles if depth is None else depth
+
     def tile_bytes(shape: tuple[int, ...]) -> int:
         if not shape:
             return itemsize
         lead = -(-shape[0] // tiles)  # ceil: the larger tile
         return int(lead * math.prod(shape[1:])) * itemsize
 
-    return CONTROL_BYTES + 2 * (
+    return CONTROL_BYTES + depth * (
         _align(tile_bytes(operand_shape)) + _align(tile_bytes(out_shape))
     )

@@ -13,15 +13,18 @@ Each op:
 from __future__ import annotations
 
 import contextlib
-import functools
 import threading
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
-from repro.core.modes import ExecutionMode
+from repro.core.modes import (
+    ExecutionMode,
+    ExecutionPlan,
+    LayerPlan,
+    coerce_layer_plan,
+)
 from repro.kernels import ref
 from repro.kernels.activations import activation as _activation_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -43,35 +46,58 @@ def _tileable(n: int, t: int = 128) -> bool:
     return n % t == 0
 
 
-# -- execution-mode selection (wired from launch.serve.Server) -------------
+# -- execution-plan selection (wired from launch.serve.Server) -------------
 # Models call the sidebar ops unconditionally; which kernel variant backs
-# them (serial VMEM scratch vs ping-pong pipelined) is a deployment choice,
-# so it is carried here as thread-local ambient state rather than threaded
-# through every model signature.
+# them (serial VMEM scratch vs T-deep ring pipelined, and how deep) is a
+# deployment choice, so it is carried here as thread-local ambient state —
+# a ``LayerPlan`` — rather than threaded through every model signature.
 
-_MODE_STATE = threading.local()
+_PLAN_STATE = threading.local()
+
+_DEFAULT_PLAN = LayerPlan(ExecutionMode.SIDEBAR, depth=1)
+
+
+def current_plan() -> LayerPlan:
+    return getattr(_PLAN_STATE, "plan", _DEFAULT_PLAN)
 
 
 def current_execution_mode() -> ExecutionMode:
-    return getattr(_MODE_STATE, "mode", ExecutionMode.SIDEBAR)
+    return current_plan().mode
 
 
-def set_execution_mode(mode: ExecutionMode | str) -> ExecutionMode:
-    """Set the ambient sidebar kernel variant; returns the previous one."""
-    if isinstance(mode, str):
-        mode = ExecutionMode(mode)
-    prev = current_execution_mode()
-    _MODE_STATE.mode = mode
+def set_plan(
+    plan: LayerPlan | ExecutionPlan | ExecutionMode | str,
+    depth: int | None = None,
+) -> LayerPlan:
+    """Set the ambient sidebar kernel plan; returns the previous one."""
+    prev = current_plan()
+    _PLAN_STATE.plan = coerce_layer_plan(plan, depth)
     return prev
 
 
+def set_execution_mode(
+    mode: ExecutionMode | str, depth: int | None = None
+) -> ExecutionMode:
+    """Set the ambient sidebar kernel variant; returns the previous one."""
+    return set_plan(mode, depth).mode
+
+
 @contextlib.contextmanager
-def execution_mode(mode: ExecutionMode | str):
-    prev = set_execution_mode(mode)
+def execution_plan(
+    plan: LayerPlan | ExecutionPlan | ExecutionMode | str,
+    depth: int | None = None,
+):
+    prev = set_plan(plan, depth)
     try:
         yield
     finally:
-        set_execution_mode(prev)
+        set_plan(prev)
+
+
+@contextlib.contextmanager
+def execution_mode(mode: ExecutionMode | str, depth: int | None = None):
+    with execution_plan(mode, depth):
+        yield
 
 
 def sidebar_mlp(
@@ -84,12 +110,14 @@ def sidebar_mlp(
     use_kernel: bool | None = None,
     interpret: bool = False,
     pipelined: bool | None = None,
+    depth: int | None = None,
 ) -> Array:
     """y = f(x @ w1) @ w2 — fused sidebar kernel when eligible.
 
-    ``pipelined`` selects the double-buffered ping-pong variant; when
-    None it follows the ambient ``execution_mode`` (SIDEBAR_PIPELINED =>
-    pipelined). Both variants are numerically identical.
+    ``pipelined`` selects the T-deep ring variant and ``depth`` its ring
+    depth; when None they follow the ambient ``execution_plan``
+    (SIDEBAR_PIPELINED => pipelined at the plan's depth). All variants
+    are numerically identical.
     """
     m, d = x.shape
     _, f = w1.shape
@@ -99,11 +127,22 @@ def sidebar_mlp(
         if use_kernel is not None
         else (eligible and (_on_tpu() or interpret))
     )
+    plan = current_plan()
     if pipelined is None:
-        pipelined = current_execution_mode() is ExecutionMode.SIDEBAR_PIPELINED
+        pipelined = plan.mode is ExecutionMode.SIDEBAR_PIPELINED
+    if depth is None:
+        if plan.mode is ExecutionMode.SIDEBAR_PIPELINED:
+            depth = plan.depth  # the planner's scored choice, verbatim
+        else:
+            depth = 2 if pipelined else 1  # explicit opt-in: classic ring
     if use:
-        kernel = _mlp_kernel_pipelined if pipelined else _mlp_kernel
-        return kernel(x, w1, w2, activation, table=table, interpret=interpret)
+        if pipelined:
+            return _mlp_kernel_pipelined(
+                x, w1, w2, activation, table=table, depth=depth,
+                interpret=interpret,
+            )
+        return _mlp_kernel(x, w1, w2, activation, table=table,
+                           interpret=interpret)
     return ref.sidebar_mlp_ref(x, w1, w2, activation, table)
 
 

@@ -117,50 +117,53 @@ def _kernel(x_ref, w1_ref, w2_ref, o_ref, sidebar_ref, acc_ref, *,
 
 
 def _pipelined_kernel(x_ref, w1_ref, w2_ref, o_ref, sidebar_ref, acc_ref, *,
-                      activation: Callable, n_f_blocks: int, out_dtype):
-    """One (i, j) step of the double-buffered schedule, j in [0, n_f].
+                      activation: Callable, n_f_blocks: int, depth: int,
+                      out_dtype):
+    """One (i, j) step of the T-deep ring schedule, j in [0, n_f + T - 2].
 
-    The sidebar is a ping-pong pair ``(2, bm, bf)``; stage 1 (produce) and
-    stage 2 (consume) of the same step touch *different* halves, so there
-    is no data dependence between them and the MXU matmul of stage 1 can
-    overlap the VPU activation + MXU accumulate of stage 2 — the VMEM
-    realization of the engine's per-region ownership trade:
+    The sidebar is a ring ``(T, bm, bf)``; the producer of step j and the
+    consumer of step j touch *different* slots (the consumer lags T-1
+    steps), so there is no data dependence between them and the MXU
+    matmul of the produce stage can overlap the VPU activation + MXU
+    accumulate of the consume stage — the VMEM realization of the
+    engine's per-region ownership trade. At T=2 (lag 1):
 
         j:       0          1              2         ...   n_f
-        produce  h0 -> A    h1 -> B        h2 -> A
-        consume             f(A) @ w2_0    f(B) @ w2_1     f(.) @ w2_last
+        produce  h0 -> s0   h1 -> s1       h2 -> s0
+        consume             f(s0) @ w2_0   f(s1) @ w2_1    f(.) @ w2_last
 
-    The grid runs one step past the last f-block (the pipeline drain).
+    The grid runs T-1 steps past the last f-block (the pipeline drain).
     """
     j = pl.program_id(1)
+    lag = depth - 1
 
     @pl.when(j < n_f_blocks)
     def _produce():
-        # static primitive #1 (MXU): fill this step's half of the sidebar
+        # static primitive #1 (MXU): fill this step's slot of the ring
         h = jnp.dot(
             x_ref[...], w1_ref[...], preferred_element_type=jnp.float32
         )
-        sidebar_ref[j % 2] = h
+        sidebar_ref[j % depth] = h
 
-    @pl.when(j > 0)
+    @pl.when(j >= lag)
     def _consume():
-        # flexible function (VPU) + static primitive #2 (MXU) on the half
-        # filled by the PREVIOUS step — the other half of the ping-pong
-        act = activation(sidebar_ref[(j - 1) % 2])
+        # flexible function (VPU) + static primitive #2 (MXU) on the slot
+        # filled T-1 steps ago — the oldest in-flight slot of the ring
+        act = activation(sidebar_ref[(j - lag) % depth])
         part = jnp.dot(
             act.astype(w2_ref.dtype), w2_ref[...],
             preferred_element_type=jnp.float32,
         )
 
-        @pl.when(j == 1)
+        @pl.when(j == lag)
         def _init():
             acc_ref[...] = part
 
-        @pl.when(j > 1)
+        @pl.when(j > lag)
         def _accum():
             acc_ref[...] += part
 
-    @pl.when(j == n_f_blocks)
+    @pl.when(j == n_f_blocks + lag - 1)
     def _flush():
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
@@ -230,36 +233,42 @@ def sidebar_mlp_pipelined(
     table: FunctionTable = DEFAULT_TABLE,
     block_m: int | None = None,
     block_f: int | None = None,
+    depth: int = 2,
     interpret: bool = False,
 ) -> Array:
-    """Double-buffered f(x @ w1) @ w2: the sidebar is a ping-pong VMEM
-    pair and the f-axis grid is software-pipelined one step deep, so the
-    producer matmul of block j and the activation+consumer matmul of
-    block j-1 are independent within every grid step (the kernel analogue
-    of ExecutionMode.SIDEBAR_PIPELINED). Numerically identical to
-    ``sidebar_mlp``.
+    """Ring-buffered f(x @ w1) @ w2: the sidebar is a ``depth``-deep VMEM
+    ring and the f-axis grid is software-pipelined ``depth - 1`` steps
+    deep, so the producer matmul of block j and the activation+consumer
+    matmul of block j-(depth-1) are independent within every grid step
+    (the kernel analogue of ExecutionMode.SIDEBAR_PIPELINED at ring depth
+    T). ``depth=2`` is the PR-1 ping-pong pair; ``depth=1`` degenerates
+    to the serial schedule. Numerically identical to ``sidebar_mlp`` at
+    every depth.
     """
     m, d = x.shape
     d1, f = w1.shape
     f2, d2 = w2.shape
     if d != d1 or f != f2:
         raise ValueError(f"shape mismatch: x{x.shape} w1{w1.shape} w2{w2.shape}")
+    if depth < 1:
+        raise ValueError(f"ring depth must be >= 1, got {depth}")
     fn = table.lookup(activation) if isinstance(activation, str) else activation
 
-    bm, bf = choose_tiles(m, d, f, x.dtype.itemsize, sidebar_copies=2)
+    bm, bf = choose_tiles(m, d, f, x.dtype.itemsize, sidebar_copies=depth)
     bm = block_m or bm
     bf = block_f or bf
     if m % bm or f % bf:
         raise ValueError(f"M={m} % bm={bm} or F={f} % bf={bf} != 0")
     n_f_blocks = f // bf
+    lag = depth - 1
 
-    # one drain step past the last f-block; weight index maps clamp so the
-    # warm-up/drain steps re-read a valid (ignored) panel
-    grid = (m // bm, n_f_blocks + 1)
+    # depth-1 drain steps past the last f-block; weight index maps clamp
+    # so the warm-up/drain steps re-read a valid (ignored) panel
+    grid = (m // bm, n_f_blocks + lag)
     last = n_f_blocks - 1
     kernel = functools.partial(
         _pipelined_kernel, activation=fn, n_f_blocks=n_f_blocks,
-        out_dtype=x.dtype,
+        depth=depth, out_dtype=x.dtype,
     )
     return pl.pallas_call(
         kernel,
@@ -267,13 +276,16 @@ def sidebar_mlp_pipelined(
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((d, bf), lambda i, j: (0, jnp.minimum(j, last))),
-            pl.BlockSpec((bf, d2), lambda i, j: (jnp.maximum(j - 1, 0), 0)),
+            pl.BlockSpec(
+                (bf, d2),
+                lambda i, j: (jnp.clip(j - lag, 0, last), 0),
+            ),
         ],
         out_specs=pl.BlockSpec((bm, d2), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d2), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((2, bm, bf), jnp.float32),  # ping-pong Sidebar pair
-            pltpu.VMEM((bm, d2), jnp.float32),     # output accumulator
+            pltpu.VMEM((depth, bm, bf), jnp.float32),  # the Sidebar ring
+            pltpu.VMEM((bm, d2), jnp.float32),         # output accumulator
         ],
         interpret=interpret,
     )(x, w1, w2)

@@ -17,7 +17,7 @@ reduce-scatter / param all-gather over ("pod","data") — DCN-friendly.
 
 from __future__ import annotations
 
-from repro.models.layers import MULTI_POD, SINGLE_POD, MeshInfo
+from repro.models.layers import MeshInfo
 from repro.parallel.compat import auto_mesh
 
 

@@ -22,7 +22,6 @@ MODEL_FLOPS (the useful-compute yardstick):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 from repro.core import constants

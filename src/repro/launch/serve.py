@@ -5,12 +5,16 @@ the decode_32k / long_500k dry-run cells lower); ``Server`` is a small
 batched-request driver (pad-to-bucket, prefill once, greedy decode) used
 by the serving example and integration tests.
 
-``Server(execution_mode=...)`` selects which sidebar kernel variant backs
-the model's fused MLP ops: ``ExecutionMode.SIDEBAR`` (single VMEM scratch)
-or ``ExecutionMode.SIDEBAR_PIPELINED`` (ping-pong double buffer — the
-host-side flexible function of tile t overlaps the MXU work of tile t±1).
-The choice is applied as ambient state around trace time, so the same
-model code serves under either variant with no signature changes.
+``Server(plan=...)`` selects which sidebar kernel variant backs the
+model's fused MLP ops: ``ExecutionMode.SIDEBAR`` (single VMEM scratch) or
+``ExecutionMode.SIDEBAR_PIPELINED`` (T-deep VMEM ring — the host-side
+flexible function of tile t overlaps the MXU work of up to T-1 in-flight
+neighbours; the ring depth comes from the plan). The plan may be a
+``LayerPlan``, a whole ``ExecutionPlan`` (its default layer plan is used
+at trace time — kernels are layer-agnostic), an ``ExecutionMode``, or a
+mode string; ``execution_mode=`` remains as the PR-1 spelling. The choice
+is applied as ambient state around trace time, so the same model code
+serves under any variant with no signature changes.
 """
 
 from __future__ import annotations
@@ -20,10 +24,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeCell
-from repro.core.modes import ExecutionMode
+from repro.configs.base import ModelConfig
+from repro.core.modes import (
+    ExecutionMode,
+    ExecutionPlan,
+    LayerPlan,
+    coerce_layer_plan,
+)
 from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
@@ -76,7 +84,9 @@ class Server:
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  max_len: int = 256,
-                 execution_mode: ExecutionMode | str = ExecutionMode.SIDEBAR,
+                 execution_mode: ExecutionMode | str | None = None,
+                 plan: LayerPlan | ExecutionPlan | ExecutionMode | str |
+                 None = None,
                  ) -> None:
         self.cfg = cfg
         self.params = params
@@ -86,17 +96,22 @@ class Server:
             L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
         )
         self.max_len = max_len
-        if isinstance(execution_mode, str):
-            execution_mode = ExecutionMode(execution_mode)
-        if execution_mode not in (
+        if plan is not None and execution_mode is not None:
+            raise ValueError("pass either plan= or execution_mode=, not both")
+        if plan is None:
+            plan = (ExecutionMode.SIDEBAR if execution_mode is None
+                    else execution_mode)
+        plan = coerce_layer_plan(plan)
+        if plan.mode not in (
             ExecutionMode.SIDEBAR, ExecutionMode.SIDEBAR_PIPELINED
         ):
             raise ValueError(
                 "Server serves through the sidebar fast path; "
-                f"execution_mode must be SIDEBAR or SIDEBAR_PIPELINED, got "
-                f"{execution_mode}"
+                "the plan's mode must be SIDEBAR or SIDEBAR_PIPELINED, got "
+                f"{plan.mode}"
             )
-        self.execution_mode = execution_mode
+        self.plan = plan
+        self.execution_mode = plan.mode
         self._prefill = jax.jit(
             make_prefill_step(cfg, self.api, self.minfo, mesh)
         )
@@ -118,7 +133,7 @@ class Server:
         batch = {"tokens": prompts, **(extra or {})}
         # ambient kernel-variant selection must wrap trace time (the first
         # _prefill/_decode call below traces the model through kops)
-        with kops.execution_mode(self.execution_mode):
+        with kops.execution_plan(self.plan):
             memory = None
             if self.cfg.family == "audio":
                 from repro.models import whisper as W

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,13 +29,12 @@ from repro.checkpoint.manager import CheckpointManager, config_hash
 from repro.configs.base import ModelConfig, ShapeCell, TrainConfig
 from repro.data import pipeline
 from repro.ft.watchdog import StragglerWatchdog, Verdict
-from repro.launch.input_specs import batch_shardings, input_specs
+from repro.launch.input_specs import batch_shardings
 from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
 from repro.optim import compression
 from repro.optim.optimizer import (
     AdamState,
-    abstract_state,
     adamw_update,
     init_state,
     state_shardings,

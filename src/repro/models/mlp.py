@@ -12,7 +12,6 @@ mode with ``cfg.use_pallas`` the plain MLP runs through the fused
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable

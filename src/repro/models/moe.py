@@ -23,13 +23,11 @@ The HOST (single-device) path runs the same algorithm without collectives.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import MeshInfo, ParamSpec, _maybe
@@ -162,7 +160,6 @@ def moe(
 
     if cfg.num_shared_experts:
         sh = params["shared"]
-        from repro.models.mlp import linear  # local import to avoid cycle
         g = act(jnp.dot(x2, sh["w_gate"], preferred_element_type=jnp.float32))
         u = jnp.dot(x2, sh["w_up"], preferred_element_type=jnp.float32)
         y = y + jnp.dot((g * u).astype(x2.dtype), sh["w_down"],

@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 from repro.configs.base import ModelConfig
 from repro.models import rwkv_model, transformer, whisper, zamba

@@ -19,7 +19,6 @@ the scanned body (cfg.remat: full | dots | none).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -11,7 +11,6 @@ keeps the backbone uniform; FLOP/byte-identical for roofline purposes).
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

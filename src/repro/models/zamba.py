@@ -14,7 +14,6 @@ pure-attention archs skip it.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ Large-scale knobs:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

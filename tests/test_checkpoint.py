@@ -1,7 +1,6 @@
 """Checkpoint manager: atomic, async, retention, elastic reshard."""
 
 import os
-import threading
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import pytest
 pytest.importorskip("hypothesis")
 
 import hypothesis.strategies as st
-import jax.numpy as jnp
 from hypothesis import given, settings
 
 from repro.core import (

@@ -1,0 +1,171 @@
+"""ExecutionPlan / AutoPolicy: depth-aware planning with diagnostics.
+
+The planner sweeps ring depth per layer under the sidebar-capacity
+constraint, scores candidates with the EDP model, and returns the plan
+*plus* diagnostics (instead of mutating policy state, which made policy
+objects unshareable in PR 1).
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DEFAULT_TABLE,
+    AutoPolicy,
+    ExecutionMode,
+    ExecutionPlan,
+    FlexibleOp,
+    LayerGraph,
+    LayerPlan,
+    PlanResult,
+    StaticOp,
+    account,
+    estimate,
+    plan,
+)
+from repro.core.sidebar import pipelined_capacity
+
+
+def _mm(w, x):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _graph(name="g", b=64, d=512, f=1024, d2=8, act="softplus"):
+    return LayerGraph(
+        name,
+        ops=(
+            StaticOp("w1", _mm, (b, f), flops=2 * b * d * f,
+                     weight_bytes=d * f * 4),
+            FlexibleOp(act, (b, f)),
+            StaticOp("w2", _mm, (b, d2), flops=2 * b * f * d2,
+                     weight_bytes=f * d2 * 4),
+        ),
+        in_shape=(b, d),
+    )
+
+
+def _static_only(name="s", b=8, d=32):
+    return LayerGraph(
+        name,
+        ops=(StaticOp("w", _mm, (b, d), flops=2 * b * d * d,
+                      weight_bytes=d * d * 4),),
+        in_shape=(b, d),
+    )
+
+
+def test_layer_plan_validates_depth():
+    with pytest.raises(ValueError, match="depth"):
+        LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=0)
+
+
+def test_execution_plan_uniform_and_lookup():
+    p = ExecutionPlan.uniform("sidebar_pipelined", depth=4)
+    assert p.default.mode is ExecutionMode.SIDEBAR_PIPELINED
+    assert p.for_layer("anything").depth == 4
+    override = ExecutionPlan(
+        default=LayerPlan(ExecutionMode.SIDEBAR),
+        layers={"hot": LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=8)},
+    )
+    assert override.for_layer("hot").depth == 8
+    assert override.for_layer("cold").mode is ExecutionMode.SIDEBAR
+
+
+def test_auto_policy_plan_returns_result_without_mutation():
+    policy = AutoPolicy(table=DEFAULT_TABLE)
+    graphs = [_graph("a"), _graph("b", act="relu"), _static_only("c")]
+    result = policy.plan(graphs)
+    assert isinstance(result, PlanResult)
+    # stateless: the PR-1 mutable counter is gone and the policy is frozen
+    assert not hasattr(policy, "fallbacks")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        policy.sidebar_capacity = 0
+    assert set(result.plan.layers) == {"a", "b", "c"}
+    assert result.for_layer("c").mode is ExecutionMode.MONOLITHIC
+    for name in ("a", "b"):
+        lp = result.for_layer(name)
+        assert lp.mode in (ExecutionMode.SIDEBAR,
+                           ExecutionMode.SIDEBAR_PIPELINED)
+        assert result.diagnostics.edp[name] > 0
+    assert result.diagnostics.fallbacks == ()
+    # the plan default is the modal per-layer choice (what Server's
+    # layer-agnostic trace applies), not a hardcoded constant
+    assert result.plan.default in set(result.plan.layers.values())
+    assert result.plan.default == max(
+        result.plan.layers.values(),
+        key=list(result.plan.layers.values()).count,
+    )
+
+
+def test_auto_policy_diagnoses_capacity_fallback():
+    tiny = AutoPolicy(table=DEFAULT_TABLE, sidebar_capacity=1024)
+    g = _graph("big")
+    result = tiny.plan([g])
+    assert result.for_layer("big").mode is ExecutionMode.FLEXIBLE_DMA
+    assert result.diagnostics.fallbacks == ("big",)
+    assert result.diagnostics.depth_sweep.get("big", {}) == {}
+
+
+def test_auto_policy_depth_sweep_prefers_deeper_ring():
+    """On the uneven graph the EDP model strictly prefers T=4 over T=2, so
+    the sweep must surface and choose a deeper-than-2 ring."""
+    policy = AutoPolicy(table=DEFAULT_TABLE)
+    g = _graph("uneven")
+    result = policy.plan([g])
+    lp = result.for_layer("uneven")
+    assert lp.mode is ExecutionMode.SIDEBAR_PIPELINED
+    sweep = result.diagnostics.depth_sweep["uneven"]
+    assert set(sweep) >= {2, 4}
+    assert sweep[4] < sweep[2]
+    assert lp.depth >= 4
+    assert sweep[lp.depth] == min(sweep.values())
+    assert result.diagnostics.edp["uneven"] == min(sweep.values())
+
+
+def test_auto_policy_capacity_limits_depth():
+    """A T-deep ring needs T slot pairs; when the lead axis doesn't divide
+    by T the ceil-sized tiles make deeper rings strictly bigger. Shrink
+    the sidebar so depth 8 no longer fits and the sweep must stop at a
+    feasible depth."""
+    g = _graph("cap", b=12)  # 12 % 8 != 0: depth 8 stages 8 x ceil(12/8)
+    (_, op, shape), = [t for t in g.flexible_ops()]
+    cap_for = lambda t: pipelined_capacity(shape, op.out_shape,
+                                           g.itemsize, tiles=t)
+    capacity = cap_for(4)  # depth 4 fits exactly; depth 8 does not
+    assert cap_for(8) > capacity >= cap_for(4)
+    policy = AutoPolicy(table=DEFAULT_TABLE, sidebar_capacity=capacity)
+    result = policy.plan([g])
+    sweep = result.diagnostics.depth_sweep["cap"]
+    assert 8 not in sweep and 4 in sweep
+    assert result.for_layer("cap").depth <= 4
+
+
+def test_policy_callable_compatibility():
+    policy = AutoPolicy(table=DEFAULT_TABLE)
+    g = _graph("x")
+    assert policy(g) is policy.plan([g]).for_layer("x").mode
+
+
+def test_module_plan_wraps_plain_policies():
+    from repro.core.policy import fixed
+
+    graphs = [_graph("a"), _graph("b")]
+    result = plan(graphs, fixed(ExecutionMode.SIDEBAR))
+    assert isinstance(result, PlanResult)
+    assert all(result.for_layer(g.name).mode is ExecutionMode.SIDEBAR
+               for g in graphs)
+
+
+def test_planned_depth_reduces_modeled_latency():
+    """Threading the planned depth into account/estimate beats the PR-1
+    fixed double buffer on the depth-sensitive graph."""
+    g = _graph("z")
+    policy = AutoPolicy(table=DEFAULT_TABLE)
+    lp = policy.plan([g]).for_layer("z")
+    assert lp.mode is ExecutionMode.SIDEBAR_PIPELINED and lp.depth > 2
+    planned = estimate(account(g, lp, DEFAULT_TABLE))
+    fixed_t2 = estimate(account(g, ExecutionMode.SIDEBAR_PIPELINED,
+                                DEFAULT_TABLE, depth=2))
+    assert planned.latency_s < fixed_t2.latency_s
+    assert planned.edp < fixed_t2.edp

@@ -1,6 +1,5 @@
 """Fault tolerance: watchdog behaviour + restartable trainer."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import DEFAULT_TABLE, Owner, SidebarBuffer, SidebarCall
-from repro.core.sidebar import CONTROL_BYTES, SidebarProtocolError, required_capacity
+from repro.core.sidebar import SidebarProtocolError, required_capacity
 
 
 def test_placement_and_rw():

@@ -1,0 +1,172 @@
+"""SidebarRing protocol: random interleavings at depths 2-5.
+
+Property coverage for the T-deep ring discipline the pipelined engine
+relies on:
+
+  * random legal/illegal interleavings of acquire / to_host /
+    to_accelerator / release never corrupt the buffer's free list —
+    illegal transitions raise ``SidebarProtocolError`` and leave both the
+    ring and the allocator exactly as they were;
+  * reuse-before-release (acquiring tile t while tile t-depth is still
+    in flight) raises at every depth;
+  * a drained ring frees cleanly: repeated build/run/free cycles recycle
+    the same placements (the bump cursor does not creep).
+
+Hypothesis-driven when available; seeded-random versions always run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Owner, SidebarBuffer, SidebarRing
+from repro.core.sidebar import CONTROL_BYTES, SidebarProtocolError, _align
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+DEPTHS = (2, 3, 4, 5)
+ACTIONS = ("acquire", "to_host", "to_accelerator", "release")
+OPERAND_NBYTES = 192
+RESULT_NBYTES = 160
+
+
+def _capacity(depth: int) -> int:
+    return CONTROL_BYTES + depth * (
+        _align(OPERAND_NBYTES) + _align(RESULT_NBYTES)
+    ) + 1024
+
+
+def _free_list_invariants(sb: SidebarBuffer) -> None:
+    """The allocator's free list must stay sorted, aligned, disjoint, and
+    inside [CONTROL_BYTES, cursor)."""
+    spans = list(sb._free)
+    assert spans == sorted(spans)
+    end_prev = CONTROL_BYTES
+    for off, size in spans:
+        assert off % 128 == 0 and size % 128 == 0 and size > 0
+        assert off >= end_prev  # disjoint, non-overlapping
+        end_prev = off + size
+    assert end_prev <= sb._cursor <= sb.capacity
+    # free spans never overlap a live region
+    for region in sb.regions():
+        for off, size in spans:
+            assert region.end <= off or region.offset >= off + size
+
+
+def _drain(ring: SidebarRing) -> None:
+    """Drive every slot to 'free' with legal transitions only."""
+    order = {"filled": ("to_host", "to_accelerator", "release"),
+             "at_host": ("to_accelerator", "release"),
+             "returned": ("release",), "free": ()}
+    for slot in ring.slots:
+        for action in order[slot.state]:
+            getattr(ring, action)(slot)
+
+
+def _walk(depth: int, choices: list[int]) -> None:
+    """Apply a random action stream; legal steps mutate, illegal steps
+    must raise and leave the protocol state untouched."""
+    sb = SidebarBuffer(_capacity(depth))
+    ring = SidebarRing(sb, "ring", OPERAND_NBYTES, RESULT_NBYTES,
+                       depth=depth)
+    next_tile = 0
+    payload = np.zeros(OPERAND_NBYTES // 4, np.float32)
+    for c in choices:
+        action = ACTIONS[c % len(ACTIONS)]
+        slot = ring.slots[(c // len(ACTIONS)) % depth]
+        before = [(s.label, s.state) for s in ring.slots]
+        owners_before = {
+            s.label: (sb.region_owner(s.operand.name),
+                      sb.region_owner(s.result.name))
+            for s in ring.slots
+        }
+        try:
+            if action == "acquire":
+                legal = ring.slot(next_tile).state == "free"
+                got = ring.acquire(next_tile)
+                sb.write(Owner.ACCELERATOR, got.operand.name, payload)
+                next_tile += 1
+            elif action == "to_host":
+                legal = slot.state == "filled"
+                ring.to_host(slot)
+            elif action == "to_accelerator":
+                legal = slot.state == "at_host"
+                ring.to_accelerator(slot)
+            else:
+                legal = slot.state == "returned"
+                ring.release(slot)
+            assert legal, f"{action} should have raised"
+        except SidebarProtocolError:
+            assert not legal, f"legal {action} raised"
+            # an illegal transition must not move any slot or owner
+            assert [(s.label, s.state) for s in ring.slots] == before
+            assert owners_before == {
+                s.label: (sb.region_owner(s.operand.name),
+                          sb.region_owner(s.result.name))
+                for s in ring.slots
+            }
+        _free_list_invariants(sb)
+    _drain(ring)
+    ring.free()
+    _free_list_invariants(sb)
+    # placements recycle: an identical ring reuses the freed area and the
+    # bump cursor has not crept
+    cursor = sb._cursor
+    again = SidebarRing(sb, "again", OPERAND_NBYTES, RESULT_NBYTES,
+                        depth=depth)
+    _drain(again)
+    again.free()
+    assert sb._cursor <= cursor
+    _free_list_invariants(sb)
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("seed", range(6))
+def test_random_interleavings_keep_free_list_coherent_seeded(depth, seed):
+    rng = np.random.default_rng(1000 * depth + seed)
+    _walk(depth, [int(v) for v in rng.integers(0, 4 * depth, size=200)])
+
+
+if HAS_HYPOTHESIS:
+
+    @given(
+        depth=st.sampled_from(DEPTHS),
+        choices=st.lists(st.integers(min_value=0, max_value=4 * 5 - 1),
+                         max_size=300),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_random_interleavings_keep_free_list_coherent_property(
+        depth, choices
+    ):
+        _walk(depth, choices)
+
+
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_reuse_before_release_raises_at_every_depth(depth):
+    sb = SidebarBuffer(_capacity(depth))
+    ring = SidebarRing(sb, "ring", OPERAND_NBYTES, RESULT_NBYTES,
+                       depth=depth)
+    for t in range(depth):
+        slot = ring.acquire(t)
+        ring.to_host(slot)
+    # tile `depth` maps back onto tile 0's still-in-flight slot
+    with pytest.raises(SidebarProtocolError, match="reused before release"):
+        ring.acquire(depth)
+    # ...at every pipeline stage of the victim slot's lifecycle
+    victim = ring.slot(0)
+    ring.to_accelerator(victim)
+    with pytest.raises(SidebarProtocolError, match="reused before release"):
+        ring.acquire(depth)
+    ring.release(victim)
+    assert ring.acquire(depth) is victim  # released -> legal again
+
+
+def test_ring_depth_validation():
+    sb = SidebarBuffer(_capacity(2))
+    with pytest.raises(ValueError, match="depth"):
+        SidebarRing(sb, "bad", 64, 64, depth=0)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.models.rwkv import wkv_chunked, wkv_step
+from repro.models.rwkv import wkv_chunked
 from repro.models.ssm import mamba2_chunked, mamba2_step
 
 
