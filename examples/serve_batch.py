@@ -1,12 +1,21 @@
 """End-to-end serving driver (the paper is an inference paper).
 
-Serves a small LM with batched requests: bucket prompts, prefill once,
-greedy-decode N tokens per request, report tokens/s. Architecture is
-selectable (--arch, smoke-scale configs on CPU).
+Static-batch mode: bucket prompts, prefill once, scan-compiled greedy
+decode of N tokens in ONE dispatch (``--decode loop`` keeps the PR-2
+per-token loop for comparison). ``--pipeline-depths 2,4`` builds a
+per-layer ``ExecutionPlan`` (layer i gets depth[i % len]) so different
+layers trace different sidebar kernel variants.
+
+Continuous mode (``--continuous``): mixed-length traffic through the
+slot scheduler — bucketed admission into freed slots between scan-
+compiled decode segments, one persistent slot KV cache, and an
+executable cache keyed by (bucket, plan).
 
 Run: PYTHONPATH=src python examples/serve_batch.py --arch deepseek-7b \
          --batch 4 --prompt-len 32 --gen 16 \
          --execution-mode sidebar_pipelined --pipeline-depth 4
+     PYTHONPATH=src python examples/serve_batch.py --continuous \
+         --requests 8 --slots 4 --segment 8
 """
 
 import argparse
@@ -14,11 +23,83 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as cfglib
-from repro.core.modes import ExecutionMode, LayerPlan
+from repro.core.modes import ExecutionMode, ExecutionPlan, LayerPlan
+from repro.launch.scheduler import ContinuousBatchingServer
 from repro.launch.serve import Server
 from repro.models.registry import get_model
+
+
+def build_plan(args, cfg):
+    mode = ExecutionMode(args.execution_mode)
+    if args.pipeline_depths:
+        depths = [int(d) for d in args.pipeline_depths.split(",")]
+        per_layer = [
+            LayerPlan(ExecutionMode.SIDEBAR_PIPELINED,
+                      depth=depths[i % len(depths)])
+            for i in range(cfg.num_layers)
+        ]
+        return ExecutionPlan.by_index(per_layer)
+    return LayerPlan(mode, depth=args.pipeline_depth)
+
+
+def run_static(args, cfg, api, params, plan):
+    print(f"arch={cfg.arch_id} (reduced config for CPU), "
+          f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}, "
+          f"plan={plan}, decode={args.decode}")
+    server = Server(cfg, params, max_len=args.prompt_len + args.gen,
+                    plan=plan)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size, dtype=jnp.int32,
+    )
+    extra = {}
+    if cfg.family == "audio":
+        extra["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        extra["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+
+    # warmup (compile) — same gen length so the timed call reuses the
+    # cached N-step scan executable instead of tracing it
+    server.generate(prompts, args.gen, extra, decode=args.decode)
+    t0 = time.perf_counter()
+    result = server.generate(prompts, args.gen, extra, decode=args.decode)
+    dt = time.perf_counter() - t0
+    total_new = args.batch * args.gen
+    print(f"generated {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s on CPU)")
+    print("sample continuation ids:",
+          result.tokens[0, args.prompt_len:args.prompt_len + 8].tolist())
+
+
+def run_continuous(args, cfg, api, params, plan):
+    print(f"arch={cfg.arch_id} continuous: requests={args.requests}, "
+          f"slots={args.slots}, segment={args.segment}, plan={plan}")
+    sched = ContinuousBatchingServer(
+        cfg, params, num_slots=args.slots,
+        max_len=args.prompt_len + args.gen,
+        buckets=(args.prompt_len // 2, args.prompt_len),
+        segment=args.segment, plan=plan,
+    )
+    rng = np.random.RandomState(0)
+    useful = 0
+    for _ in range(args.requests):
+        plen = int(rng.randint(2, args.prompt_len))
+        gen = int(rng.randint(1, args.gen))
+        useful += gen
+        sched.submit(rng.randint(0, cfg.vocab_size, size=plen), gen)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    print(f"drained {len(done)} requests / {useful} tokens in {dt:.2f}s "
+          f"({useful/dt:.1f} tok/s on CPU, cold) — stats {sched.stats}")
+    print("executables:", [k[:2] for k in sched.executable_cache_keys()])
 
 
 def main():
@@ -37,44 +118,32 @@ def main():
         "--pipeline-depth", type=int, default=2,
         help="VMEM ring depth T for sidebar_pipelined (>= 1)",
     )
+    ap.add_argument(
+        "--pipeline-depths", default=None,
+        help="comma list of per-layer ring depths -> heterogeneous "
+             "ExecutionPlan (layer i gets depths[i %% len]); unrolls the "
+             "layer stack so each layer traces its own kernel variant",
+    )
+    ap.add_argument(
+        "--decode", default="scan", choices=["scan", "loop"],
+        help="scan: N tokens in one compiled program; loop: PR-2 "
+             "one-dispatch-per-token baseline",
+    )
+    ap.add_argument("--continuous", action="store_true",
+                    help="mixed-length traffic through the slot scheduler")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--segment", type=int, default=8)
     args = ap.parse_args()
 
     cfg = cfglib.get_smoke_config(args.arch)
     api = get_model(cfg)
-    plan = LayerPlan(ExecutionMode(args.execution_mode),
-                     depth=args.pipeline_depth)
-    print(f"arch={cfg.arch_id} (reduced config for CPU), "
-          f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}, "
-          f"mode={plan.mode.value}, depth={plan.depth}")
-
+    plan = build_plan(args, cfg)
     params = api.init(jax.random.PRNGKey(0), cfg)
-    server = Server(cfg, params, max_len=args.prompt_len + args.gen,
-                    plan=plan)
-
-    prompts = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
-        cfg.vocab_size, dtype=jnp.int32,
-    )
-    extra = {}
-    if cfg.family == "audio":
-        extra["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
-    if cfg.family == "vlm":
-        extra["image_embeds"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
-
-    # warmup (compile)
-    server.generate(prompts, 2, extra)
-    t0 = time.perf_counter()
-    result = server.generate(prompts, args.gen, extra)
-    dt = time.perf_counter() - t0
-    total_new = args.batch * args.gen
-    print(f"generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s on CPU)")
-    print("sample continuation ids:",
-          result.tokens[0, args.prompt_len:args.prompt_len + 8].tolist())
+    if args.continuous:
+        run_continuous(args, cfg, api, params, plan)
+    else:
+        run_static(args, cfg, api, params, plan)
 
 
 if __name__ == "__main__":

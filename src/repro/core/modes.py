@@ -213,10 +213,16 @@ class ExecutionPlan:
     ``ExecutionPlan.uniform``); consumed by ``core.engine`` (schedule /
     accounting), ``kernels.ops`` (ambient kernel-variant selection), and
     ``launch.serve.Server``.
+
+    Layers are keyed by graph name (planner output) or by integer layer
+    index (serving: ``models`` announce the index being traced through
+    ``kernels.ops.layer_scope``). ``for_layer`` accepts either and falls
+    back exact-key -> str(key) -> default, so a plan built from planner
+    names and one built from model indices resolve the same way.
     """
 
     default: LayerPlan
-    layers: Mapping[str, LayerPlan] = dataclasses.field(
+    layers: Mapping[str | int, LayerPlan] = dataclasses.field(
         default_factory=dict
     )
 
@@ -227,8 +233,44 @@ class ExecutionPlan:
             mode = ExecutionMode(mode)
         return cls(default=LayerPlan(mode, depth, fuse))
 
-    def for_layer(self, name: str) -> LayerPlan:
-        return self.layers.get(name, self.default)
+    @classmethod
+    def by_index(cls, plans: Sequence[LayerPlan],
+                 default: LayerPlan | None = None) -> "ExecutionPlan":
+        """Plan for a model's layer stack: plans[i] applies to layer i."""
+        if default is None:
+            if not plans:
+                raise ValueError("by_index needs at least one LayerPlan")
+            counts: dict[LayerPlan, int] = {}
+            for p in plans:
+                counts[p] = counts.get(p, 0) + 1
+            default = max(counts, key=counts.get)
+        return cls(default=default, layers=dict(enumerate(plans)))
+
+    def for_layer(self, key: str | int | None) -> LayerPlan:
+        if key is None:
+            return self.default
+        hit = self.layers.get(key)
+        if hit is None:
+            if isinstance(key, int):
+                hit = self.layers.get(str(key))
+            elif isinstance(key, str) and key.lstrip("-").isdigit():
+                hit = self.layers.get(int(key))
+        return hit if hit is not None else self.default
+
+    @property
+    def is_uniform(self) -> bool:
+        """True when every per-layer entry equals the default — a single
+        trace (e.g. a scanned layer stack) can realize the whole plan."""
+        return all(lp == self.default for lp in self.layers.values())
+
+    def cache_key(self) -> tuple:
+        """Hashable fingerprint for executable caches (``layers`` is a
+        plain dict, so the dataclass itself is not hashable)."""
+        return (
+            self.default,
+            tuple(sorted(((str(k), v) for k, v in self.layers.items()),
+                         key=lambda kv: kv[0])),
+        )
 
 
 def coerce_layer_plan(

@@ -14,6 +14,7 @@ last dim resident.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Callable
 
 import jax
@@ -28,6 +29,68 @@ Array = jax.Array
 
 def _kernel(x_ref, o_ref, *, fn: Callable, out_dtype):
     o_ref[...] = fn(x_ref[...].astype(jnp.float32)).astype(out_dtype)
+
+
+def plan_tiles(
+    m: int,
+    n: int,
+    *,
+    rowwise: bool = False,
+    block_m: int | None = None,
+    block_n: int | None = None,
+) -> tuple[int, int]:
+    """Resolve the (block_m, block_n) tiling for an (m, n) activation.
+
+    Raises ``ValueError`` when no legal tiling exists (explicit blocks
+    that don't divide, or a rowwise function whose resident row exceeds
+    the VMEM budget). This is the single source of truth shared by the
+    kernel and by ``ops.host_activation``'s eligibility precheck.
+    """
+    if block_m is None:
+        block_m = min(m, 256)
+        while m % block_m:
+            block_m //= 2
+        block_m = max(block_m, 1)
+    if rowwise:
+        block_n = n  # rowwise flexible ops need the full row resident
+    if block_n is None:
+        block_n = min(n, 2048)
+        while n % block_n:
+            block_n //= 2
+        block_n = max(block_n, 1)
+    if m % block_m or n % block_n:
+        raise ValueError(f"tiles must divide: {m}%{block_m}, {n}%{block_n}")
+    # VMEM sanity: in + out tiles in fp32
+    if 8 * block_m * block_n > constants.VMEM_BYTES_PER_CHIP // 4:
+        raise ValueError("activation tile exceeds VMEM budget")
+    return block_m, block_n
+
+
+def tileable(
+    shape: tuple[int, ...],
+    activation: str | Callable = "relu",
+    *,
+    table: FunctionTable = DEFAULT_TABLE,
+) -> bool:
+    """Would ``activation(x)`` of this shape have a legal kernel tiling?
+
+    Mirrors the lead-dims-flattened 2-D view the kernel entry point uses,
+    so callers can precheck instead of catching the kernel's ValueError.
+    """
+    if not shape:
+        return False
+    entry = table[activation] if isinstance(activation, str) else None
+    rowwise = entry.rowwise if entry is not None else False
+    if len(shape) == 1:
+        m, n = 1, shape[0]
+    else:
+        m, n = math.prod(shape[:-1]), shape[-1]
+    try:
+        plan_tiles(m, n, rowwise=rowwise,
+                   block_m=1 if len(shape) == 1 else None)
+    except ValueError:
+        return False
+    return True
 
 
 def activation(
@@ -75,23 +138,8 @@ def activation_2d(
     fn = entry.fn if entry is not None else activation
     rowwise = entry.rowwise if entry is not None else False
 
-    if block_m is None:
-        block_m = min(m, 256)
-        while m % block_m:
-            block_m //= 2
-        block_m = max(block_m, 1)
-    if rowwise:
-        block_n = n  # rowwise flexible ops need the full row resident
-    if block_n is None:
-        block_n = min(n, 2048)
-        while n % block_n:
-            block_n //= 2
-        block_n = max(block_n, 1)
-    if m % block_m or n % block_n:
-        raise ValueError(f"tiles must divide: {m}%{block_m}, {n}%{block_n}")
-    # VMEM sanity: in + out tiles in fp32
-    if 8 * block_m * block_n > constants.VMEM_BYTES_PER_CHIP // 4:
-        raise ValueError("activation tile exceeds VMEM budget")
+    block_m, block_n = plan_tiles(m, n, rowwise=rowwise,
+                                  block_m=block_m, block_n=block_n)
 
     kernel = functools.partial(_kernel, fn=fn, out_dtype=x.dtype)
     return pl.pallas_call(

@@ -13,6 +13,7 @@ Each op:
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import threading
 from typing import Callable
 
@@ -25,6 +26,7 @@ from repro.core.modes import (
     LayerPlan,
     coerce_layer_plan,
 )
+from repro.kernels import activations as _activations
 from repro.kernels import ref
 from repro.kernels.activations import activation as _activation_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -49,16 +51,47 @@ def _tileable(n: int, t: int = 128) -> bool:
 # -- execution-plan selection (wired from launch.serve.Server) -------------
 # Models call the sidebar ops unconditionally; which kernel variant backs
 # them (serial VMEM scratch vs T-deep ring pipelined, and how deep) is a
-# deployment choice, so it is carried here as thread-local ambient state —
-# a ``LayerPlan`` — rather than threaded through every model signature.
+# deployment choice, so it is carried here as thread-local ambient state
+# rather than threaded through every model signature. The ambient value
+# may be a single ``LayerPlan`` (uniform) or a whole ``ExecutionPlan``:
+# models announce which layer index they are tracing via ``layer_scope``
+# and ``current_plan()`` resolves ``plan.for_layer(index)`` — so the
+# planner's per-layer mode/depth choices reach each layer's kernel trace.
 
 _PLAN_STATE = threading.local()
 
 _DEFAULT_PLAN = LayerPlan(ExecutionMode.SIDEBAR, depth=1)
 
 
-def current_plan() -> LayerPlan:
+def current_layer() -> str | int | None:
+    """The layer key the model is tracing right now (None outside any)."""
+    return getattr(_PLAN_STATE, "layer", None)
+
+
+@contextlib.contextmanager
+def layer_scope(key: str | int | None):
+    """Announce the layer being traced so a layer-indexed ``ExecutionPlan``
+    resolves per-layer kernel variants. Models wrap each (unrolled) layer
+    trace in this; a scanned stack traces once under the plan default."""
+    prev = current_layer()
+    _PLAN_STATE.layer = key
+    try:
+        yield
+    finally:
+        _PLAN_STATE.layer = prev
+
+
+def current_full_plan() -> LayerPlan | ExecutionPlan:
+    """The raw ambient plan (an ``ExecutionPlan`` stays layer-indexed)."""
     return getattr(_PLAN_STATE, "plan", _DEFAULT_PLAN)
+
+
+def current_plan() -> LayerPlan:
+    """The ``LayerPlan`` in effect for the layer currently being traced."""
+    plan = current_full_plan()
+    if isinstance(plan, ExecutionPlan):
+        return plan.for_layer(current_layer())
+    return plan
 
 
 def current_execution_mode() -> ExecutionMode:
@@ -68,10 +101,17 @@ def current_execution_mode() -> ExecutionMode:
 def set_plan(
     plan: LayerPlan | ExecutionPlan | ExecutionMode | str,
     depth: int | None = None,
-) -> LayerPlan:
-    """Set the ambient sidebar kernel plan; returns the previous one."""
-    prev = current_plan()
-    _PLAN_STATE.plan = coerce_layer_plan(plan, depth)
+) -> LayerPlan | ExecutionPlan:
+    """Set the ambient sidebar kernel plan; returns the previous one.
+
+    An ``ExecutionPlan`` is kept whole (layer-indexed resolution via
+    ``layer_scope``); other spellings normalize to a ``LayerPlan``.
+    """
+    prev = current_full_plan()
+    if isinstance(plan, ExecutionPlan):
+        _PLAN_STATE.plan = plan
+    else:
+        _PLAN_STATE.plan = coerce_layer_plan(plan, depth)
     return prev
 
 
@@ -79,7 +119,10 @@ def set_execution_mode(
     mode: ExecutionMode | str, depth: int | None = None
 ) -> ExecutionMode:
     """Set the ambient sidebar kernel variant; returns the previous one."""
-    return set_plan(mode, depth).mode
+    prev = set_plan(mode, depth)
+    if isinstance(prev, ExecutionPlan):
+        return prev.default.mode
+    return prev.mode
 
 
 @contextlib.contextmanager
@@ -100,6 +143,47 @@ def execution_mode(mode: ExecutionMode | str, depth: int | None = None):
         yield
 
 
+# -- dispatch recording (test/diagnostic probe) -----------------------------
+# ``record_dispatches`` captures which kernel variant each sidebar op
+# actually resolved at trace time — the observable for "the planner's
+# per-layer choice reached the kernels" (a plan-state probe, cheaper and
+# sharper than diffing HLO).
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDispatch:
+    """One sidebar-op trace-time dispatch decision."""
+
+    op: str                       # "sidebar_mlp" | "sidebar_gated_mlp" | ...
+    layer: str | int | None       # ambient layer_scope key at trace time
+    mode: ExecutionMode           # resolved plan mode
+    depth: int                    # resolved ring depth
+    variant: str                  # "pipelined" | "serial" | "dma" | "ref"
+    used_kernel: bool             # the variant's primary kernel path was
+    # taken: the fused Pallas kernel for serial/pipelined, the producer
+    # matmul kernel for "dma" (its standalone host_activation gates its
+    # own tiling independently and is not reflected here)
+
+
+@contextlib.contextmanager
+def record_dispatches(into: list):
+    """Append a ``PlanDispatch`` per sidebar-op trace into ``into``."""
+    prev = getattr(_PLAN_STATE, "recorder", None)
+    _PLAN_STATE.recorder = into
+    try:
+        yield into
+    finally:
+        _PLAN_STATE.recorder = prev
+
+
+def _record(op: str, mode: ExecutionMode, depth: int, variant: str,
+            used_kernel: bool) -> None:
+    rec = getattr(_PLAN_STATE, "recorder", None)
+    if rec is not None:
+        rec.append(PlanDispatch(op, current_layer(), mode, depth, variant,
+                                used_kernel))
+
+
 def sidebar_mlp(
     x: Array,
     w1: Array,
@@ -115,9 +199,13 @@ def sidebar_mlp(
     """y = f(x @ w1) @ w2 — fused sidebar kernel when eligible.
 
     ``pipelined`` selects the T-deep ring variant and ``depth`` its ring
-    depth; when None they follow the ambient ``execution_plan``
-    (SIDEBAR_PIPELINED => pipelined at the plan's depth). All variants
-    are numerically identical.
+    depth; when None they follow the ambient ``execution_plan`` resolved
+    for the layer currently being traced (``layer_scope``):
+    SIDEBAR_PIPELINED => pipelined at the plan's depth, FLEXIBLE_DMA =>
+    the unfused three-dispatch path (producer matmul, standalone host
+    activation with the intermediate crossing HBM, consumer matmul),
+    SIDEBAR / MONOLITHIC => the serial fused kernel. All variants are
+    numerically equivalent.
     """
     m, d = x.shape
     _, f = w1.shape
@@ -128,6 +216,11 @@ def sidebar_mlp(
         else (eligible and (_on_tpu() or interpret))
     )
     plan = current_plan()
+    dma = (
+        plan.mode is ExecutionMode.FLEXIBLE_DMA
+        and pipelined is None
+        and use_kernel is None
+    )
     if pipelined is None:
         pipelined = plan.mode is ExecutionMode.SIDEBAR_PIPELINED
     if depth is None:
@@ -135,14 +228,25 @@ def sidebar_mlp(
             depth = plan.depth  # the planner's scored choice, verbatim
         else:
             depth = 2 if pipelined else 1  # explicit opt-in: classic ring
+    if dma:
+        _record("sidebar_mlp", plan.mode, 1, "dma", use)
+        h = sidebar_matmul(x, w1, "identity", table=table,
+                           use_kernel=use_kernel, interpret=interpret)
+        h = host_activation(h.astype(x.dtype), activation, table=table,
+                            use_kernel=use_kernel, interpret=interpret)
+        return sidebar_matmul(h.astype(x.dtype), w2, "identity", table=table,
+                              use_kernel=use_kernel, interpret=interpret)
     if use:
         if pipelined:
+            _record("sidebar_mlp", plan.mode, depth, "pipelined", True)
             return _mlp_kernel_pipelined(
                 x, w1, w2, activation, table=table, depth=depth,
                 interpret=interpret,
             )
+        _record("sidebar_mlp", plan.mode, depth, "serial", True)
         return _mlp_kernel(x, w1, w2, activation, table=table,
                            interpret=interpret)
+    _record("sidebar_mlp", plan.mode, depth, "ref", False)
     return ref.sidebar_mlp_ref(x, w1, w2, activation, table)
 
 
@@ -166,9 +270,12 @@ def sidebar_gated_mlp(
         if use_kernel is not None
         else (eligible and (_on_tpu() or interpret))
     )
+    plan = current_plan()
     if use:
+        _record("sidebar_gated_mlp", plan.mode, 1, "serial", True)
         return _gated_kernel(x, w_gate, w_up, w_down, activation,
                              table=table, interpret=interpret)
+    _record("sidebar_gated_mlp", plan.mode, 1, "ref", False)
     return ref.sidebar_gated_mlp_ref(x, w_gate, w_up, w_down, activation, table)
 
 
@@ -202,13 +309,25 @@ def host_activation(
     use_kernel: bool | None = None,
     interpret: bool = False,
 ) -> Array:
-    """The FLEXIBLE_DMA standalone host step (own launch, HBM round-trip)."""
-    use = use_kernel if use_kernel is not None else (_on_tpu() or interpret)
-    if use and x.ndim >= 1:
-        try:
-            return _activation_kernel(x, activation, table=table, interpret=interpret)
-        except ValueError:
-            pass  # untileable shape -> oracle
+    """The FLEXIBLE_DMA standalone host step (own launch, HBM round-trip).
+
+    Eligibility is prechecked (``activations.tileable`` — the same block
+    planning the kernel itself runs) like every other op here, instead of
+    catching the kernel's shape ValueError: control flow stays exception-
+    free and an explicit ``use_kernel=True`` on an untileable shape fails
+    loudly instead of silently routing to the oracle.
+    """
+    eligible = x.ndim >= 1 and _activations.tileable(
+        x.shape, activation, table=table
+    )
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and (_on_tpu() or interpret))
+    )
+    if use:
+        return _activation_kernel(x, activation, table=table,
+                                  interpret=interpret)
     return ref.activation_ref(x, activation, table)
 
 

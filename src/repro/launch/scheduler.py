@@ -1,0 +1,390 @@
+"""Continuous batching: slot-based KV cache + segment-synchronous admission.
+
+The PR-2 ``Server`` is a static-batch driver: every ``generate`` call
+allocates a fresh KV cache, and a request that finishes early keeps its
+batch row busy until the whole batch drains. This module adds the serving
+discipline the ROADMAP's "heavy traffic" north star actually needs:
+
+  * **Slot cache** — ONE persistent KV cache with ``num_slots`` batch
+    rows, allocated once. Each request owns a slot for its lifetime; a
+    freed slot is overwritten wholesale by the next admission (so no
+    cross-request state leaks, for attention and recurrent caches alike).
+    The batch axis of every cache leaf is *probed*, not assumed: specs
+    for batch=2 vs batch=3 are diffed, which keeps the scheduler family-
+    agnostic about cache layouts (GQA 5-D KV, MLA latent, int8 scales).
+  * **Prompt bucketing** — admission prefills ``prompt[:-1]`` right-
+    padded to the smallest bucket, then runs ONE single-token decode of
+    the true last prompt token at its true position. The correction step
+    overwrites the first pad's KV slot and returns the first generated
+    token from the right logits row, so bucketing never changes tokens:
+    pad KV beyond the true length is overwritten by later decode writes
+    or masked by the causal ``kpos <= pos`` attention mask.
+  * **Segment decode** — between admissions, ALL occupied slots advance
+    ``segment`` tokens in one scan-compiled dispatch
+    (``make_serve_step`` vmapped over slots with a *per-slot* position
+    vector, wrapped in ``jax.lax.scan`` exactly like
+    ``serve.make_decode_scan``). Requests finish mid-batch without
+    stalling neighbours; their slots re-enter the free list at the next
+    segment boundary.
+  * **Executable cache** — every compiled program is keyed by
+    ``(kind, shape-key, plan)``: repeat traffic (same bucket, same plan)
+    never re-traces. ``stats["compiles"]`` / ``stats["hits"]`` make the
+    no-retrace property testable.
+
+Scope: families whose decode is batch-row independent and memory-free
+(``dense`` — GQA and MLA — and ``moe``). Audio/VLM need per-request
+encoder memory threaded through admission; that is an open item. MoE
+caveat: pad tokens in a bucketed prefill compete for expert capacity, so
+under a dropping ``capacity_factor`` a padded prefill can route real
+tokens differently than an exact-length one — serve MoE with a no-drop
+capacity factor (or exact-fit buckets) when bit-parity with solo decode
+matters.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.modes import (
+    ExecutionMode,
+    ExecutionPlan,
+    LayerPlan,
+    coerce_layer_plan,
+)
+from repro.kernels import ops as kops
+from repro.launch.serve import (
+    PER_LAYER_PLAN_FAMILIES,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.models import layers as L
+from repro.models.registry import get_model
+
+Array = jax.Array
+
+# memory-free, batch-row-independent decode — currently the same set
+# whose stacks realize per-layer plans, so the constant is shared
+_SUPPORTED_FAMILIES = PER_LAYER_PLAN_FAMILIES
+
+DEFAULT_BUCKETS = (16, 32, 64, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishedRequest:
+    """One drained request: the prompt plus every generated token."""
+
+    rid: int
+    prompt: np.ndarray        # (S,) int32 — as submitted
+    tokens: np.ndarray        # (generated,) int32
+    prompt_len: int
+    generated: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int | None = None
+    pos: int = 0              # next KV write position (= current length)
+    remaining: int = 0
+    last_token: int = 0
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    prompt: np.ndarray | None = None
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+
+def probe_batch_axes(api, cfg: ModelConfig, minfo, max_len: int):
+    """Which axis of each cache leaf is the batch (slot) axis?
+
+    Diff the spec shapes for batch=2 vs batch=3 — the axis whose size
+    changed is the batch axis. Works for every cache layout without
+    hardcoding family knowledge.
+    """
+    s2 = api.cache_specs(cfg, minfo, 2, max_len)
+    s3 = api.cache_specs(cfg, minfo, 3, max_len)
+
+    def axis(a, b) -> int:
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(
+            f"cache leaf {a.shape} has no batch axis; the slot scheduler "
+            "cannot place requests into it"
+        )
+
+    return jax.tree.map(axis, s2, s3, is_leaf=L.is_spec)
+
+
+class ContinuousBatchingServer:
+    """Greedy-decoding server with slot-based continuous batching.
+
+    >>> srv = ContinuousBatchingServer(cfg, params, num_slots=4)
+    >>> srv.submit([1, 2, 3], max_new_tokens=16)
+    >>> done = srv.run()          # drain pending + active
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 num_slots: int = 4, max_len: int = 256,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 segment: int = 8,
+                 plan: LayerPlan | ExecutionPlan | ExecutionMode | str |
+                 None = None) -> None:
+        if cfg.family not in _SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"continuous batching supports families {_SUPPORTED_FAMILIES}"
+                f", got {cfg.family!r} (encoder-memory families need "
+                "per-request memory plumbing — see module docstring)"
+            )
+        if plan is None:
+            plan = ExecutionMode.SIDEBAR
+        if isinstance(plan, ExecutionPlan):
+            if not plan.is_uniform:
+                cfg = dataclasses.replace(cfg, scan_layers=False)
+            self._plan_key: Any = plan.cache_key()
+        else:
+            plan = coerce_layer_plan(plan)
+            self._plan_key = plan
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.mesh = mesh
+        self.minfo = (
+            L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
+        )
+        self.api = get_model(cfg)
+        self.num_slots = num_slots
+        self.max_len = max_len
+        # a bucket longer than the KV cache could never be prefilled into
+        # it; submit() bounds every prompt to max_len, so exact-fit covers
+        # whatever the dropped buckets would have
+        self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
+        self.segment = segment
+        self.axes = probe_batch_axes(self.api, cfg, self.minfo, max_len)
+        # THE slot cache: allocated once, lives as long as the server.
+        self.cache = self.api.init_cache(cfg, self.minfo, num_slots, max_len)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.pending: collections.deque = collections.deque()
+        self.finished: list[FinishedRequest] = []
+        self._next_rid = 0
+        self._exec: dict[tuple, Callable] = {}
+        self.stats = {"compiles": 0, "hits": 0, "admitted": 0,
+                      "segments": 0, "decode_steps": 0, "wasted_steps": 0}
+
+    # -- executable cache --------------------------------------------------
+    def _compiled(self, key: tuple, builder: Callable[[], Callable]):
+        """(kind, shape-key..., plan) -> compiled program. Repeat traffic
+        hits the cache; a new bucket or plan is a recorded compile."""
+        fn = self._exec.get(key)
+        if fn is None:
+            fn = self._exec[key] = builder()
+            self.stats["compiles"] += 1
+        else:
+            self.stats["hits"] += 1
+        return fn
+
+    def executable_cache_keys(self) -> list[tuple]:
+        return sorted(self._exec, key=repr)
+
+    # -- submission --------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket >= n (prefill length); exact fit past the end."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return n
+
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt {prompt.size} + max_new {max_new_tokens} exceeds "
+                f"max_len {self.max_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self.pending.append((rid, prompt, max_new_tokens))
+        return rid
+
+    # -- admission ---------------------------------------------------------
+    def _insert_fn(self):
+        axes = self.axes
+
+        def insert(full, one, slot):
+            return jax.tree.map(
+                lambda f, o, ax: jax.lax.dynamic_update_slice_in_dim(
+                    f, o.astype(f.dtype), slot, axis=ax),
+                full, one, axes,
+            )
+
+        return jax.jit(insert, donate_argnums=(0,))
+
+    def _admit_one(self, slot_idx: int, rid: int, prompt: np.ndarray,
+                   max_new: int) -> None:
+        s_true = int(prompt.size)
+        cache1 = self.api.init_cache(self.cfg, self.minfo, 1, self.max_len)
+        if s_true > 1:
+            bucket = self.bucket_for(s_true - 1)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, : s_true - 1] = prompt[:-1]
+            prefill = self._compiled(
+                ("prefill", bucket, self._plan_key),
+                lambda: jax.jit(
+                    make_prefill_step(self.cfg, self.api, self.minfo,
+                                      self.mesh),
+                    donate_argnums=(2,),
+                ),
+            )
+            _, cache1 = prefill(self.params, {"tokens": jnp.asarray(padded)},
+                                cache1)
+        # correction step: the true last prompt token at its true position
+        # overwrites the first pad's KV and yields the first new token
+        # from the right logits row (bucket padding never changes tokens).
+        decode = self._compiled(
+            ("admit_decode", self._plan_key),
+            lambda: jax.jit(
+                make_serve_step(self.cfg, self.api, self.minfo, self.mesh),
+                donate_argnums=(2,),
+            ),
+        )
+        nxt, cache1 = decode(
+            self.params, jnp.asarray([[prompt[-1]]], jnp.int32), cache1,
+            jnp.int32(s_true - 1), None,
+        )
+        first = int(np.asarray(nxt)[0, 0])
+        insert = self._compiled(("insert",), self._insert_fn)
+        self.cache = insert(self.cache, cache1, jnp.int32(slot_idx))
+        slot = self.slots[slot_idx]
+        slot.rid = rid
+        slot.pos = s_true
+        slot.remaining = max_new - 1
+        slot.last_token = first
+        slot.tokens = [first]
+        slot.prompt = prompt
+        self.stats["admitted"] += 1
+        if slot.remaining == 0:
+            self._retire(slot_idx)
+
+    def _retire(self, slot_idx: int) -> None:
+        slot = self.slots[slot_idx]
+        self.finished.append(FinishedRequest(
+            rid=slot.rid, prompt=slot.prompt,
+            tokens=np.asarray(slot.tokens, np.int32),
+            prompt_len=int(slot.prompt.size), generated=len(slot.tokens),
+        ))
+        self.slots[slot_idx] = _Slot()
+
+    def admit(self) -> int:
+        """Fill free slots from the pending queue; returns #admitted."""
+        n = 0
+        with kops.execution_plan(self.plan):
+            for i, slot in enumerate(self.slots):
+                if not self.pending:
+                    break
+                if slot.free:
+                    rid, prompt, max_new = self.pending.popleft()
+                    self._admit_one(i, rid, prompt, max_new)
+                    n += 1
+        return n
+
+    # -- segment decode ----------------------------------------------------
+    def _segment_fn(self, num_steps: int) -> Callable:
+        """All slots advance ``num_steps`` tokens in one compiled program:
+        ``make_serve_step`` vmapped over the slot axis with per-slot
+        positions, scanned over steps with the cache in the (donated)
+        carry and the output buffer written via ``dynamic_update_slice``.
+        """
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        axes = self.axes
+        max_pos = self.max_len - 1
+
+        def one(params, tok, cache, pos):
+            # batch=1 view of one slot; finished slots idle at a clamped
+            # position (their writes land on a dead row, see step()).
+            return step(params, tok, cache, jnp.minimum(pos, max_pos), None)
+
+        def vstep(params, toks_x, cache_x, pos):
+            return jax.vmap(one, in_axes=(None, 0, axes, 0),
+                            out_axes=(0, axes))(params, toks_x, cache_x, pos)
+
+        def segment(params, toks, cache, pos):
+            # toks (N, 1), pos (N,); cache = the full slot cache. Leaves
+            # keep a singleton batch dim inside vmap so the model code
+            # sees ordinary (1, ...) batches.
+            cache_x = jax.tree.map(
+                lambda a, ax: jnp.expand_dims(a, ax + 1), cache, axes)
+            toks_x = toks[:, None, :]
+            buf = jnp.zeros((toks.shape[0], num_steps), jnp.int32)
+
+            def body(carry, i):
+                toks_x, cache_x, buf = carry
+                nxt, cache_x = vstep(params, toks_x, cache_x, pos + i)
+                buf = jax.lax.dynamic_update_slice(buf, nxt[:, 0, :], (0, i))
+                return (nxt, cache_x, buf), None
+
+            (_, cache_x, buf), _ = jax.lax.scan(
+                body, (toks_x, cache_x, buf),
+                jnp.arange(num_steps, dtype=jnp.int32),
+            )
+            cache = jax.tree.map(
+                lambda a, ax: jnp.squeeze(a, ax + 1), cache_x, axes)
+            return buf, cache
+
+        # params as an ARGUMENT (not a closure constant): the cached
+        # executable never bakes weights into its jaxpr, and a params
+        # swap on a live server takes effect on the next segment.
+        return jax.jit(segment, donate_argnums=(2,))
+
+    def step(self) -> list[FinishedRequest]:
+        """Admit into free slots, then decode one segment on all active
+        slots; returns requests that finished this step."""
+        drained_before = len(self.finished)
+        self.admit()
+        active = [i for i, s in enumerate(self.slots)
+                  if not s.free and s.remaining > 0]
+        if active:
+            toks = np.zeros((self.num_slots, 1), np.int32)
+            pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
+            for i in active:
+                toks[i, 0] = self.slots[i].last_token
+                pos[i] = self.slots[i].pos
+            seg = self._compiled(
+                ("segment", self.num_slots, self.segment, self._plan_key),
+                lambda: self._segment_fn(self.segment),
+            )
+            with kops.execution_plan(self.plan):
+                buf, self.cache = seg(self.params, jnp.asarray(toks),
+                                      self.cache, jnp.asarray(pos))
+            buf = np.asarray(buf)
+            self.stats["segments"] += 1
+            self.stats["decode_steps"] += self.segment * len(active)
+            for i in active:
+                slot = self.slots[i]
+                take = min(self.segment, slot.remaining)
+                slot.tokens.extend(int(t) for t in buf[i, :take])
+                slot.remaining -= take
+                slot.pos += take
+                slot.last_token = int(buf[i, take - 1])
+                self.stats["wasted_steps"] += self.segment - take
+                if slot.remaining == 0:
+                    self._retire(i)
+        return self.finished[drained_before:]
+
+    def run(self) -> list[FinishedRequest]:
+        """Drain every pending + active request; returns all finished
+        requests (ordered by rid)."""
+        while self.pending or any(not s.free for s in self.slots):
+            self.step()
+        out, self.finished = self.finished, []
+        return sorted(out, key=lambda r: r.rid)

@@ -1,26 +1,35 @@
-"""Serving: batched prefill + decode loop.
+"""Serving: batched prefill + scan-compiled decode.
 
 ``make_serve_step`` builds the jit-able single-token decode (the function
-the decode_32k / long_500k dry-run cells lower); ``Server`` is a small
-batched-request driver (pad-to-bucket, prefill once, greedy decode) used
-by the serving example and integration tests.
+the decode_32k / long_500k dry-run cells lower); ``make_decode_scan``
+compiles N of those steps into ONE program — a ``jax.lax.scan`` over
+steps whose carry holds the running token, the (donated) KV cache, and a
+preallocated output buffer written with ``dynamic_update_slice`` — so N
+generated tokens cost one dispatch instead of N Python-driven dispatches.
+``Server`` is a batched-request driver (prefill once, greedy decode) used
+by the serving example, the continuous-batching scheduler
+(``launch.scheduler``), and integration tests.
 
 ``Server(plan=...)`` selects which sidebar kernel variant backs the
 model's fused MLP ops: ``ExecutionMode.SIDEBAR`` (single VMEM scratch) or
 ``ExecutionMode.SIDEBAR_PIPELINED`` (T-deep VMEM ring — the host-side
 flexible function of tile t overlaps the MXU work of up to T-1 in-flight
 neighbours; the ring depth comes from the plan). The plan may be a
-``LayerPlan``, a whole ``ExecutionPlan`` (its default layer plan is used
-at trace time — kernels are layer-agnostic), an ``ExecutionMode``, or a
-mode string; ``execution_mode=`` remains as the PR-1 spelling. The choice
-is applied as ambient state around trace time, so the same model code
-serves under any variant with no signature changes.
+``LayerPlan``, an ``ExecutionMode``, a mode string, or a whole
+``ExecutionPlan``. A *heterogeneous* ``ExecutionPlan`` (per-layer entries
+differing from the default) is applied per layer: the layer stack is
+unrolled at trace time (``cfg.scan_layers=False``) and each layer's trace
+runs under ``kernels.ops.layer_scope(i)``, so ``plan.for_layer(i)``
+selects that layer's kernel variant and ring depth — the planner's
+per-layer depth sweep reaches the kernels. The choice is applied as
+ambient state around trace time, so the same model code serves under any
+variant with no signature changes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +46,20 @@ from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
 
 Array = jax.Array
+
+# Families whose caches are pure position-masked KV: a reused buffer's
+# stale tail is invisible (decode attends kpos <= pos), so prefill can
+# overwrite in place. Recurrent state (ssm/hybrid/rwkv) and the audio
+# decoder integrate unmasked state and need a fresh (zeroed) cache.
+_CACHE_REUSE_FAMILIES = ("dense", "moe", "vlm")
+
+# Families whose generic-transformer layer stack unrolls under
+# scan_layers=False and announces kops.layer_scope — the only ones a
+# heterogeneous (per-layer) ExecutionPlan can reach. vlm groups always
+# scan; ssm/hybrid/audio use their own stack modules without layer_scope.
+# launch.scheduler reuses this as its supported-family set (its own
+# memory-free-decode constraint currently binds the same families).
+PER_LAYER_PLAN_FAMILIES = ("dense", "moe")
 
 
 def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
@@ -72,6 +95,37 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     return prefill_step
 
 
+def make_decode_scan(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
+                     mesh, num_steps: int) -> Callable:
+    """``num_steps`` greedy decode steps as one compiled program.
+
+    Returns ``decode_scan(params, tok, cache, pos, memory=None) ->
+    (tokens (B, num_steps), cache)``. The scan carry is (running token,
+    cache, output buffer): the cache threads through the carry so jit
+    donation aliases it across all steps, and each step's token lands in
+    the preallocated buffer via ``dynamic_update_slice`` — no per-token
+    host round-trip, no restacked ys.
+    """
+    step = make_serve_step(cfg, api, minfo, mesh)
+
+    def decode_scan(params, tok, cache, pos, memory=None):
+        b = tok.shape[0]
+        buf = jnp.zeros((b, num_steps), jnp.int32)
+
+        def body(carry, i):
+            tok, cache, buf = carry
+            nxt, cache = step(params, tok, cache, pos + i, memory)
+            buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+            return (nxt, cache, buf), None
+
+        (_, cache, buf), _ = jax.lax.scan(
+            body, (tok, cache, buf), jnp.arange(num_steps, dtype=jnp.int32)
+        )
+        return buf, cache
+
+    return decode_scan
+
+
 @dataclasses.dataclass
 class ServeResult:
     tokens: Any           # (B, prompt+generated)
@@ -80,7 +134,7 @@ class ServeResult:
 
 
 class Server:
-    """Minimal batched greedy-decoding server."""
+    """Minimal batched greedy-decoding server (scan-compiled decode)."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  max_len: int = 256,
@@ -88,9 +142,7 @@ class Server:
                  plan: LayerPlan | ExecutionPlan | ExecutionMode | str |
                  None = None,
                  ) -> None:
-        self.cfg = cfg
         self.params = params
-        self.api = get_model(cfg)
         self.mesh = mesh
         self.minfo = (
             L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
@@ -101,35 +153,96 @@ class Server:
         if plan is None:
             plan = (ExecutionMode.SIDEBAR if execution_mode is None
                     else execution_mode)
-        plan = coerce_layer_plan(plan)
-        if plan.mode not in (
+        if isinstance(plan, ExecutionPlan):
+            base = plan.default
+            if not plan.is_uniform:
+                # Per-layer kernel variants need one trace per layer: a
+                # scanned stack traces its body once and would flatten
+                # the plan to its default. Trade HLO size for dispatch.
+                # Only the generic transformer's dense/moe stacks unroll
+                # under scan_layers=False and announce layer_scope; fail
+                # loudly elsewhere instead of silently serving the
+                # default for every layer.
+                if cfg.family not in PER_LAYER_PLAN_FAMILIES:
+                    raise ValueError(
+                        "a heterogeneous (per-layer) ExecutionPlan is "
+                        "realized by unrolling the transformer layer "
+                        f"stack; family {cfg.family!r} traces a single "
+                        "variant — pass a uniform plan or a LayerPlan"
+                    )
+                cfg = dataclasses.replace(cfg, scan_layers=False)
+        else:
+            plan = base = coerce_layer_plan(plan)
+        if base.mode not in (
             ExecutionMode.SIDEBAR, ExecutionMode.SIDEBAR_PIPELINED
         ):
             raise ValueError(
                 "Server serves through the sidebar fast path; "
-                "the plan's mode must be SIDEBAR or SIDEBAR_PIPELINED, got "
-                f"{plan.mode}"
+                "the plan's (default) mode must be SIDEBAR or "
+                f"SIDEBAR_PIPELINED, got {base.mode}"
             )
+        self.cfg = cfg
+        self.api = get_model(cfg)
         self.plan = plan
-        self.execution_mode = plan.mode
+        self.execution_mode = base.mode
         self._prefill = jax.jit(
-            make_prefill_step(cfg, self.api, self.minfo, mesh)
+            make_prefill_step(cfg, self.api, self.minfo, mesh),
+            donate_argnums=(2,),
         )
         self._decode = jax.jit(
             make_serve_step(cfg, self.api, self.minfo, mesh),
             donate_argnums=(2,),
         )
+        # executable cache: one compiled decode program per step count
+        # (jit itself re-specializes on batch); repeat traffic of the
+        # same (batch, gen) shape never re-traces.
+        self._decode_scans: dict[int, Callable] = {}
+        self._cache_pool: dict[int, Any] = {}
+
+    # -- KV-cache pooling --------------------------------------------------
+    def _take_cache(self, b: int):
+        """A (B, max_len) cache: pooled buffer when the family's cache is
+        position-masked KV (prefill overwrites, decode masks the stale
+        tail), freshly zero-initialized otherwise."""
+        if self.cfg.family in _CACHE_REUSE_FAMILIES:
+            pooled = self._cache_pool.pop(b, None)
+            if pooled is not None:
+                return pooled
+        return self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
+
+    def _return_cache(self, b: int, cache) -> None:
+        if self.cfg.family in _CACHE_REUSE_FAMILIES:
+            self._cache_pool[b] = cache
+
+    def _decode_scan(self, num_steps: int) -> Callable:
+        fn = self._decode_scans.get(num_steps)
+        if fn is None:
+            fn = jax.jit(
+                make_decode_scan(self.cfg, self.api, self.minfo, self.mesh,
+                                 num_steps),
+                donate_argnums=(2,),
+            )
+            self._decode_scans[num_steps] = fn
+        return fn
 
     def generate(self, prompts: Array, num_tokens: int,
-                 extra: dict | None = None) -> ServeResult:
-        """prompts: (B, S) int32 — one bucket; greedy decode num_tokens."""
+                 extra: dict | None = None, *,
+                 decode: str = "scan") -> ServeResult:
+        """prompts: (B, S) int32 — one bucket; greedy decode num_tokens.
+
+        ``decode="scan"`` (default) runs all steps as one compiled
+        program; ``decode="loop"`` keeps the PR-2 one-dispatch-per-token
+        Python loop (benchmark baseline — token-for-token identical).
+        """
+        if decode not in ("scan", "loop"):
+            raise ValueError(f"decode must be 'scan' or 'loop', got {decode!r}")
         b, s = prompts.shape
         if s + num_tokens > self.max_len:
             raise ValueError(
                 f"prompt {s} + generate {num_tokens} exceeds max_len "
                 f"{self.max_len}"
             )
-        cache = self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
+        cache = self._take_cache(b)
         batch = {"tokens": prompts, **(extra or {})}
         # ambient kernel-variant selection must wrap trace time (the first
         # _prefill/_decode call below traces the model through kops)
@@ -142,15 +255,23 @@ class Server:
             if self.cfg.family == "vlm":
                 memory = batch.get("image_embeds")
             nxt, cache = self._prefill(self.params, batch, cache)
-            out = [prompts, nxt]
-            pos = s
-            for _ in range(num_tokens - 1):
-                nxt, cache = self._decode(
-                    self.params, nxt, cache, jnp.int32(pos), memory
+            pieces = [prompts, nxt]
+            steps = num_tokens - 1
+            if steps > 0 and decode == "scan":
+                buf, cache = self._decode_scan(steps)(
+                    self.params, nxt, cache, jnp.int32(s), memory
                 )
-                out.append(nxt)
-                pos += 1
+                pieces.append(buf)
+            elif steps > 0:
+                pos = s
+                for _ in range(steps):
+                    nxt, cache = self._decode(
+                        self.params, nxt, cache, jnp.int32(pos), memory
+                    )
+                    pieces.append(nxt)
+                    pos += 1
+        self._return_cache(b, cache)
         return ServeResult(
-            tokens=jnp.concatenate(out, axis=1), prompt_len=s,
+            tokens=jnp.concatenate(pieces, axis=1), prompt_len=s,
             generated=num_tokens,
         )

@@ -11,6 +11,8 @@ mode with ``cfg.use_pallas`` the plain MLP runs through the fused
 
 from __future__ import annotations
 
+import math
+
 import jax
 
 from repro.configs.base import ModelConfig
@@ -41,23 +43,35 @@ def mlp(
     table: FunctionTable = DEFAULT_TABLE,
     activation: str | None = None,
 ) -> Array:
-    """x (..., D) -> (..., D)."""
+    """x (..., D) -> (..., D).
+
+    The sidebar kernels take 2-D operands; higher-rank activations (the
+    serving path is (B, S, D)) flatten their leading dims into the row
+    axis — rows are independent for every op here, so the fused kernels
+    serve decode/prefill shapes too (PR 3: before this, serving never
+    reached the kernels and per-layer plans had nothing to dispatch to).
+    """
     act_name = activation or cfg.activation
     act = table.lookup(act_name)
+    d = x.shape[-1]
+    rows = math.prod(x.shape[:-1]) if x.ndim > 1 else 0
+    kernel_ok = cfg.use_pallas and x.ndim >= 2 and rows % 8 == 0
     if cfg.gated_mlp:
-        if cfg.use_pallas and x.ndim == 2 and x.shape[0] % 8 == 0:
-            return kops.sidebar_gated_mlp(
-                x, params["w_gate"], params["w_up"], params["w_down"],
-                act_name, table=table,
+        if kernel_ok:
+            y = kops.sidebar_gated_mlp(
+                x.reshape(rows, d), params["w_gate"], params["w_up"],
+                params["w_down"], act_name, table=table,
                 interpret=jax.default_backend() != "tpu",
             )
+            return y.reshape(x.shape)
         g = act(linear(x, params["w_gate"]))          # flexible (VPU)
         u = linear(x, params["w_up"])                 # static  (MXU)
         return linear((g * u).astype(x.dtype), params["w_down"])
-    if cfg.use_pallas and x.ndim == 2 and x.shape[0] % 8 == 0:
-        return kops.sidebar_mlp(
-            x, params["w_up"], params["w_down"], act_name, table=table,
-            interpret=jax.default_backend() != "tpu",
+    if kernel_ok:
+        y = kops.sidebar_mlp(
+            x.reshape(rows, d), params["w_up"], params["w_down"], act_name,
+            table=table, interpret=jax.default_backend() != "tpu",
         )
+        return y.reshape(x.shape)
     h = act(linear(x, params["w_up"]))
     return linear(h.astype(x.dtype), params["w_down"])

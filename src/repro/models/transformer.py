@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.function_table import DEFAULT_TABLE
+from repro.kernels import ops as kops
 from repro.models import attention as attn_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -167,9 +168,22 @@ def _unboundary(x, cfg: ModelConfig):
 
 def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                caches=None, cache_pos=None, memory=None):
-    """Run every scan group in the layer plan. caches mirrors blocks."""
+    """Run every scan group in the layer plan. caches mirrors blocks.
+
+    ``layer_base`` tracks the global layer index across scan groups so an
+    unrolled stack (``cfg.scan_layers=False``) can announce each layer to
+    ``kernels.ops.layer_scope`` — that is how a layer-indexed
+    ``ExecutionPlan`` reaches a different kernel variant per layer. A
+    scanned stack traces its body once and necessarily runs the plan
+    default for every layer; the same holds for vlm groups, which ALWAYS
+    scan (the vlm branch below never unrolls and never enters
+    ``layer_scope``, so a layer-indexed plan resolves to its default
+    there — ``launch.serve.Server`` only unrolls heterogeneous plans for
+    the dense/moe families that reach the unrolled branch).
+    """
     new_caches: dict[str, Any] = {}
     x = _boundary(x, cfg)
+    layer_base = 0
     for kind, count in _layer_plan(cfg):
         p_stack = params["blocks"][kind]
         c_stack = caches.get(kind) if caches else None
@@ -293,13 +307,17 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                 for i in range(count):
                     p_l = jax.tree.map(lambda a: a[i], p_stack)
                     c_l = jax.tree.map(lambda a: a[i], c_stack) if c_stack else None
-                    x, nc_i = body(x, (p_l, c_l))
+                    with kops.layer_scope(layer_base + i):
+                        x, nc_i = body(x, (p_l, c_l))
                     ncs.append(nc_i)
                 nc = (
                     jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
                     if ncs and ncs[0] is not None else None
                 )
             new_caches[kind] = nc
+        layer_base += count * (
+            cfg.cross_attn_every if kind == "vlm_group" else 1
+        )
     return x, new_caches
 
 

@@ -1,0 +1,223 @@
+"""Scan-compiled decode + per-layer plan dispatch (PR 3 tentpole).
+
+Invariants:
+  * ``Server.generate(decode="scan")`` — N tokens in one compiled
+    program — is token-for-token identical to the PR-2 per-token Python
+    loop, on an attention-cache arch and a recurrent-state arch.
+  * A heterogeneous ``ExecutionPlan`` reaches the kernels: two layers
+    planned at different ring depths trace two different kernel
+    variants (observed via the ``kernels.ops`` dispatch recorder).
+  * ``host_activation`` prechecks tileability (no exception control
+    flow): ineligible shapes route to the oracle without the kernel
+    ever being entered.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.core.modes import ExecutionMode, ExecutionPlan, LayerPlan
+from repro.kernels import activations
+from repro.kernels import ops as kops
+from repro.launch.serve import Server
+from repro.models.registry import get_model
+
+
+def _server(arch, max_len=48, **kw):
+    cfg = cfglib.get_smoke_config(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, Server(cfg, params, max_len=max_len, **kw)
+
+
+# two cache disciplines: position-masked KV (pooled+reused buffers) and
+# recurrent state (fresh per generate)
+@pytest.mark.parametrize("arch", ["nemotron-4-15b", "rwkv6-7b"])
+def test_scan_decode_matches_loop(arch):
+    cfg, server = _server(arch)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    loop = server.generate(prompts, 12, decode="loop")
+    scan = server.generate(prompts, 12, decode="scan")
+    np.testing.assert_array_equal(
+        np.asarray(loop.tokens), np.asarray(scan.tokens),
+        err_msg=f"{arch}: scan decode diverged from the loop",
+    )
+    assert scan.generated == 12 and scan.prompt_len == 8
+    # the scan executable is cached per step count: a second call with
+    # the same (batch, gen) must reuse it
+    assert set(server._decode_scans) == {11}
+    server.generate(prompts, 12, decode="scan")
+    assert set(server._decode_scans) == {11}
+
+
+def test_scan_decode_single_token_and_cache_pool():
+    cfg, server = _server("nemotron-4-15b")
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    out = server.generate(prompts, 1)
+    assert out.tokens.shape == (2, 5)
+    # KV-masked family: the cache buffer is pooled across generate calls
+    assert 2 in server._cache_pool
+    before = jax.tree.leaves(server._cache_pool[2])[0].shape
+    server.generate(prompts, 3)
+    assert jax.tree.leaves(server._cache_pool[2])[0].shape == before
+
+
+def _plan_cfg():
+    cfg = cfglib.get_smoke_config("nemotron-4-15b")
+    # tileable sidebar-kernel shapes + pallas routing; plain (non-gated)
+    # MLP is the kernel the per-layer plan dispatches between variants of
+    return dataclasses.replace(cfg, d_model=128, d_ff=128, num_heads=2,
+                               num_kv_heads=2, use_pallas=True)
+
+
+def test_per_layer_plan_traces_both_kernel_variants():
+    """The acceptance probe: two layers planned at different depths must
+    trace two different kernel variants in one Server."""
+    cfg = _plan_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    plan = ExecutionPlan(
+        default=LayerPlan(ExecutionMode.SIDEBAR),
+        layers={0: LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=2),
+                1: LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=3)},
+    )
+    server = Server(cfg, params, max_len=24, plan=plan)
+    # heterogeneous plan => the layer stack unrolls (one trace per layer)
+    assert server.cfg.scan_layers is False
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (8, 8), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    rec = []
+    with kops.record_dispatches(rec):
+        out = server.generate(prompts, 4)
+    assert out.tokens.shape == (8, 12)
+    mlp = {(d.layer, d.variant, d.depth)
+           for d in rec if d.op == "sidebar_mlp" and d.used_kernel}
+    assert (0, "pipelined", 2) in mlp, mlp
+    assert (1, "pipelined", 3) in mlp, mlp
+    # and nothing ran at a depth the plan didn't ask for
+    assert {d for (_, _, d) in mlp} == {2, 3}
+
+
+def test_per_layer_plan_matches_uniform_tokens():
+    """Kernel-variant dispatch is a schedule choice: per-layer depths
+    must not change the generated tokens."""
+    cfg = _plan_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (8, 8), 0, cfg.vocab_size, dtype=jnp.int32
+    )
+    uniform = Server(cfg, params, max_len=24,
+                     plan=LayerPlan(ExecutionMode.SIDEBAR))
+    per_layer = Server(cfg, params, max_len=24, plan=ExecutionPlan(
+        default=LayerPlan(ExecutionMode.SIDEBAR),
+        layers={0: LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=2),
+                1: LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=3)},
+    ))
+    a = uniform.generate(prompts, 5).tokens
+    b = per_layer.generate(prompts, 5).tokens
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uniform_execution_plan_keeps_scanned_stack():
+    cfg = cfglib.get_smoke_config("nemotron-4-15b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    plan = ExecutionPlan.uniform("sidebar_pipelined", depth=2)
+    server = Server(cfg, params, max_len=24, plan=plan)
+    assert server.cfg.scan_layers is True
+
+
+def test_heterogeneous_plan_rejected_for_non_unrollable_family():
+    """Families outside the generic transformer's dense/moe stacks trace
+    one variant; a per-layer plan there must fail loudly, not silently
+    serve the default (regression: silent no-op on rwkv/vlm)."""
+    cfg = cfglib.get_smoke_config("rwkv6-7b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    plan = ExecutionPlan(
+        default=LayerPlan(ExecutionMode.SIDEBAR),
+        layers={0: LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=4)},
+    )
+    with pytest.raises(ValueError, match="heterogeneous"):
+        Server(cfg, params, max_len=24, plan=plan)
+    # a uniform ExecutionPlan stays fine for the same family
+    Server(cfg, params, max_len=24,
+           plan=ExecutionPlan.uniform("sidebar_pipelined", depth=2))
+
+
+def test_server_rejects_non_sidebar_default():
+    cfg = cfglib.get_smoke_config("nemotron-4-15b")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="SIDEBAR"):
+        Server(cfg, params, plan=ExecutionMode.MONOLITHIC)
+
+
+def test_execution_plan_by_index_and_uniformity():
+    d2 = LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=2)
+    d4 = LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=4)
+    plan = ExecutionPlan.by_index([d2, d4, d2])
+    assert plan.default == d2          # modal choice
+    assert plan.for_layer(1) == d4
+    assert plan.for_layer("1") == d4   # str/int keys resolve alike
+    assert plan.for_layer(None) == d2
+    assert not plan.is_uniform
+    assert ExecutionPlan.by_index([d2, d2]).is_uniform
+    # hashable fingerprint for executable caches
+    assert plan.cache_key() == ExecutionPlan.by_index([d2, d4, d2]).cache_key()
+    assert plan.cache_key() != ExecutionPlan.by_index([d2, d2]).cache_key()
+
+
+def test_layer_scope_resolves_ambient_plan():
+    d2 = LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=2)
+    d8 = LayerPlan(ExecutionMode.SIDEBAR_PIPELINED, depth=8)
+    plan = ExecutionPlan(default=d2, layers={3: d8})
+    with kops.execution_plan(plan):
+        assert kops.current_plan() == d2
+        with kops.layer_scope(3):
+            assert kops.current_plan() == d8
+            with kops.layer_scope(0):
+                assert kops.current_plan() == d2
+            assert kops.current_plan() == d8
+        assert kops.current_plan() == d2
+        assert kops.current_full_plan() is plan
+
+
+def test_host_activation_prechecks_instead_of_catching(monkeypatch):
+    """Untileable shapes route to the oracle WITHOUT entering the kernel
+    (the old code caught the kernel's ValueError)."""
+    from repro.core import constants
+    from repro.kernels import ops as O
+
+    big_n = constants.VMEM_BYTES_PER_CHIP // 32 + 128  # rowwise VMEM bust
+    assert not activations.tileable((4, big_n), "softmax")
+    assert activations.tileable((32, 256), "softmax")
+
+    def boom(*a, **k):  # the kernel must never be entered
+        raise AssertionError("kernel entered for ineligible shape")
+
+    monkeypatch.setattr(O, "_activation_kernel", boom)
+    x = jnp.ones((4, big_n), jnp.float32)
+    y = O.host_activation(x, "softmax", interpret=True)
+    np.testing.assert_allclose(np.asarray(y), 1.0 / big_n, rtol=1e-6)
+    monkeypatch.undo()
+    # explicit use_kernel=True on an untileable shape now fails loudly
+    # (the old try/except silently routed it to the oracle)
+    with pytest.raises(ValueError):
+        O.host_activation(x, "softmax", use_kernel=True, interpret=True)
+
+
+def test_host_activation_kernel_still_used_when_eligible():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 256), jnp.float32)
+    got = kops.host_activation(x, "softmax", interpret=True)
+    want = jax.nn.softmax(x, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
