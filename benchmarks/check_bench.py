@@ -1,0 +1,101 @@
+"""Schema gate for the serving bench artifact (BENCH_serving.json).
+
+CI generates the bench JSON fresh every run, but perf numbers on shared
+runners are noise — so the gate validates STRUCTURE, not speed: the
+sections and rows the trajectory file promises must exist, every
+throughput row must carry a real (finite, positive) tokens/s value, and
+the one sanity invariant that is about mechanism rather than machine —
+scan-compiled decode beats the per-token dispatch loop — must hold
+(``loop-vs-scan > 1.0x`` survives any CPU; it only breaks if someone
+re-introduces a per-token host round-trip).
+
+Run: python benchmarks/check_bench.py [path]   (default BENCH_serving.json)
+Exit code 0 = schema valid; 1 = violation (each printed with its rule).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+# rows every serving bench must emit (name suffixes, per serving_bench.py)
+REQUIRED_ROWS = (
+    "loop/tok_s",
+    "scan/tok_s",
+    "scan_over_loop_speedup",
+    "plan_flat/tok_s",
+    "plan_per_layer/tok_s",
+    "continuous/tok_s",
+    "static_batch/tok_s",
+    "continuous_over_static",
+    "continuous_crossover_mix",
+    "continuous/wasted_step_frac",
+)
+# rows whose derived value is a throughput and must be a positive number
+TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
+
+
+def check(records: list) -> list[str]:
+    errors = []
+    if not isinstance(records, list) or not records:
+        return ["bench JSON must be a non-empty list of row objects"]
+    by_suffix: dict[str, dict] = {}
+    for i, row in enumerate(records):
+        if not isinstance(row, dict):
+            errors.append(f"row {i}: not an object")
+            continue
+        missing = {"section", "name", "us_per_call", "derived"} - set(row)
+        if missing:
+            errors.append(f"row {i}: missing keys {sorted(missing)}")
+            continue
+        for suffix in REQUIRED_ROWS:
+            if row["name"].endswith(suffix):
+                by_suffix.setdefault(suffix, row)
+    serving = [r for r in records
+               if isinstance(r, dict) and r.get("section") == "serving"]
+    if not serving:
+        errors.append('no rows with section == "serving"')
+    for suffix in REQUIRED_ROWS:
+        if suffix not in by_suffix:
+            errors.append(f"required row */{suffix} is absent")
+    for suffix in TOK_S_ROWS:
+        row = by_suffix.get(suffix)
+        if row is None:
+            continue
+        v = row["derived"]
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            errors.append(
+                f"{row['name']}: tokens/s must be a finite positive "
+                f"number, got {v!r}"
+            )
+    speedup = by_suffix.get("scan_over_loop_speedup")
+    if speedup is not None:
+        v = speedup["derived"]
+        if not isinstance(v, (int, float)) or not v > 1.0:
+            errors.append(
+                f"{speedup['name']}: scan-compiled decode must beat the "
+                f"per-token loop (> 1.0x), got {v!r} — a regression here "
+                "means a per-token host round-trip came back"
+            )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    errors = check(records)
+    for e in errors:
+        print(f"check_bench: {path}: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench: {path}: {len(records)} rows, schema OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

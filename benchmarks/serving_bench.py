@@ -18,11 +18,17 @@ slot utilization — are backend-independent):
                    the serving-layer cost of per-layer dispatch; the
                    kernel-level payoff of the per-layer depth choice is
                    the depth_sweep section of fusion_bench.
-  continuous     — mixed-length traffic through the slot scheduler
-                   (admission into freed slots between scan segments) vs
+  continuous     — mixed-length traffic through the slot scheduler (ONE
+                   batched segment program over all occupied slots at
+                   per-row positions; batched admission fused into a
+                   single gather-prefill-correct-scatter dispatch) vs
                    static batching that pads every request to the batch
-                   max. Useful-token throughput; the static batch burns
-                   slots on drained requests.
+                   max. Useful-token throughput over a traffic-mix sweep
+                   (homogeneous -> uniform -> heavy-tailed generation
+                   lengths) on a compute-dominated smoke config; the
+                   measured crossover records the first mix where
+                   continuous wins (static batching's padding waste
+                   outgrows the scheduler's boundary overhead).
 
 Rows are ``(tag, us_per_token, derived)`` where derived is tokens/s
 (or a ratio for the summary rows), so ``benchmarks/run.py serving
@@ -155,39 +161,64 @@ def flat_vs_plan_rows():
     return out
 
 
-def continuous_rows():
-    cfg = cfglib.get_smoke_config(ARCH)
-    api = get_model(cfg)
-    params = api.init(jax.random.PRNGKey(0), cfg)
-    rng = np.random.RandomState(7)
-    n_req, slots, segment = 8, 4, 8
-    reqs = [
-        (rng.randint(0, cfg.vocab_size, size=rng.randint(4, 15)).astype(
-            np.int32), int(rng.randint(8, GEN)))
-        for _ in range(n_req)
-    ]
-    useful = sum(g for _, g in reqs)
+# continuous-vs-static runs on a compute-dominated smoke config (d=256,
+# 4 layers — still seconds on CPU): at the tiny test size a single XLA
+# dispatch costs as much as several decode steps, so the comparison
+# measures Python/dispatch overhead instead of scheduler mechanics. The
+# traffic sweep moves from homogeneous generation lengths (static
+# batching's best case: zero padding waste) to a heavy-tailed chat-like
+# mix (many short answers, a few long ones — every static batch pads to
+# its longest member); the measured crossover is the first mix where
+# batched segment decode wins.
+CONT_SLOTS, CONT_REQS, CONT_TRIALS = 4, 24, 3
+TRAFFIC_MIXES = ("uniform_28_32", "uniform_8_32", "heavy_tail")
 
+
+def _continuous_cfg():
+    import dataclasses
+
+    return dataclasses.replace(
+        cfglib.get_smoke_config(ARCH), d_model=256, num_heads=8,
+        num_kv_heads=2, d_ff=1024, num_layers=4,
+    )
+
+
+def _traffic(cfg, mix: str):
+    rng = np.random.RandomState(7)
+    if mix == "uniform_28_32":
+        gens = [int(rng.randint(28, GEN)) for _ in range(CONT_REQS)]
+    elif mix == "uniform_8_32":
+        gens = [int(rng.randint(8, GEN)) for _ in range(CONT_REQS)]
+    else:  # heavy_tail: 3/4 short chat answers, 1/4 long generations
+        n_long = CONT_REQS // 4
+        gens = [int(rng.randint(2, 7)) for _ in range(CONT_REQS - n_long)]
+        gens += [int(rng.randint(28, GEN)) for _ in range(n_long)]
+        rng.shuffle(gens)
+    return [
+        (rng.randint(0, cfg.vocab_size, size=rng.randint(4, 15)).astype(
+            np.int32), g)
+        for g in gens
+    ]
+
+
+def _measure_mix(cfg, params, server, reqs):
+    """Interleaved paired trials (continuous then static per trial) so
+    host noise cancels in the ratio; returns medians."""
+    useful = sum(g for _, g in reqs)
+    max_len = PROMPT + GEN + 8
     sched = ContinuousBatchingServer(
-        cfg, params, num_slots=slots, max_len=PROMPT + GEN + 8,
-        buckets=(16,), segment=segment,
+        cfg, params, num_slots=CONT_SLOTS, max_len=max_len, buckets=(16,),
+        segment=8,
     )
     for p, g in reqs:
         sched.submit(p, g)
-    sched.run()  # warmup: compiles every (bucket, plan) executable
-    for p, g in reqs:
-        sched.submit(p, g)
-    t0 = time.perf_counter()
-    sched.run()
-    cont_wall = time.perf_counter() - t0
-    cont_tok_s = useful / cont_wall
-
-    # static baseline: two fixed batches of `slots`, padded to the batch
-    # max prompt/gen (Server pads nothing itself: bucket by hand).
-    server = Server(cfg, params, max_len=PROMPT + GEN + 8)
-    batches = [reqs[i:i + slots] for i in range(0, n_req, slots)]
+    sched.run()  # warmup: compiles every (bucket, steps, plan) executable
+    batches = [reqs[i:i + CONT_SLOTS]
+               for i in range(0, CONT_REQS, CONT_SLOTS)]
 
     def run_static():
+        # static baseline: fixed batches of `slots`, padded to the batch
+        # max prompt/gen (Server pads nothing itself: bucket by hand).
         for batch in batches:
             s_max = max(p.size for p, _ in batch)
             g_max = max(g for _, g in batch)
@@ -198,21 +229,61 @@ def continuous_rows():
                 server.generate(jnp.asarray(toks), g_max).tokens)
 
     run_static()  # warmup
-    t0 = time.perf_counter()
-    run_static()
-    static_wall = time.perf_counter() - t0
-    static_tok_s = useful / static_wall
+    ratios, cont, static = [], [], []
+    for _ in range(CONT_TRIALS):
+        for p, g in reqs:
+            sched.submit(p, g)
+        t0 = time.perf_counter()
+        sched.run()
+        cw = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_static()
+        sw = time.perf_counter() - t0
+        ratios.append(sw / cw)
+        cont.append(useful / cw)
+        static.append(useful / sw)
+    # report the median-RATIO trial's own numbers so the three rows stay
+    # self-consistent (independent medians can disagree with the paired
+    # ratio under host noise)
+    mid = int(np.argsort(ratios)[len(ratios) // 2])
+    return cont[mid], static[mid], ratios[mid], sched
 
-    return [
-        (f"serving/{ARCH}/continuous/tok_s", cont_wall * 1e6 / useful,
-         cont_tok_s),
-        (f"serving/{ARCH}/static_batch/tok_s", static_wall * 1e6 / useful,
-         static_tok_s),
-        (f"serving/{ARCH}/continuous_over_static", 0.0,
-         cont_tok_s / static_tok_s),
-        (f"serving/{ARCH}/continuous/wasted_step_frac", 0.0,
-         sched.stats["wasted_steps"] / max(sched.stats["decode_steps"], 1)),
-    ]
+
+def continuous_rows():
+    cfg = _continuous_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    server = Server(cfg, params, max_len=PROMPT + GEN + 8)
+
+    out = []
+    ratios = {}
+    sched = None
+    for mix in TRAFFIC_MIXES:
+        reqs = _traffic(cfg, mix)
+        cont, static, ratio, sched = _measure_mix(cfg, params, server, reqs)
+        ratios[mix] = ratio
+        if mix == "heavy_tail":  # the flagship comparison
+            out.append((f"serving/{ARCH}/continuous/tok_s", 1e6 / cont,
+                        cont))
+            out.append((f"serving/{ARCH}/static_batch/tok_s", 1e6 / static,
+                        static))
+            out.append((f"serving/{ARCH}/continuous_over_static", 0.0,
+                        ratio))
+        out.append((f"serving/{ARCH}/continuous_over_static/{mix}", 0.0,
+                    ratio))
+    # measured crossover: 1-based index (in increasing traffic
+    # heterogeneity) of the first mix where continuous wins; 0 = never
+    crossover = next((i + 1 for i, m in enumerate(TRAFFIC_MIXES)
+                      if ratios[m] >= 1.0), 0)
+    out.append((f"serving/{ARCH}/continuous_crossover_mix", 0.0,
+                float(crossover)))
+    # idle-row fraction: free/dead slot rows the batched segment
+    # programs decode alongside active ones (shrink-to-fit already makes
+    # active-slot overshoot zero), per active decode step
+    out.append((f"serving/{ARCH}/continuous/wasted_step_frac", 0.0,
+                sched.stats["wasted_steps"] /
+                max(sched.stats["decode_steps"], 1)))
+    return out
 
 
 def rows():

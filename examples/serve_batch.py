@@ -27,9 +27,20 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.core.modes import ExecutionMode, ExecutionPlan, LayerPlan
+from repro.launch.sampling import SamplingParams
 from repro.launch.scheduler import ContinuousBatchingServer
 from repro.launch.serve import Server
 from repro.models.registry import get_model
+
+
+def build_sampling(args) -> SamplingParams | None:
+    temperature = args.temperature
+    if temperature is None:
+        if args.top_k is None and args.top_p is None:
+            return None  # no sampling flags at all -> greedy
+        temperature = 1.0  # top-k/top-p imply sampling
+    return SamplingParams(temperature=temperature, top_k=args.top_k,
+                          top_p=args.top_p, seed=args.seed)
 
 
 def build_plan(args, cfg):
@@ -46,9 +57,10 @@ def build_plan(args, cfg):
 
 
 def run_static(args, cfg, api, params, plan):
+    sample = build_sampling(args)
     print(f"arch={cfg.arch_id} (reduced config for CPU), "
           f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}, "
-          f"plan={plan}, decode={args.decode}")
+          f"plan={plan}, decode={args.decode}, sample={sample}")
     server = Server(cfg, params, max_len=args.prompt_len + args.gen,
                     plan=plan)
     prompts = jax.random.randint(
@@ -67,9 +79,11 @@ def run_static(args, cfg, api, params, plan):
 
     # warmup (compile) — same gen length so the timed call reuses the
     # cached N-step scan executable instead of tracing it
-    server.generate(prompts, args.gen, extra, decode=args.decode)
+    server.generate(prompts, args.gen, extra, decode=args.decode,
+                    sample=sample)
     t0 = time.perf_counter()
-    result = server.generate(prompts, args.gen, extra, decode=args.decode)
+    result = server.generate(prompts, args.gen, extra, decode=args.decode,
+                             sample=sample)
     dt = time.perf_counter() - t0
     total_new = args.batch * args.gen
     print(f"generated {total_new} tokens in {dt:.2f}s "
@@ -79,8 +93,10 @@ def run_static(args, cfg, api, params, plan):
 
 
 def run_continuous(args, cfg, api, params, plan):
+    sample = build_sampling(args)
     print(f"arch={cfg.arch_id} continuous: requests={args.requests}, "
-          f"slots={args.slots}, segment={args.segment}, plan={plan}")
+          f"slots={args.slots}, segment={args.segment}, plan={plan}, "
+          f"sample={sample}")
     sched = ContinuousBatchingServer(
         cfg, params, num_slots=args.slots,
         max_len=args.prompt_len + args.gen,
@@ -89,17 +105,28 @@ def run_continuous(args, cfg, api, params, plan):
     )
     rng = np.random.RandomState(0)
     useful = 0
-    for _ in range(args.requests):
+    for i in range(args.requests):
         plen = int(rng.randint(2, args.prompt_len))
         gen = int(rng.randint(1, args.gen))
         useful += gen
-        sched.submit(rng.randint(0, cfg.vocab_size, size=plen), gen)
+        # alternate sampled/greedy rows so the smoke covers the mixed
+        # segment program when sampling flags are given
+        sched.submit(rng.randint(0, cfg.vocab_size, size=plen), gen,
+                     sample=sample if i % 2 == 0 else None)
     t0 = time.perf_counter()
     done = sched.run()
     dt = time.perf_counter() - t0
     print(f"drained {len(done)} requests / {useful} tokens in {dt:.2f}s "
           f"({useful/dt:.1f} tok/s on CPU, cold) — stats {sched.stats}")
-    print("executables:", [k[:2] for k in sched.executable_cache_keys()])
+    # the executable-cache counters are THE re-trace regression signal:
+    # repeat traffic of a shape/plan already served must be all hits, so
+    # a compile count that grows run-over-run in the CI smoke log means
+    # something started re-tracing
+    c, h = sched.stats["compiles"], sched.stats["hits"]
+    keys = sched.executable_cache_keys()
+    print(f"executable cache: {c} compiles, {h} hits "
+          f"({h / max(c + h, 1):.0%} hit rate) across {len(keys)} programs")
+    print("executables:", [k[:3] for k in keys])
 
 
 def main():
@@ -134,6 +161,15 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--segment", type=int, default=8)
+    ap.add_argument(
+        "--temperature", type=float, default=None,
+        help="enable sampled decoding (temperature 0 = exact greedy); "
+             "continuous mode samples every other request",
+    )
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--top-p", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed (same seed => same tokens)")
     args = ap.parse_args()
 
     cfg = cfglib.get_smoke_config(args.arch)

@@ -1,0 +1,144 @@
+"""Sampled decoding: temperature / top-k / top-p with position-keyed PRNG.
+
+The serving paths (``launch.serve.Server`` scan and loop decode, and the
+continuous-batching scheduler's segment decode) all sample through ONE
+rule so their token streams are interchangeable:
+
+  * every request owns a **base key** — ``fold_in(PRNGKey(seed), row)``
+    where ``row`` is the request's batch row (``Server.generate``) or 0
+    (one scheduler request == batch row 0 of a solo generate);
+  * the token written at sequence index ``p`` is sampled with
+    ``fold_in(base_key, p)`` — the key depends only on (seed, position),
+    never on batch composition, slot index, segment length, or decode
+    style. Scan and loop decode are bit-identical by construction, and a
+    scheduler restarted mid-stream (resubmit prompt + tokens-so-far with
+    the same seed) continues the exact stream it would have produced.
+
+Per-row sampling *parameters* are traced arrays, so one compiled segment
+program serves any mix of greedy and sampled slots: a greedy row carries
+``temperature == 0`` and takes the ``argmax`` branch of ``jnp.where`` —
+bit-identical to the pure-greedy path on the same logits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How to turn logits into a token.
+
+    temperature 0 is exact greedy argmax (bit-identical to passing no
+    sampling at all); ``top_k``/``top_p`` of ``None`` disable the
+    respective truncation.
+    """
+
+    temperature: float = 1.0
+    top_k: int | None = None
+    top_p: float | None = None
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if self.top_p is not None and not 0 < self.top_p <= 1:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+def request_key(seed: int, row: int = 0) -> Array:
+    """The base key of one request: row r of a batched generate, or a
+    scheduler request (always row 0)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), row)
+
+
+def sample_state(sp: SamplingParams, batch: int) -> dict:
+    """Traced per-row sampling state for a whole batch sharing ``sp``.
+
+    Rows get independent streams (base key folded by row index), so two
+    identical prompts in one batch do not sample identical continuations.
+    The ``top_k``/``top_p`` entries are OMITTED when disabled — the
+    pytree structure is what jit specializes on, so the temperature-only
+    common case never traces the O(V log V) truncation sorts.
+    """
+    keys = jax.vmap(lambda r: request_key(sp.seed, r))(jnp.arange(batch))
+    state = {
+        "key": keys,
+        "temperature": jnp.full((batch,), sp.temperature, jnp.float32),
+    }
+    if sp.top_k is not None:
+        state["top_k"] = jnp.full((batch,), sp.top_k, jnp.int32)
+    if sp.top_p is not None:
+        state["top_p"] = jnp.full((batch,), sp.top_p, jnp.float32)
+    return state
+
+
+def merge_rows(rows: list[tuple[Array, SamplingParams | None]]) -> dict:
+    """Per-row state from heterogeneous requests (the scheduler's slots).
+
+    ``rows`` holds ``(base_key, params-or-None)`` per slot; greedy slots
+    (``None``) become temperature-0 rows, which sample as exact argmax.
+    ``top_k``/``top_p`` entries appear only when SOME row enables them
+    (disabled rows carry the no-op values 0 / 1.0); an all-disabled
+    batch omits them so the truncation sorts are never traced.
+    """
+    import numpy as np
+
+    keys = np.stack([np.asarray(k) for k, _ in rows])
+    temp = np.asarray(
+        [0.0 if sp is None else sp.temperature for _, sp in rows], np.float32
+    )
+    state = {"key": jnp.asarray(keys), "temperature": jnp.asarray(temp)}
+    if any(sp is not None and sp.top_k is not None for _, sp in rows):
+        state["top_k"] = jnp.asarray(
+            [(sp.top_k or 0) if sp else 0 for _, sp in rows], jnp.int32)
+    if any(sp is not None and sp.top_p is not None for _, sp in rows):
+        state["top_p"] = jnp.asarray(
+            [1.0 if sp is None or sp.top_p is None else sp.top_p
+             for _, sp in rows], jnp.float32)
+    return state
+
+
+def sample_tokens(logits: Array, state: dict | None, pos) -> Array:
+    """Sample one token per row; ``pos`` keys each row's PRNG stream.
+
+    logits (B, V) — already pad-masked; pos scalar or (B,) — the sequence
+    index the sampled token will occupy (NOT the input token's position).
+    Greedy rows (temperature 0) return the exact argmax of ``logits``.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if state is None:
+        return greedy
+    b, v = logits.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    keys = jax.vmap(jax.random.fold_in)(state["key"], pos)
+    temp = state["temperature"]
+    x = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)[:, None]
+    if "top_k" in state:
+        # top-k: rank every logit within its row (stable argsort — ties
+        # keep index order); a traced per-row k masks ranks >= k.
+        # k == 0 disables that row.
+        ranks = jnp.argsort(jnp.argsort(-x, axis=-1), axis=-1)
+        k = jnp.where(state["top_k"] > 0, state["top_k"], v)
+        x = jnp.where(ranks < k[:, None], x, -jnp.inf)
+    if "top_p" in state:
+        # top-p (nucleus) over the post-top-k distribution: keep the
+        # smallest prefix of descending probs whose cumulative mass
+        # reaches p — i.e. every token at least as probable as the one
+        # that crosses p.
+        probs = jax.nn.softmax(x, axis=-1)
+        desc = jnp.sort(probs, axis=-1)[..., ::-1]
+        cum = jnp.cumsum(desc, axis=-1)
+        crossing = jnp.minimum(
+            jnp.sum(cum < state["top_p"][:, None], axis=-1), v - 1)
+        cutoff = jnp.take_along_axis(desc, crossing[:, None], axis=-1)
+        x = jnp.where(probs >= cutoff, x, -jnp.inf)
+    sampled = jax.vmap(jax.random.categorical)(keys, x).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)

@@ -12,20 +12,40 @@ discipline the ROADMAP's "heavy traffic" north star actually needs:
     The batch axis of every cache leaf is *probed*, not assumed: specs
     for batch=2 vs batch=3 are diffed, which keeps the scheduler family-
     agnostic about cache layouts (GQA 5-D KV, MLA latent, int8 scales).
-  * **Prompt bucketing** — admission prefills ``prompt[:-1]`` right-
-    padded to the smallest bucket, then runs ONE single-token decode of
-    the true last prompt token at its true position. The correction step
-    overwrites the first pad's KV slot and returns the first generated
-    token from the right logits row, so bucketing never changes tokens:
-    pad KV beyond the true length is overwritten by later decode writes
-    or masked by the causal ``kpos <= pos`` attention mask.
+  * **Prompt bucketing + batched admission** — one admission round
+    prefills EVERY co-admitted prompt's ``prompt[:-1]`` together, right-
+    padded to the round's largest bucket, then runs ONE single-token
+    decode of each true last prompt token at its true per-row position
+    (the same rowwise-position machinery as segment decode), then
+    scatters all rows into the slot cache in one insert. The correction
+    step overwrites the first pad's KV slot and returns the first
+    generated token from the right logits row, so bucketing never
+    changes tokens: pad KV beyond the true length is overwritten by
+    later decode writes or masked by the causal ``kpos <= pos``
+    attention mask.
   * **Segment decode** — between admissions, ALL occupied slots advance
-    ``segment`` tokens in one scan-compiled dispatch
-    (``make_serve_step`` vmapped over slots with a *per-slot* position
-    vector, wrapped in ``jax.lax.scan`` exactly like
-    ``serve.make_decode_scan``). Requests finish mid-batch without
-    stalling neighbours; their slots re-enter the free list at the next
-    segment boundary.
+    ``segment`` tokens in ONE batched scan-compiled dispatch: the serve
+    step runs over the whole slot cache with a per-row ``(B,)`` position
+    vector threaded down to the attention math (RoPE, causal mask, and
+    KV writes all key off each row's own position — see
+    ``models.attention.rowwise_pos``). This keeps the matmuls dense over
+    slots instead of vmapping into ``num_slots`` batch-1 programs with
+    scatter KV writes (the "vmap tax" that made continuous batching lose
+    to static batching at smoke scale). When every slot is occupied at
+    the SAME position the scheduler dispatches the aligned fast path — a
+    scalar-position program whose KV write is one dense
+    ``dynamic_update_slice``, exactly like ``serve.make_decode_scan``.
+    Requests finish mid-batch without stalling neighbours; their slots
+    re-enter the free list at the next segment boundary.
+  * **Sampling** — ``submit(..., sample=SamplingParams(...))`` gives a
+    request temperature / top-k / top-p decoding. The request's PRNG
+    stream is position-keyed (``launch.sampling``): its base key lives
+    in the slot state and the token at sequence index p is keyed by
+    (base key, p), so admission order, slot churn, segment length, and
+    even a scheduler restart mid-stream (resubmit prompt + tokens-so-far
+    with the same seed) never change the stream. Greedy and sampled
+    requests share one batched segment program: greedy rows carry
+    temperature 0, which is exact argmax.
   * **Executable cache** — every compiled program is keyed by
     ``(kind, shape-key, plan)``: repeat traffic (same bucket, same plan)
     never re-traces. ``stats["compiles"]`` / ``stats["hits"]`` make the
@@ -59,6 +79,8 @@ from repro.core.modes import (
     coerce_layer_plan,
 )
 from repro.kernels import ops as kops
+from repro.launch import sampling
+from repro.launch.sampling import SamplingParams
 from repro.launch.serve import (
     PER_LAYER_PLAN_FAMILIES,
     make_prefill_step,
@@ -92,9 +114,16 @@ class _Slot:
     rid: int | None = None
     pos: int = 0              # next KV write position (= current length)
     remaining: int = 0
-    last_token: int = 0
-    tokens: list[int] = dataclasses.field(default_factory=list)
+    generated: int = 0        # tokens produced so far (host-side count)
+    # generated tokens as (device_array, row, take) chunk handles — the
+    # async drain loop never syncs token VALUES; chunks materialize to
+    # numpy only when a request is handed back (see _materialize)
+    chunks: list[tuple] = dataclasses.field(default_factory=list)
     prompt: np.ndarray | None = None
+    sample: SamplingParams | None = None
+    # the request's PRNG base key ((2,) uint32): position-keyed at use,
+    # so the stream survives slot churn and scheduler restarts
+    key: np.ndarray | None = None
 
     @property
     def free(self) -> bool:
@@ -124,17 +153,18 @@ def probe_batch_axes(api, cfg: ModelConfig, minfo, max_len: int):
 
 
 class ContinuousBatchingServer:
-    """Greedy-decoding server with slot-based continuous batching.
+    """Slot-based continuous batching with batched segment decode.
 
     >>> srv = ContinuousBatchingServer(cfg, params, num_slots=4)
     >>> srv.submit([1, 2, 3], max_new_tokens=16)
+    >>> srv.submit([4, 5], 16, sample=SamplingParams(temperature=0.8))
     >>> done = srv.run()          # drain pending + active
     """
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  num_slots: int = 4, max_len: int = 256,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 segment: int = 8,
+                 segment: int = 8, admit_batch: int = 2,
                  plan: LayerPlan | ExecutionPlan | ExecutionMode | str |
                  None = None) -> None:
         if cfg.family not in _SUPPORTED_FAMILIES:
@@ -160,6 +190,12 @@ class ContinuousBatchingServer:
             L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
         )
         self.api = get_model(cfg)
+        if not self.api.rowwise_decode_pos:
+            raise ValueError(
+                f"family {cfg.family!r} decode_step takes scalar positions "
+                "only; batched segment decode needs per-row (B,) positions "
+                "(ModelApi.rowwise_decode_pos)"
+            )
         self.num_slots = num_slots
         self.max_len = max_len
         # a bucket longer than the KV cache could never be prefilled into
@@ -167,6 +203,7 @@ class ContinuousBatchingServer:
         # whatever the dropped buckets would have
         self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
         self.segment = segment
+        self.admit_batch = max(1, min(admit_batch, num_slots))
         self.axes = probe_batch_axes(self.api, cfg, self.minfo, max_len)
         # THE slot cache: allocated once, lives as long as the server.
         self.cache = self.api.init_cache(cfg, self.minfo, num_slots, max_len)
@@ -175,8 +212,15 @@ class ContinuousBatchingServer:
         self.finished: list[FinishedRequest] = []
         self._next_rid = 0
         self._exec: dict[tuple, Callable] = {}
+        # the running token of every slot, device-side (N, 1): written
+        # ONLY by program outputs (segment final carry / admission
+        # correction scatter), so the drain loop never blocks on it
+        self._toks = jnp.zeros((num_slots, 1), jnp.int32)
+        self._done_raw: list[tuple] = []   # retired, not yet materialized
+        self._deferred = False             # admission hysteresis armed
         self.stats = {"compiles": 0, "hits": 0, "admitted": 0,
-                      "segments": 0, "decode_steps": 0, "wasted_steps": 0}
+                      "segments": 0, "decode_steps": 0, "wasted_steps": 0,
+                      "admit_deferrals": 0}
 
     # -- executable cache --------------------------------------------------
     def _compiled(self, key: tuple, builder: Callable[[], Callable]):
@@ -201,7 +245,8 @@ class ContinuousBatchingServer:
                 return b
         return n
 
-    def submit(self, prompt, max_new_tokens: int) -> int:
+    def submit(self, prompt, max_new_tokens: int,
+               sample: SamplingParams | None = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -214,177 +259,335 @@ class ContinuousBatchingServer:
             )
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append((rid, prompt, max_new_tokens))
+        self.pending.append((rid, prompt, max_new_tokens, sample))
         return rid
 
     # -- admission ---------------------------------------------------------
-    def _insert_fn(self):
+    def _admit_fn(self, *, with_prefill: bool) -> Callable:
+        """ONE compiled program for a whole admission round, in place on
+        the slot cache: gather the freed rows (probed batch axes),
+        right-padded batched prefill of every co-admitted ``prompt[:-1]``
+        (skipped when all prompts are single tokens), the per-row-
+        position correction step, and the scatter back. The gathered
+        rows still hold retired requests' KV — stale state is
+        overwritten by the prefill/decode writes or masked by the causal
+        ``kpos <= pos`` read before it is ever visible (the same
+        argument as prompt bucketing)."""
+        prefill_step = make_prefill_step(self.cfg, self.api, self.minfo,
+                                         self.mesh)
+        serve_step = make_serve_step(self.cfg, self.api, self.minfo,
+                                     self.mesh)
         axes = self.axes
 
-        def insert(full, one, slot):
-            return jax.tree.map(
-                lambda f, o, ax: jax.lax.dynamic_update_slice_in_dim(
-                    f, o.astype(f.dtype), slot, axis=ax),
-                full, one, axes,
+        def admit(params, padded, full, prev_toks, toks, pos, slots,
+                  sample=None):
+            rows = jax.tree.map(
+                lambda f, ax: jnp.take(f, slots, axis=ax), full, axes)
+            if with_prefill:
+                _, rows = prefill_step(params, {"tokens": padded}, rows)
+            nxt, rows = serve_step(params, toks, rows, pos, None, sample)
+            # single-advanced-index scatter: the axis keeps its position
+            full = jax.tree.map(
+                lambda f, o, ax: f.at[(slice(None),) * ax + (slots,)].set(
+                    o.astype(f.dtype)),
+                full, rows, axes,
             )
+            # merge the correction tokens into the running (N, 1) token
+            # vector so the next segment feeds them without a host sync
+            prev_toks = prev_toks.at[slots].set(nxt)
+            return nxt, prev_toks, full
 
-        return jax.jit(insert, donate_argnums=(0,))
+        return jax.jit(admit, donate_argnums=(2, 3))
 
-    def _admit_one(self, slot_idx: int, rid: int, prompt: np.ndarray,
-                   max_new: int) -> None:
-        s_true = int(prompt.size)
-        cache1 = self.api.init_cache(self.cfg, self.minfo, 1, self.max_len)
-        if s_true > 1:
-            bucket = self.bucket_for(s_true - 1)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, : s_true - 1] = prompt[:-1]
-            prefill = self._compiled(
-                ("prefill", bucket, self._plan_key),
-                lambda: jax.jit(
-                    make_prefill_step(self.cfg, self.api, self.minfo,
-                                      self.mesh),
-                    donate_argnums=(2,),
-                ),
-            )
-            _, cache1 = prefill(self.params, {"tokens": jnp.asarray(padded)},
-                                cache1)
-        # correction step: the true last prompt token at its true position
-        # overwrites the first pad's KV and yields the first new token
-        # from the right logits row (bucket padding never changes tokens).
-        decode = self._compiled(
-            ("admit_decode", self._plan_key),
-            lambda: jax.jit(
-                make_serve_step(self.cfg, self.api, self.minfo, self.mesh),
-                donate_argnums=(2,),
-            ),
+    def _admit_batch(self, slot_idxs: list[int], reqs: list[tuple]) -> None:
+        """Admit ``k`` requests in ONE dispatch: gather the freed slot
+        rows, right-padded batched prefill (to the largest needed
+        bucket), the correction step at per-row true positions (the same
+        rowwise-position machinery as segment decode), and the scatter
+        back — all fused into one compiled program per admission ROUND
+        instead of three dispatches per request.
+
+        Padding is still invisible in tokens: each row's pad KV beyond
+        its true length is overwritten by the correction step / later
+        decode writes or masked by the causal ``kpos <= pos`` attention
+        mask before it is ever read. (MoE caveat: co-admitted rows share
+        expert capacity in the batched prefill — as with bucket padding,
+        serve MoE with a no-drop capacity factor for bit-parity.)
+        """
+        k = len(reqs)
+        s_true = np.asarray([p.size for _, p, _, _ in reqs], np.int32)
+        need = int(s_true.max()) - 1
+        bucket = self.bucket_for(need) if need > 0 else 0
+        padded = None
+        if bucket:
+            buf = np.zeros((k, bucket), np.int32)
+            for j, (_, p, _, _) in enumerate(reqs):
+                buf[j, : p.size - 1] = p[:-1]
+            padded = jnp.asarray(buf)
+        # prefill + correction fused into ONE program: each row's true
+        # last prompt token decodes at its true per-row position,
+        # overwriting the first pad's KV and yielding the first new token
+        # from the right logits row. A sampled request samples it with
+        # key (base, s_true) — exactly the key a solo Server.generate
+        # folds for its first new token.
+        keys = [None if sp is None else np.asarray(
+            sampling.request_key(sp.seed)) for _, _, _, sp in reqs]
+        sampled = any(sp is not None for _, _, _, sp in reqs)
+        zero = np.zeros((2,), np.uint32)
+        state = sampling.merge_rows(
+            [(zero if key is None else key, sp)
+             for key, (_, _, _, sp) in zip(keys, reqs)]) if sampled else None
+        admit = self._compiled(
+            ("prefill", k, bucket, self._plan_key,
+             "sampled" if sampled else "greedy"),
+            lambda: self._admit_fn(with_prefill=bool(bucket)),
         )
-        nxt, cache1 = decode(
-            self.params, jnp.asarray([[prompt[-1]]], jnp.int32), cache1,
-            jnp.int32(s_true - 1), None,
+        toks = np.asarray([[p[-1]] for _, p, _, _ in reqs], np.int32)
+        nxt, self._toks, self.cache = admit(
+            self.params, padded, self.cache, self._toks, jnp.asarray(toks),
+            jnp.asarray(s_true - 1), jnp.asarray(slot_idxs, jnp.int32),
+            state,
         )
-        first = int(np.asarray(nxt)[0, 0])
-        insert = self._compiled(("insert",), self._insert_fn)
-        self.cache = insert(self.cache, cache1, jnp.int32(slot_idx))
-        slot = self.slots[slot_idx]
-        slot.rid = rid
-        slot.pos = s_true
-        slot.remaining = max_new - 1
-        slot.last_token = first
-        slot.tokens = [first]
-        slot.prompt = prompt
-        self.stats["admitted"] += 1
-        if slot.remaining == 0:
-            self._retire(slot_idx)
+        for j, slot_idx in enumerate(slot_idxs):
+            rid, prompt, max_new, sample = reqs[j]
+            slot = self.slots[slot_idx]
+            slot.rid = rid
+            slot.pos = int(s_true[j])
+            slot.remaining = max_new - 1
+            slot.generated = 1
+            slot.chunks = [(nxt, j, 1)]
+            slot.prompt = prompt
+            slot.sample = sample
+            slot.key = keys[j]
+            self.stats["admitted"] += 1
+            if slot.remaining == 0:
+                self._retire(slot_idx)
 
     def _retire(self, slot_idx: int) -> None:
         slot = self.slots[slot_idx]
-        self.finished.append(FinishedRequest(
-            rid=slot.rid, prompt=slot.prompt,
-            tokens=np.asarray(slot.tokens, np.int32),
-            prompt_len=int(slot.prompt.size), generated=len(slot.tokens),
-        ))
+        self._done_raw.append((slot.rid, slot.prompt, slot.chunks,
+                               slot.generated))
         self.slots[slot_idx] = _Slot()
 
+    @staticmethod
+    def _chunks_to_np(chunks: list[tuple], fetched: dict) -> np.ndarray:
+        """Host tokens from (device_array, row, take) handles — the one
+        place the async pipeline blocks. ``fetched`` memoizes whole-
+        array transfers (many chunks share one segment buffer)."""
+        parts = []
+        for arr, row, take in chunks:
+            host = fetched.get(id(arr))
+            if host is None:
+                host = fetched[id(arr)] = np.asarray(arr)
+            parts.append(host[row, :take])
+        return np.concatenate(parts).astype(np.int32)
+
+    def slot_tokens(self, slot_idx: int) -> np.ndarray:
+        """Tokens generated so far by the request in ``slot_idx`` (syncs
+        that slot's chunks; used for mid-stream inspection/restart)."""
+        return self._chunks_to_np(self.slots[slot_idx].chunks, {})
+
+    def _materialize(self) -> list[FinishedRequest]:
+        """Convert retired-but-raw requests into FinishedRequests."""
+        if not self._done_raw:
+            return []
+        fetched: dict = {}
+        out = []
+        for rid, prompt, chunks, generated in self._done_raw:
+            tokens = self._chunks_to_np(chunks, fetched)
+            assert tokens.size == generated
+            out.append(FinishedRequest(
+                rid=rid, prompt=prompt, tokens=tokens,
+                prompt_len=int(prompt.size), generated=generated,
+            ))
+        self._done_raw.clear()
+        self.finished.extend(out)
+        return out
+
     def admit(self) -> int:
-        """Fill free slots from the pending queue; returns #admitted."""
-        n = 0
+        """Fill free slots from the pending queue (one batched admission
+        round); returns #admitted.
+
+        Admission hysteresis: with a backlog and other slots still
+        decoding, wait until ``admit_batch`` slots are free before
+        admitting — a batch-1 prefill GEMM is several times less
+        efficient than a batched one, and a short wait for a second free
+        slot costs less than it saves (knob: ``admit_batch=1`` restores
+        eager admission). The wait times out after ONE deferred
+        boundary: ``_segment_steps`` caps the next segment at
+        ``self.segment`` while a deferral is pending, and the boundary
+        after that admits whatever is free — a held-open slot never
+        idles longer than ``segment`` steps behind a long-running
+        neighbour.
+        """
+        free = [i for i, slot in enumerate(self.slots) if slot.free]
+        take = min(len(free), len(self.pending))
+        if take == 0:
+            self._deferred = False
+            return 0
+        threshold = min(self.admit_batch, len(self.pending))
+        if (take < threshold and len(free) < self.num_slots
+                and not self._deferred):
+            self._deferred = True
+            self.stats["admit_deferrals"] += 1
+            return 0
+        self._deferred = False
+        reqs = [self.pending.popleft() for _ in range(take)]
         with kops.execution_plan(self.plan):
-            for i, slot in enumerate(self.slots):
-                if not self.pending:
-                    break
-                if slot.free:
-                    rid, prompt, max_new = self.pending.popleft()
-                    self._admit_one(i, rid, prompt, max_new)
-                    n += 1
-        return n
+            self._admit_batch(free[:take], reqs)
+        return take
 
     # -- segment decode ----------------------------------------------------
     def _segment_fn(self, num_steps: int) -> Callable:
         """All slots advance ``num_steps`` tokens in one compiled program:
-        ``make_serve_step`` vmapped over the slot axis with per-slot
-        positions, scanned over steps with the cache in the (donated)
-        carry and the output buffer written via ``dynamic_update_slice``.
+        ONE batched ``make_serve_step`` over the whole slot cache,
+        scanned over steps with the cache in the (donated) carry and the
+        output buffer written via ``dynamic_update_slice``. ``pos`` is a
+        per-row ``(N,)`` vector (unaligned slots: the attention layer
+        scatters each row's KV write to its own position) or a scalar
+        (every slot at the same position: dense-slab KV writes, the same
+        program shape as ``serve.make_decode_scan``). Either way the
+        matmuls stay dense over slots — no per-slot vmap into batch-1
+        programs.
         """
         step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
-        axes = self.axes
         max_pos = self.max_len - 1
 
-        def one(params, tok, cache, pos):
-            # batch=1 view of one slot; finished slots idle at a clamped
-            # position (their writes land on a dead row, see step()).
-            return step(params, tok, cache, jnp.minimum(pos, max_pos), None)
-
-        def vstep(params, toks_x, cache_x, pos):
-            return jax.vmap(one, in_axes=(None, 0, axes, 0),
-                            out_axes=(0, axes))(params, toks_x, cache_x, pos)
-
-        def segment(params, toks, cache, pos):
-            # toks (N, 1), pos (N,); cache = the full slot cache. Leaves
-            # keep a singleton batch dim inside vmap so the model code
-            # sees ordinary (1, ...) batches.
-            cache_x = jax.tree.map(
-                lambda a, ax: jnp.expand_dims(a, ax + 1), cache, axes)
-            toks_x = toks[:, None, :]
+        def segment(params, toks, cache, pos, sample=None):
+            # toks (N, 1); pos (N,) or scalar; cache = the full slot
+            # cache. Finished/free slots idle at a clamped position:
+            # their writes land on a dead row and are overwritten
+            # wholesale at the next admission.
             buf = jnp.zeros((toks.shape[0], num_steps), jnp.int32)
 
             def body(carry, i):
-                toks_x, cache_x, buf = carry
-                nxt, cache_x = vstep(params, toks_x, cache_x, pos + i)
-                buf = jax.lax.dynamic_update_slice(buf, nxt[:, 0, :], (0, i))
-                return (nxt, cache_x, buf), None
+                tok, cache, buf = carry
+                p = jnp.minimum(pos + i, max_pos)
+                nxt, cache = step(params, tok, cache, p, None, sample)
+                buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+                return (nxt, cache, buf), None
 
-            (_, cache_x, buf), _ = jax.lax.scan(
-                body, (toks_x, cache_x, buf),
+            (last, cache, buf), _ = jax.lax.scan(
+                body, (toks, cache, buf),
                 jnp.arange(num_steps, dtype=jnp.int32),
             )
-            cache = jax.tree.map(
-                lambda a, ax: jnp.squeeze(a, ax + 1), cache_x, axes)
-            return buf, cache
+            # the final carry token feeds the next segment directly —
+            # the drain loop never syncs token values (async dispatch)
+            return buf, last, cache
 
         # params as an ARGUMENT (not a closure constant): the cached
         # executable never bakes weights into its jaxpr, and a params
         # swap on a live server takes effect on the next segment.
         return jax.jit(segment, donate_argnums=(2,))
 
-    def step(self) -> list[FinishedRequest]:
-        """Admit into free slots, then decode one segment on all active
-        slots; returns requests that finished this step."""
-        drained_before = len(self.finished)
+    def _segment_sample_state(self, active: list[int]) -> dict | None:
+        """Per-row traced sampling state for one segment, or ``None``
+        when every active slot decodes greedily (keeps the pure-greedy
+        segment program free of sampling math). Greedy slots inside a
+        mixed batch ride along as temperature-0 rows — exact argmax."""
+        if not any(self.slots[i].sample is not None for i in active):
+            return None
+        zero = np.zeros((2,), np.uint32)
+        rows = []
+        for slot in self.slots:
+            if slot.free or slot.sample is None:
+                rows.append((zero, None))
+            else:
+                rows.append((slot.key, slot.sample))
+        return sampling.merge_rows(rows)
+
+    def _segment_steps(self, active: list[int], *,
+                       draining: bool = False) -> int:
+        """How many tokens this segment decodes — shrink-to-fit.
+
+        The segment ends exactly when the earliest active slot finishes
+        (``min remaining``): running past it wastes slot-steps, and with
+        EVERY slot busy a boundary before it is pure dispatch overhead —
+        admission needs a free slot, and only a retirement frees one, so
+        nothing can enter earlier (holds for live submits too). Whenever
+        entry IS possible at the boundary — a free slot exists and a
+        live submit could arrive (``step()``-driven serving; inside a
+        blocking ``run()`` drain nothing can be submitted, so the cap
+        would be pure dispatch overhead on the tail) or an admission
+        deferral is armed (the hysteresis must time out) — the length is
+        capped at ``self.segment``, the admission-latency knob. Above
+        ``self.segment`` the length rounds down to a power of two, so
+        long stretches cost O(log) dispatches while the distinct
+        compiled segment variants stay bounded (``segment`` exact
+        lengths + log2(max_len) strides).
+        """
+        min_rem = min(self.slots[i].remaining for i in active)
+        entry_possible = self._deferred or (
+            not draining and any(s.free for s in self.slots))
+        if entry_possible:
+            return min(min_rem, self.segment)
+        if min_rem <= self.segment:
+            return min_rem
+        return 1 << (min_rem.bit_length() - 1)
+
+    def _advance(self, *, draining: bool = False) -> None:
+        """One scheduler iteration, fully async: admit into free slots,
+        then enqueue one segment over all active slots. All decisions
+        (segment length, alignment, retirement) derive from host-side
+        COUNTS; token values stay on device — the admission program
+        merges its correction tokens into the running token vector and
+        the segment program returns its final carry, so dispatches
+        pipeline without a single host round-trip. ``draining`` marks a
+        blocking ``run()`` loop, where no live submit can arrive."""
         self.admit()
         active = [i for i, s in enumerate(self.slots)
                   if not s.free and s.remaining > 0]
-        if active:
-            toks = np.zeros((self.num_slots, 1), np.int32)
-            pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
-            for i in active:
-                toks[i, 0] = self.slots[i].last_token
-                pos[i] = self.slots[i].pos
-            seg = self._compiled(
-                ("segment", self.num_slots, self.segment, self._plan_key),
-                lambda: self._segment_fn(self.segment),
-            )
-            with kops.execution_plan(self.plan):
-                buf, self.cache = seg(self.params, jnp.asarray(toks),
-                                      self.cache, jnp.asarray(pos))
-            buf = np.asarray(buf)
-            self.stats["segments"] += 1
-            self.stats["decode_steps"] += self.segment * len(active)
-            for i in active:
-                slot = self.slots[i]
-                take = min(self.segment, slot.remaining)
-                slot.tokens.extend(int(t) for t in buf[i, :take])
-                slot.remaining -= take
-                slot.pos += take
-                slot.last_token = int(buf[i, take - 1])
-                self.stats["wasted_steps"] += self.segment - take
-                if slot.remaining == 0:
-                    self._retire(i)
-        return self.finished[drained_before:]
+        if not active:
+            return
+        steps = self._segment_steps(active, draining=draining)
+        pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
+        for i in active:
+            pos[i] = self.slots[i].pos
+        # aligned fast path: every slot occupied at the same position
+        # -> scalar-pos program (dense dynamic_update_slice KV writes)
+        aligned = (len(active) == self.num_slots
+                   and len({self.slots[i].pos for i in active}) == 1)
+        state = self._segment_sample_state(active)
+        seg = self._compiled(
+            ("segment", self.num_slots, steps,
+             "aligned" if aligned else "ragged",
+             "sampled" if state is not None else "greedy",
+             self._plan_key),
+            lambda: self._segment_fn(steps),
+        )
+        pos_arg = (jnp.int32(self.slots[active[0]].pos) if aligned
+                   else jnp.asarray(pos))
+        with kops.execution_plan(self.plan):
+            buf, self._toks, self.cache = seg(
+                self.params, self._toks, self.cache, pos_arg, state)
+        self.stats["segments"] += 1
+        self.stats["decode_steps"] += steps * len(active)
+        # shrink-to-fit guarantees steps <= every active slot's remaining
+        # (no active slot overshoots); the waste that remains is the
+        # free/dead rows the batched program decodes alongside them
+        self.stats["wasted_steps"] += steps * (self.num_slots - len(active))
+        for i in active:
+            slot = self.slots[i]
+            take = min(steps, slot.remaining)
+            slot.chunks.append((buf, i, take))
+            slot.generated += take
+            slot.remaining -= take
+            slot.pos += take
+            if slot.remaining == 0:
+                self._retire(i)
+
+    def step(self) -> list[FinishedRequest]:
+        """Admit into free slots, then decode one segment on all active
+        slots; returns requests that finished this step (synced)."""
+        self._advance()
+        return self._materialize()
 
     def run(self) -> list[FinishedRequest]:
         """Drain every pending + active request; returns all finished
-        requests (ordered by rid)."""
+        requests (ordered by rid). The whole drain is enqueued without
+        host syncs; tokens are fetched once at the end."""
         while self.pending or any(not s.free for s in self.slots):
-            self.step()
+            self._advance(draining=True)
+        self._materialize()
         out, self.finished = self.finished, []
         return sorted(out, key=lambda r: r.rid)

@@ -6,8 +6,9 @@ compiles N of those steps into ONE program — a ``jax.lax.scan`` over
 steps whose carry holds the running token, the (donated) KV cache, and a
 preallocated output buffer written with ``dynamic_update_slice`` — so N
 generated tokens cost one dispatch instead of N Python-driven dispatches.
-``Server`` is a batched-request driver (prefill once, greedy decode) used
-by the serving example, the continuous-batching scheduler
+``Server`` is a batched-request driver (prefill once, then greedy or
+sampled decode — see ``launch.sampling`` for the position-keyed PRNG
+rule) used by the serving example, the continuous-batching scheduler
 (``launch.scheduler``), and integration tests.
 
 ``Server(plan=...)`` selects which sidebar kernel variant backs the
@@ -42,6 +43,8 @@ from repro.core.modes import (
     coerce_layer_plan,
 )
 from repro.kernels import ops as kops
+from repro.launch import sampling
+from repro.launch.sampling import SamplingParams
 from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
 
@@ -63,18 +66,26 @@ PER_LAYER_PLAN_FAMILIES = ("dense", "moe")
 
 
 def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
-    """decode one token: (params, tokens(B,1), cache, pos[, memory])."""
+    """decode one token: (params, tokens(B,1), cache, pos[, memory, sample]).
+
+    ``pos`` is scalar (whole batch at one length) or per-row ``(B,)``
+    (the scheduler's batched segment decode over unaligned slots).
+    ``sample`` is a traced per-row state from ``sampling.sample_state``
+    / ``sampling.merge_rows`` — ``None`` keeps exact greedy argmax; the
+    token written at sequence index ``pos + 1`` is keyed by that index
+    (see ``launch.sampling`` for the position-keyed PRNG rule).
+    """
 
     from repro.parallel.hints import sharding_hints
 
-    def serve_step(params, tokens, cache, pos, memory=None):
+    def serve_step(params, tokens, cache, pos, memory=None, sample=None):
         with sharding_hints(mesh, minfo):
             logits, cache = api.decode_step(
                 params, cfg, tokens, cache, pos, minfo=minfo, mesh=mesh,
                 memory=memory,
             )
         logits = L.mask_pad_logits(logits, cfg.vocab_size)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        next_tok = sampling.sample_tokens(logits[:, -1, :], sample, pos + 1)
         return next_tok[:, None], cache
 
     return serve_step
@@ -83,13 +94,15 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
 def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     from repro.parallel.hints import sharding_hints
 
-    def prefill_step(params, batch, cache):
+    def prefill_step(params, batch, cache, sample=None):
         with sharding_hints(mesh, minfo):
             logits, cache = api.prefill(
                 params, cfg, batch, cache, minfo=minfo, mesh=mesh
             )
         logits = L.mask_pad_logits(logits, cfg.vocab_size)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        # prefill of S tokens emits the token at sequence index S
+        next_tok = sampling.sample_tokens(
+            logits[:, -1, :], sample, batch["tokens"].shape[1])
         return next_tok[:, None], cache
 
     return prefill_step
@@ -97,24 +110,26 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
 
 def make_decode_scan(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
                      mesh, num_steps: int) -> Callable:
-    """``num_steps`` greedy decode steps as one compiled program.
+    """``num_steps`` decode steps as one compiled program.
 
-    Returns ``decode_scan(params, tok, cache, pos, memory=None) ->
-    (tokens (B, num_steps), cache)``. The scan carry is (running token,
-    cache, output buffer): the cache threads through the carry so jit
-    donation aliases it across all steps, and each step's token lands in
-    the preallocated buffer via ``dynamic_update_slice`` — no per-token
-    host round-trip, no restacked ys.
+    Returns ``decode_scan(params, tok, cache, pos, memory=None,
+    sample=None) -> (tokens (B, num_steps), cache)``. The scan carry is
+    (running token, cache, output buffer): the cache threads through the
+    carry so jit donation aliases it across all steps, and each step's
+    token lands in the preallocated buffer via ``dynamic_update_slice``
+    — no per-token host round-trip, no restacked ys. Sampling keys are
+    folded from (request key, token position) inside the step, so the
+    scan needs no PRNG carry and matches the loop decode bit-for-bit.
     """
     step = make_serve_step(cfg, api, minfo, mesh)
 
-    def decode_scan(params, tok, cache, pos, memory=None):
+    def decode_scan(params, tok, cache, pos, memory=None, sample=None):
         b = tok.shape[0]
         buf = jnp.zeros((b, num_steps), jnp.int32)
 
         def body(carry, i):
             tok, cache, buf = carry
-            nxt, cache = step(params, tok, cache, pos + i, memory)
+            nxt, cache = step(params, tok, cache, pos + i, memory, sample)
             buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
             return (nxt, cache, buf), None
 
@@ -134,7 +149,8 @@ class ServeResult:
 
 
 class Server:
-    """Minimal batched greedy-decoding server (scan-compiled decode)."""
+    """Minimal batched decoding server (scan-compiled; greedy by
+    default, sampled via ``generate(sample=SamplingParams(...))``)."""
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
                  max_len: int = 256,
@@ -227,12 +243,17 @@ class Server:
 
     def generate(self, prompts: Array, num_tokens: int,
                  extra: dict | None = None, *,
-                 decode: str = "scan") -> ServeResult:
-        """prompts: (B, S) int32 — one bucket; greedy decode num_tokens.
+                 decode: str = "scan",
+                 sample: SamplingParams | None = None) -> ServeResult:
+        """prompts: (B, S) int32 — one bucket; decode num_tokens.
 
         ``decode="scan"`` (default) runs all steps as one compiled
         program; ``decode="loop"`` keeps the PR-2 one-dispatch-per-token
         Python loop (benchmark baseline — token-for-token identical).
+        ``sample`` switches greedy argmax to temperature / top-k / top-p
+        sampling with a position-keyed PRNG stream per batch row: the
+        same seed reproduces the same tokens under scan and loop decode
+        alike, and temperature 0 is bit-identical to greedy.
         """
         if decode not in ("scan", "loop"):
             raise ValueError(f"decode must be 'scan' or 'loop', got {decode!r}")
@@ -242,6 +263,7 @@ class Server:
                 f"prompt {s} + generate {num_tokens} exceeds max_len "
                 f"{self.max_len}"
             )
+        state = sampling.sample_state(sample, b) if sample is not None else None
         cache = self._take_cache(b)
         batch = {"tokens": prompts, **(extra or {})}
         # ambient kernel-variant selection must wrap trace time (the first
@@ -254,19 +276,19 @@ class Server:
                 memory = W.encode(self.params, self.cfg, batch["frames"])
             if self.cfg.family == "vlm":
                 memory = batch.get("image_embeds")
-            nxt, cache = self._prefill(self.params, batch, cache)
+            nxt, cache = self._prefill(self.params, batch, cache, state)
             pieces = [prompts, nxt]
             steps = num_tokens - 1
             if steps > 0 and decode == "scan":
                 buf, cache = self._decode_scan(steps)(
-                    self.params, nxt, cache, jnp.int32(s), memory
+                    self.params, nxt, cache, jnp.int32(s), memory, state
                 )
                 pieces.append(buf)
             elif steps > 0:
                 pos = s
                 for _ in range(steps):
                     nxt, cache = self._decode(
-                        self.params, nxt, cache, jnp.int32(pos), memory
+                        self.params, nxt, cache, jnp.int32(pos), memory, state
                     )
                     pieces.append(nxt)
                     pos += 1

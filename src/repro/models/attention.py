@@ -124,6 +124,14 @@ def kv_cache_specs(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int,
     return specs
 
 
+def rowwise_pos(pos) -> bool:
+    """True when ``cache_pos`` is a per-row ``(B,)`` vector — batched
+    decode of slots sitting at unaligned positions (the continuous-
+    batching scheduler's segment decode). Scalar positions keep the
+    dense ``dynamic_update_slice`` fast path."""
+    return pos is not None and getattr(pos, "ndim", 0) == 1
+
+
 def _quantize_kv(x: Array) -> tuple[Array, Array]:
     """Per-(token, head) int8 quantization: x (B, Hkv, S, Dh)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,Hkv,S)
@@ -215,9 +223,16 @@ def _attend_direct_offset(q, k, v, group, scale, causal, offset):
     logits = jnp.einsum("bhgsd,bhtd->bhgst", qg, k,
                         preferred_element_type=jnp.float32) * scale
     if causal:
-        qpos = jnp.arange(s)[:, None] + offset
-        kpos = jnp.arange(t)[None, :]
-        logits = jnp.where(kpos <= qpos, logits, -1e30)
+        if rowwise_pos(offset):
+            # per-row query offsets (batched slots at unaligned
+            # positions): (B, s, t) mask broadcast over (kv-head, group)
+            qpos = jnp.arange(s)[None, :] + offset[:, None]           # (B, s)
+            mask = jnp.arange(t)[None, None, :] <= qpos[:, :, None]   # (B, s, t)
+            logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        else:
+            qpos = jnp.arange(s)[:, None] + offset
+            kpos = jnp.arange(t)[None, :]
+            logits = jnp.where(kpos <= qpos, logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgst,bhtd->bhgsd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -253,9 +268,12 @@ def gqa_attention(
 
     if memory is None:  # rope only for self-attention
         q = apply_rope(q, positions, cfg.rope_theta)
-        kpos = positions if cache is None else (
-            cache_pos + jnp.arange(kv_src.shape[1])[None, :]
-        )
+        if cache is None:
+            kpos = positions
+        elif rowwise_pos(cache_pos):
+            kpos = cache_pos[:, None] + jnp.arange(kv_src.shape[1])[None, :]
+        else:
+            kpos = cache_pos + jnp.arange(kv_src.shape[1])[None, :]
         k = apply_rope(k, kpos, cfg.rope_theta)
 
     q = constrain(q.transpose(0, 2, 1, 3), ("batch", "model", None, None))
@@ -270,15 +288,36 @@ def gqa_attention(
             vq, vs = _quantize_kv(v)
         else:
             kq, vq = k.astype(cfg.kv_cache_dtype), v.astype(cfg.kv_cache_dtype)
-        start = (0, 0, cache_pos, 0)
         new_cache = dict(cache)
-        new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, start)
-        new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, start)
+        if rowwise_pos(cache_pos):
+            # per-row scatter: slot row i writes its own position — ONE
+            # batched program over unaligned slots instead of num_slots
+            # vmapped batch-1 programs (the scheduler's segment decode).
+            if s != 1:
+                raise ValueError(
+                    f"per-row cache positions require single-token decode, "
+                    f"got a length-{s} write"
+                )
+            bidx = jnp.arange(b)
+            new_cache["k"] = cache["k"].at[bidx, :, cache_pos, :].set(kq[:, :, 0, :])
+            new_cache["v"] = cache["v"].at[bidx, :, cache_pos, :].set(vq[:, :, 0, :])
+            if int8:
+                new_cache["k_scale"] = (
+                    cache["k_scale"].at[bidx, :, cache_pos].set(ks[:, :, 0])
+                )
+                new_cache["v_scale"] = (
+                    cache["v_scale"].at[bidx, :, cache_pos].set(vs[:, :, 0])
+                )
+        else:
+            start = (0, 0, cache_pos, 0)
+            new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, start)
+            new_cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, start)
+            if int8:
+                new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, 0, cache_pos))
+                new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, 0, cache_pos))
         if int8:
-            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
-                cache["k_scale"], ks, (0, 0, cache_pos))
-            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
-                cache["v_scale"], vs, (0, 0, cache_pos))
             k = _dequantize_kv(new_cache["k"], new_cache["k_scale"], cfg.dtype)
             v = _dequantize_kv(new_cache["v"], new_cache["v_scale"], cfg.dtype)
         else:
@@ -320,18 +359,35 @@ def mla_attention(
     c_kv = linear(x, params["w_dkv"])                     # (B,S,kvr)
     c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
     k_rope = linear(x, params["w_kr"])                    # (B,S,rope)
-    kpos = positions if cache is None else (
-        cache_pos + jnp.arange(s)[None, :]
-    )
+    if cache is None:
+        kpos = positions
+    elif rowwise_pos(cache_pos):
+        kpos = cache_pos[:, None] + jnp.arange(s)[None, :]
+    else:
+        kpos = cache_pos + jnp.arange(s)[None, :]
     k_rope = apply_rope(k_rope, kpos, cfg.rope_theta)
 
     new_cache = None
     if cache is not None:
         new_cache = dict(cache)
-        new_cache["c_kv"] = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
-        new_cache["k_rope"] = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
+        if rowwise_pos(cache_pos):
+            # per-row scatter (see gqa_attention): batched decode of
+            # slots at unaligned positions, single-token writes only.
+            if s != 1:
+                raise ValueError(
+                    f"per-row cache positions require single-token decode, "
+                    f"got a length-{s} write"
+                )
+            bidx = jnp.arange(b)
+            new_cache["c_kv"] = cache["c_kv"].at[bidx, cache_pos, :].set(
+                c_kv[:, 0, :].astype(cache["c_kv"].dtype))
+            new_cache["k_rope"] = cache["k_rope"].at[bidx, cache_pos, :].set(
+                k_rope[:, 0, :].astype(cache["k_rope"].dtype))
+        else:
+            new_cache["c_kv"] = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+            new_cache["k_rope"] = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
         c_kv_full = new_cache["c_kv"].astype(cfg.dtype)
         k_rope_full = new_cache["k_rope"].astype(cfg.dtype)
     else:
@@ -350,7 +406,10 @@ def mla_attention(
             + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
                          k_rope_full.astype(jnp.float32))
         ) * scale
-        mask = jnp.arange(t)[None, None, None, :] <= (cache_pos + s - 1)
+        end = cache_pos + s - 1                # scalar, or (B,) per-row
+        if rowwise_pos(cache_pos):
+            end = end[:, None, None, None]
+        mask = jnp.arange(t)[None, None, None, :] <= end
         logits = jnp.where(mask, logits, -1e30)
         p = jax.nn.softmax(logits, axis=-1)                  # flexible op
         ctx_lat = jnp.einsum("bhst,btr->bshr", p, c_kv_full.astype(jnp.float32))

@@ -19,9 +19,15 @@ class ModelApi:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # decode_step accepts a per-row (B,) position vector (RoPE, causal
+    # masks, and KV-cache writes key off each row's own position). The
+    # continuous-batching scheduler requires this to run ONE batched
+    # segment program over slots at unaligned positions; recurrent-state
+    # stacks (ssm/hybrid) and the audio decoder only take scalar pos.
+    rowwise_decode_pos: bool = False
 
 
-def _api(mod) -> ModelApi:
+def _api(mod, *, rowwise_decode_pos: bool = False) -> ModelApi:
     return ModelApi(
         param_specs=mod.param_specs,
         init=mod.init,
@@ -31,6 +37,7 @@ def _api(mod) -> ModelApi:
         init_cache=mod.init_cache,
         prefill=mod.prefill,
         decode_step=mod.decode_step,
+        rowwise_decode_pos=rowwise_decode_pos,
     )
 
 
@@ -42,4 +49,4 @@ def get_model(cfg: ModelConfig) -> ModelApi:
     if cfg.family == "audio":
         return _api(whisper)
     # dense / moe / vlm all route through the generic transformer
-    return _api(transformer)
+    return _api(transformer, rowwise_decode_pos=True)

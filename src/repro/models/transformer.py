@@ -402,11 +402,17 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
 def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
                 pos: Array, *, table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST,
                 mesh=None, memory: Array | None = None):
-    """One token: tokens (B, 1), pos scalar int32 (current length)."""
+    """One token: tokens (B, 1), pos int32 — scalar (whole batch at one
+    length) or per-row ``(B,)`` (batched slots at unaligned positions:
+    RoPE, causal masks, and KV writes all key off each row's own
+    position — see ``attention.rowwise_pos``)."""
     b = tokens.shape[0]
     x = L.embed_lookup(params["embed"], tokens,
                        sharded="model" in minfo.axis_names)
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    if attn_lib.rowwise_pos(pos):
+        positions = pos[:, None]
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
     x, new_cache = _run_stack(
         params, cfg, x, positions, table=table, minfo=minfo, mesh=mesh,
         caches=cache, cache_pos=pos, memory=memory,

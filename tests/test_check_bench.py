@@ -1,0 +1,92 @@
+"""The bench schema gate (benchmarks/check_bench.py) and the committed
+trajectory artifact it gates: the committed BENCH_serving.json must
+itself satisfy the schema CI enforces on freshly generated benches."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.check_bench import check  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BENCH = REPO / "BENCH_serving.json"
+
+
+def _rows():
+    return json.loads(BENCH.read_text())
+
+
+def test_committed_bench_passes_schema():
+    assert check(_rows()) == []
+
+
+def test_committed_bench_records_the_pr4_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    speedup = next(v for n, v in by_name.items()
+                   if n.endswith("scan_over_loop_speedup"))
+    assert speedup > 1.0
+    # the vmap-tax acceptance: continuous >= static at smoke scale, and
+    # the measured crossover mix is recorded (> 0 = some mix wins)
+    ratio = next(v for n, v in by_name.items()
+                 if n.endswith("continuous_over_static"))
+    assert ratio >= 1.0
+    crossover = next(v for n, v in by_name.items()
+                     if n.endswith("continuous_crossover_mix"))
+    assert crossover > 0
+
+
+def test_missing_required_row_is_flagged():
+    rows = [r for r in _rows()
+            if not r["name"].endswith("scan_over_loop_speedup")]
+    errors = check(rows)
+    assert any("scan_over_loop_speedup is absent" in e for e in errors)
+
+
+def test_regressed_speedup_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("scan_over_loop_speedup"):
+            r["derived"] = 0.9
+    assert any("per-token host round-trip" in e for e in check(rows))
+
+
+@pytest.mark.parametrize("bad", [None, float("nan"), -5.0, 0])
+def test_non_positive_tok_s_is_flagged(bad):
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("continuous/tok_s"):
+            r["derived"] = bad
+    errors = check(rows)
+    assert any("finite positive" in e for e in errors)
+
+
+def test_empty_or_malformed_inputs():
+    assert check([]) != []
+    assert check([{"name": "x"}]) != []
+
+
+def test_cli_exit_codes(tmp_path):
+    ok = subprocess.run(
+        [sys.executable, "benchmarks/check_bench.py", str(BENCH)],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert ok.returncode == 0, ok.stderr
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{"section": "serving", "name": "x",
+                                "us_per_call": 0, "derived": 0}]))
+    fail = subprocess.run(
+        [sys.executable, "benchmarks/check_bench.py", str(bad)],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert fail.returncode == 1
+    assert "absent" in fail.stderr
+    missing = subprocess.run(
+        [sys.executable, "benchmarks/check_bench.py",
+         str(tmp_path / "nope.json")],
+        cwd=REPO, capture_output=True, text=True,
+    )
+    assert missing.returncode == 1

@@ -1,0 +1,190 @@
+"""Sampled decoding determinism (PR 4).
+
+The position-keyed PRNG rule (``launch.sampling``): the token at
+sequence index p is keyed by (request base key, p) — never by batch
+composition, slot index, segment length, or decode style. Invariants:
+
+  * temperature 0 is BIT-identical to greedy (scan and loop), on the
+    dense/GQA, int8-KV, and MLA+MoE cache families;
+  * scan and loop decode produce identical sampled streams;
+  * same seed => same tokens; different seed => different tokens;
+  * a scheduler request matches solo ``Server.generate`` row 0, even
+    sharing a segment batch with greedy neighbours;
+  * a scheduler restarted mid-stream (resubmit prompt + tokens-so-far,
+    same seed) continues the exact stream;
+  * top-k=1 collapses to greedy at any temperature (support masking).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch.sampling import SamplingParams
+from repro.launch.scheduler import ContinuousBatchingServer
+from repro.launch.serve import Server
+from repro.models.registry import get_model
+
+
+def _cfg(arch: str):
+    if arch == "nemotron-int8":
+        cfg = dataclasses.replace(
+            cfglib.get_smoke_config("nemotron-4-15b"),
+            kv_cache_dtype=jnp.int8,
+        )
+    else:
+        cfg = cfglib.get_smoke_config(arch)
+    if cfg.num_experts:
+        # no-drop capacity: co-batched rows share expert capacity in the
+        # batched segment/prefill (see scheduler docstring); the tests
+        # here are about sampling, not capacity-drop semantics
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    return cfg
+
+
+# dense/GQA, quantized-KV, and MLA+MoE cache families
+ARCHS = ["nemotron-4-15b", "nemotron-int8", "deepseek-v3-671b"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    out = {}
+    for arch in ARCHS:
+        cfg = _cfg(arch)
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        out[arch] = (cfg, params, Server(cfg, params, max_len=48))
+    return out
+
+
+def _prompts(cfg, b=2, s=6):
+    return jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+
+
+SP = SamplingParams(temperature=0.9, top_k=50, top_p=0.95, seed=11)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_temperature_zero_is_greedy(served, arch):
+    cfg, _, server = served[arch]
+    prompts = _prompts(cfg)
+    t0 = SamplingParams(temperature=0.0, seed=3)
+    greedy = np.asarray(server.generate(prompts, 8).tokens)
+    for decode in ("scan", "loop"):
+        got = np.asarray(
+            server.generate(prompts, 8, decode=decode, sample=t0).tokens)
+        np.testing.assert_array_equal(
+            greedy, got, err_msg=f"{arch}/{decode}: temp=0 != greedy")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scan_matches_loop_sampled(served, arch):
+    cfg, _, server = served[arch]
+    prompts = _prompts(cfg)
+    scan = np.asarray(
+        server.generate(prompts, 10, decode="scan", sample=SP).tokens)
+    loop = np.asarray(
+        server.generate(prompts, 10, decode="loop", sample=SP).tokens)
+    np.testing.assert_array_equal(
+        scan, loop, err_msg=f"{arch}: sampled scan != loop")
+
+
+def test_seed_determinism(served):
+    cfg, _, server = served["nemotron-4-15b"]
+    prompts = _prompts(cfg)
+    a = np.asarray(server.generate(prompts, 10, sample=SP).tokens)
+    b = np.asarray(server.generate(prompts, 10, sample=SP).tokens)
+    np.testing.assert_array_equal(a, b, err_msg="same seed diverged")
+    other = dataclasses.replace(SP, seed=SP.seed + 1)
+    c = np.asarray(server.generate(prompts, 10, sample=other).tokens)
+    assert not (a == c).all(), "different seeds produced identical streams"
+    # sampling actually samples: the stream differs from greedy
+    g = np.asarray(server.generate(prompts, 10).tokens)
+    assert not (a == g).all(), "sampled stream == greedy (suspicious)"
+
+
+def test_batch_rows_get_independent_streams(served):
+    """Two identical prompts in one batch must not sample identical
+    continuations (per-row base key = fold(seed, row))."""
+    cfg, _, server = served["nemotron-4-15b"]
+    row = _prompts(cfg, b=1)
+    prompts = jnp.concatenate([row, row], axis=0)
+    hot = SamplingParams(temperature=1.5, seed=0)
+    toks = np.asarray(server.generate(prompts, 12, sample=hot).tokens)
+    assert not (toks[0] == toks[1]).all(), "rows shared a PRNG stream"
+
+
+def test_top_k_one_is_greedy_at_any_temperature(served):
+    cfg, _, server = served["nemotron-4-15b"]
+    prompts = _prompts(cfg)
+    greedy = np.asarray(server.generate(prompts, 8).tokens)
+    k1 = SamplingParams(temperature=5.0, top_k=1, seed=9)
+    got = np.asarray(server.generate(prompts, 8, sample=k1).tokens)
+    np.testing.assert_array_equal(greedy, got)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scheduler_sampled_matches_solo(served, arch):
+    """A sampled scheduler request == solo generate row 0 with the same
+    seed — through bucketed batched admission, mixed greedy/sampled
+    segment batches, and slot churn."""
+    cfg, params, server = served[arch]
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 9, 3)]
+    sched = ContinuousBatchingServer(cfg, params, num_slots=2, max_len=48,
+                                     buckets=(8,), segment=4)
+    for i, p in enumerate(prompts):
+        sched.submit(p, 8, sample=SP if i % 2 == 0 else None)
+    done = sched.run()
+    for i, (r, p) in enumerate(zip(done, prompts)):
+        sample = SP if i % 2 == 0 else None
+        ref = np.asarray(server.generate(
+            jnp.asarray(p)[None, :], 8, decode="loop", sample=sample,
+        ).tokens)[0, p.size:]
+        np.testing.assert_array_equal(
+            r.tokens, ref,
+            err_msg=f"{arch} rid {r.rid}: scheduler != solo "
+                    f"({'sampled' if sample else 'greedy'})")
+
+
+def test_scheduler_restart_mid_stream_preserves_stream(served):
+    """Kill the scheduler mid-request, resubmit prompt + tokens-so-far
+    with the same seed: the continuation is the exact stream an
+    uninterrupted run produces (keys depend only on (seed, position))."""
+    cfg, params, server = served["nemotron-4-15b"]
+    prompt = np.asarray(_prompts(cfg, b=1))[0]
+    full = np.asarray(server.generate(
+        jnp.asarray(prompt)[None, :], 10, sample=SP).tokens)[0, prompt.size:]
+
+    s1 = ContinuousBatchingServer(cfg, params, num_slots=1, max_len=48,
+                                  buckets=(8,), segment=3)
+    s1.submit(prompt, 10, sample=SP)
+    s1.step()
+    part = s1.slot_tokens(0)
+    assert 0 < part.size < 10
+    np.testing.assert_array_equal(part, full[:part.size])
+
+    s2 = ContinuousBatchingServer(cfg, params, num_slots=1, max_len=48,
+                                  buckets=(8,), segment=3)
+    s2.submit(np.concatenate([prompt, part]), 10 - part.size, sample=SP)
+    (rest,) = s2.run()
+    np.testing.assert_array_equal(
+        np.concatenate([part, rest.tokens]), full,
+        err_msg="restart mid-stream changed the sampled stream")
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    SamplingParams(temperature=0.0, top_k=1, top_p=1.0)  # boundary values ok
