@@ -31,6 +31,10 @@ REQUIRED_ROWS = (
     "continuous_over_static",
     "continuous_crossover_mix",
     "continuous/wasted_step_frac",
+    "paged/tok_s",
+    "sync_admission/tok_s",
+    "paged_over_sync_admission",
+    "paged/prefix_hit_rate",
 )
 # rows whose derived value is a throughput and must be a positive number
 TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
@@ -77,6 +81,26 @@ def check(records: list) -> list[str]:
                 f"{speedup['name']}: scan-compiled decode must beat the "
                 f"per-token loop (> 1.0x), got {v!r} — a regression here "
                 "means a per-token host round-trip came back"
+            )
+    hit = by_suffix.get("paged/prefix_hit_rate")
+    if hit is not None:
+        v = hit["derived"]
+        if not isinstance(v, (int, float)) or not 0 < v <= 1:
+            errors.append(
+                f"{hit['name']}: the shared-prefix mix must hit the "
+                f"prefix cache (0 < rate <= 1), got {v!r} — zero means "
+                "hash-consed blocks stopped being spliced"
+            )
+    paged = by_suffix.get("paged_over_sync_admission")
+    if paged is not None:
+        v = paged["derived"]
+        if not isinstance(v, (int, float)) or not v >= 1.0:
+            errors.append(
+                f"{paged['name']}: prefill-ahead through the paged pool "
+                f"must at least match synchronous admission (>= 1.0x) on "
+                f"the shared-prefix heavy-tail mix, got {v!r} — the "
+                "prefix splice + staged admission stopped paying for the "
+                "block bookkeeping"
             )
     return errors
 

@@ -45,7 +45,10 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.core.modes import ExecutionMode, ExecutionPlan, LayerPlan
-from repro.launch.scheduler import ContinuousBatchingServer
+from repro.launch.scheduler import (
+    ContinuousBatchingServer,
+    PagedContinuousBatchingServer,
+)
 from repro.launch.serve import Server
 from repro.models.registry import get_model
 
@@ -286,5 +289,82 @@ def continuous_rows():
     return out
 
 
+# paged-vs-synchronous-admission runs the heavy-tail mix with a shared
+# system prefix (the realistic chat shape: every request front-loads the
+# same instructions). The slab scheduler prefills every prompt at its
+# admission boundary (synchronous admission, PR-4); the paged scheduler
+# splices the shared prefix out of the block index and stages the rest
+# chunk-by-chunk between segments (prefill-ahead), so the prefill compute
+# the slab path repeats per request mostly disappears. Interleaved paired
+# trials as in _measure_mix.
+PAGED_BLOCK, PAGED_PREFIX, PAGED_TRIALS = 8, 24, 5
+
+
+def _prefix_traffic(cfg):
+    rng = np.random.RandomState(7)
+    system = rng.randint(0, cfg.vocab_size, size=PAGED_PREFIX).astype(
+        np.int32)
+    n_long = CONT_REQS // 4
+    gens = [int(rng.randint(2, 7)) for _ in range(CONT_REQS - n_long)]
+    gens += [int(rng.randint(28, GEN)) for _ in range(n_long)]
+    rng.shuffle(gens)
+    return [
+        (np.concatenate([system, rng.randint(
+            0, cfg.vocab_size, size=rng.randint(2, 7)).astype(np.int32)]),
+         g)
+        for g in gens
+    ]
+
+
+def paged_rows():
+    cfg = _continuous_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    reqs = _prefix_traffic(cfg)
+    useful = sum(g for _, g in reqs)
+    max_len = PAGED_PREFIX + 8 + GEN  # prompt <= prefix+7, gen <= GEN
+    paged = PagedContinuousBatchingServer(
+        cfg, params, num_slots=CONT_SLOTS, max_len=max_len,
+        block_size=PAGED_BLOCK, prefill_chunk=PAGED_BLOCK, segment=8,
+    )
+    slab = ContinuousBatchingServer(
+        cfg, params, num_slots=CONT_SLOTS, max_len=max_len,
+        buckets=(16, 32), segment=8,
+    )
+
+    def run(server):
+        for p, g in reqs:
+            server.submit(p, g)
+        t0 = time.perf_counter()
+        server.run()
+        return time.perf_counter() - t0
+
+    for _ in range(2):     # warmup: compile + populate the prefix index
+        run(paged), run(slab)
+    hits0 = paged.stats.prefix_block_hits        # measured trials only
+    lookups0 = paged.stats.prefix_block_lookups
+    ratios, pg, sy = [], [], []
+    for _ in range(PAGED_TRIALS):
+        pw = run(paged)
+        sw = run(slab)
+        ratios.append(sw / pw)
+        pg.append(useful / pw)
+        sy.append(useful / sw)
+    mid = int(np.argsort(ratios)[len(ratios) // 2])
+    hit_rate = (paged.stats.prefix_block_hits - hits0) / max(
+        paged.stats.prefix_block_lookups - lookups0, 1)
+    return [
+        (f"serving/{ARCH}/paged/tok_s", 1e6 / pg[mid], pg[mid]),
+        (f"serving/{ARCH}/sync_admission/tok_s", 1e6 / sy[mid], sy[mid]),
+        (f"serving/{ARCH}/paged_over_sync_admission", 0.0, ratios[mid]),
+        (f"serving/{ARCH}/paged/prefix_hit_rate", 0.0, hit_rate),
+        (f"serving/{ARCH}/paged/pool_occupancy_peak", 0.0,
+         paged.stats.pool_in_use_peak / max(paged.stats.pool_blocks, 1)),
+        (f"serving/{ARCH}/paged/stage_chunks", 0.0,
+         float(paged.stats.stage_chunks)),
+    ]
+
+
 def rows():
-    return loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
+    return (loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
+            + paged_rows())

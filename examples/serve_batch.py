@@ -28,7 +28,10 @@ import numpy as np
 from repro import configs as cfglib
 from repro.core.modes import ExecutionMode, ExecutionPlan, LayerPlan
 from repro.launch.sampling import SamplingParams
-from repro.launch.scheduler import ContinuousBatchingServer
+from repro.launch.scheduler import (
+    ContinuousBatchingServer,
+    PagedContinuousBatchingServer,
+)
 from repro.launch.serve import Server
 from repro.models.registry import get_model
 
@@ -94,39 +97,71 @@ def run_static(args, cfg, api, params, plan):
 
 def run_continuous(args, cfg, api, params, plan):
     sample = build_sampling(args)
-    print(f"arch={cfg.arch_id} continuous: requests={args.requests}, "
-          f"slots={args.slots}, segment={args.segment}, plan={plan}, "
-          f"sample={sample}")
-    sched = ContinuousBatchingServer(
-        cfg, params, num_slots=args.slots,
-        max_len=args.prompt_len + args.gen,
-        buckets=(args.prompt_len // 2, args.prompt_len),
-        segment=args.segment, plan=plan,
-    )
+    max_len = args.prompt_len + args.gen
+    if args.paged:
+        # block_size must divide max_len; snap to the nearest divisor
+        bs = args.block_size
+        while max_len % bs:
+            bs -= 1
+        sched = PagedContinuousBatchingServer(
+            cfg, params, num_slots=args.slots, max_len=max_len,
+            block_size=bs, prefill_chunk=args.prefill_chunk,
+            segment=args.segment, plan=plan,
+        )
+        kind = f"paged (block_size={bs})"
+    else:
+        sched = ContinuousBatchingServer(
+            cfg, params, num_slots=args.slots, max_len=max_len,
+            buckets=(args.prompt_len // 2, args.prompt_len),
+            segment=args.segment, plan=plan,
+        )
+        kind = "slab"
+    print(f"arch={cfg.arch_id} continuous [{kind}]: "
+          f"requests={args.requests}, slots={args.slots}, "
+          f"segment={args.segment}, plan={plan}, sample={sample}")
     rng = np.random.RandomState(0)
+    # paged traffic carries a shared prefix (the chat system-prompt
+    # shape) so the smoke exercises prefix-cache splicing; slab traffic
+    # keeps the full [2, prompt_len) length spread so BOTH admission
+    # buckets stay covered
+    prefix = rng.randint(0, cfg.vocab_size, size=args.prompt_len // 2)
     useful = 0
     for i in range(args.requests):
-        plen = int(rng.randint(2, args.prompt_len))
         gen = int(rng.randint(1, args.gen))
         useful += gen
+        if args.paged:
+            tail = int(rng.randint(2, max(3, args.prompt_len // 2)))
+            prompt = np.concatenate(
+                [prefix, rng.randint(0, cfg.vocab_size, size=tail)])
+        else:
+            plen = int(rng.randint(2, args.prompt_len))
+            prompt = rng.randint(0, cfg.vocab_size, size=plen)
         # alternate sampled/greedy rows so the smoke covers the mixed
         # segment program when sampling flags are given
-        sched.submit(rng.randint(0, cfg.vocab_size, size=plen), gen,
-                     sample=sample if i % 2 == 0 else None)
+        sched.submit(prompt, gen, sample=sample if i % 2 == 0 else None)
     t0 = time.perf_counter()
     done = sched.run()
     dt = time.perf_counter() - t0
     print(f"drained {len(done)} requests / {useful} tokens in {dt:.2f}s "
-          f"({useful/dt:.1f} tok/s on CPU, cold) — stats {sched.stats}")
+          f"({useful/dt:.1f} tok/s on CPU, cold)")
     # the executable-cache counters are THE re-trace regression signal:
     # repeat traffic of a shape/plan already served must be all hits, so
     # a compile count that grows run-over-run in the CI smoke log means
-    # something started re-tracing
-    c, h = sched.stats["compiles"], sched.stats["hits"]
-    keys = sched.executable_cache_keys()
-    print(f"executable cache: {c} compiles, {h} hits "
-          f"({h / max(c + h, 1):.0%} hit rate) across {len(keys)} programs")
-    print("executables:", [k[:3] for k in keys])
+    # something started re-tracing; the paged lines add pool occupancy
+    # and the prefix hit rate (> 0 expected on this shared-prefix mix)
+    print(sched.stats.summary())
+    print("executables:", [k[:3] for k in sched.executable_cache_keys()])
+    if args.paged:
+        # the shared prefix spans >= one full block, so the index MUST
+        # be consulted and MUST hit — a vacuously-passing guard here
+        # would let a dead prefix cache through the CI smoke
+        assert sched.stats.prefix_block_lookups > 0, (
+            "paged smoke never consulted the prefix index"
+        )
+        if args.requests >= 3:  # enough traffic behind the first admits
+            assert sched.stats.prefix_block_hits > 0, (
+                "shared-prefix smoke produced zero prefix-cache hits"
+            )
 
 
 def main():
@@ -158,6 +193,14 @@ def main():
     )
     ap.add_argument("--continuous", action="store_true",
                     help="mixed-length traffic through the slot scheduler")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --continuous: serve through the paged KV "
+                         "pool (block tables, prefix caching, chunked "
+                         "prefill-ahead)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="KV pool block size in token positions")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill-ahead chunk length (default block size)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--segment", type=int, default=8)

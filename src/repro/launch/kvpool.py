@@ -1,0 +1,519 @@
+"""Paged Sidebar KV pool: block-granular cache manager with prefix caching.
+
+``core/sidebar.py`` realizes the paper's scratchpad discipline — explicit
+per-location ownership, a recycling free list, protocol errors on
+reuse-before-release — for *intra-layer intermediates*. This module lifts
+the same discipline up to the serving layer's KV memory: instead of one
+max-length cache row per request (slot-granular, PR-3/4), the KV cache is
+ONE physical pool of fixed-size **blocks** (``block_size`` token
+positions each) and every request owns a *logical block table* mapping
+its positions onto pooled blocks.
+
+The allocator mirrors the sidebar protocol deliberately:
+
+  * fixed-size placements recycled through a free list (``SidebarBuffer``
+    regions ~ pool blocks);
+  * an explicit lifecycle — ``free -> staged -> active`` (+ ``cached``,
+    the refcount-0-but-indexed refinement of free) — with
+    ``KVPoolError`` raised on any out-of-order transition, the exact
+    analogue of ``SidebarProtocolError``'s reuse-before-release;
+  * ownership is *refcounted* rather than binary: a block whose content
+    is a pure function of a prompt prefix may be owned by several
+    requests at once (prefix caching), and a write into shared state
+    must copy first (copy-on-write) — the multi-reader generalization
+    of the sidebar's single-owner mutex.
+
+Prefix caching is **hash-consed**: a full block whose tokens are
+``prompt[: (j+1) * block_size]`` is registered under the byte content of
+that whole prefix (a radix-tree path collapsed into its content key —
+exact, collision-free, and cheap at serving scale). A later request
+whose prompt starts with the same tokens splices the physical block into
+its table with a refcount bump instead of recomputing its KV. When the
+last owner releases a registered block it becomes ``cached``: still
+indexed, evicted LRU only when the free list runs dry.
+
+Device side, the pool is family-agnostic: ``KVPool`` materializes the
+model's own ``cache_specs`` with ``batch=num_blocks`` and
+``max_len=block_size``, and probes each leaf's batch and length axes
+from spec diffs — so GQA 5-D KV, int8 scales, and the MLA latent all
+page identically. Attention gathers/scatters through the block table
+(``models.attention``); the generic ``gather``/``copy_blocks`` here
+serve copy-on-write and test-time reconstruction.
+
+``launch.scheduler.PagedContinuousBatchingServer`` drives this: chunked
+prefill-ahead stages pending requests' KV block-by-block between decode
+segments, so admission is a block-table splice plus a first decode step
+that the following segment program already performs — no synchronous
+full-prompt prefill on the admission critical path.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+Array = jax.Array
+
+# Block 0 is the reserved scratch block: free slots' block tables and the
+# padded tail of every table point at it, so clamped/dead writes land in
+# junk that no unmasked read ever sees (the same stale-KV-behind-the-
+# causal-mask argument the slot scheduler already relies on).
+SCRATCH_BLOCK = 0
+
+
+class KVPoolError(RuntimeError):
+    """Violation of the block lifecycle / refcount protocol (the serving-
+    layer analogue of ``core.sidebar.SidebarProtocolError``)."""
+
+
+class BlockState(enum.Enum):
+    FREE = "free"        # on the free list, content meaningless
+    STAGED = "staged"    # allocated; prefill-ahead is writing its KV
+    ACTIVE = "active"    # owned (refcount >= 1) by live request(s)
+    CACHED = "cached"    # refcount 0 but prefix-indexed; LRU-evictable
+
+
+def prefix_key(tokens: np.ndarray, end: int) -> bytes:
+    """Content key of the prefix ``tokens[:end]`` — the hash-consing key
+    a full block is registered under. Byte-exact (no collision risk); a
+    radix-tree path collapsed into its content."""
+    return np.ascontiguousarray(tokens[:end], dtype=np.int32).tobytes()
+
+
+@dataclasses.dataclass
+class PoolCounters:
+    """Allocator-level counters surfaced into ``SchedulerStats``."""
+
+    allocs: int = 0
+    evictions: int = 0
+    cow_copies: int = 0
+    prefix_block_lookups: int = 0
+    prefix_block_hits: int = 0
+    in_use_peak: int = 0
+
+
+class BlockAllocator:
+    """Host-side block lifecycle: free list, refcounts, prefix index.
+
+    Pure bookkeeping — no device arrays. ``num_blocks`` includes the
+    reserved scratch block 0, which is never allocated.
+    """
+
+    def __init__(self, num_blocks: int) -> None:
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (one is the scratch)")
+        self.num_blocks = int(num_blocks)
+        self._state = [BlockState.FREE] * num_blocks
+        self._ref = [0] * num_blocks
+        self._state[SCRATCH_BLOCK] = BlockState.ACTIVE  # never handed out
+        self._ref[SCRATCH_BLOCK] = 1
+        self._free: collections.deque[int] = collections.deque(
+            range(1, num_blocks))
+        # LRU of cached (refcount-0 but indexed) blocks: bid -> key
+        self._evictable: "collections.OrderedDict[int, bytes]" = (
+            collections.OrderedDict())
+        self._index: dict[bytes, int] = {}
+        self._key_of: dict[int, bytes] = {}
+        self.counters = PoolCounters()
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (scratch excluded)."""
+        return self.num_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_evictable(self) -> int:
+        return len(self._evictable)
+
+    @property
+    def in_use(self) -> int:
+        """Blocks held by live owners (staged or refcount >= 1)."""
+        return self.capacity - self.num_free - self.num_evictable
+
+    @property
+    def occupancy(self) -> float:
+        return self.in_use / self.capacity
+
+    def state(self, bid: int) -> BlockState:
+        return self._state[bid]
+
+    def refcount(self, bid: int) -> int:
+        return self._ref[bid]
+
+    def _check(self, bid: int) -> None:
+        if not 0 < bid < self.num_blocks:
+            raise KVPoolError(f"block id {bid} out of range "
+                              f"(1..{self.num_blocks - 1}; 0 is scratch)")
+
+    # -- lifecycle ---------------------------------------------------------
+    def can_alloc(self, n: int) -> bool:
+        return self.num_free + self.num_evictable >= n
+
+    def alloc(self) -> int:
+        """free -> staged. Recycles the free list first; when dry, evicts
+        the least-recently-released cached block (dropping its prefix
+        index entry). Raises ``KVPoolError`` when nothing is left — the
+        scheduler's cue to defer staging until a release frees blocks."""
+        if self._free:
+            bid = self._free.popleft()
+        elif self._evictable:
+            bid, key = self._evictable.popitem(last=False)  # LRU
+            del self._index[key]
+            del self._key_of[bid]
+            self.counters.evictions += 1
+        else:
+            raise KVPoolError(
+                f"KV pool exhausted: all {self.capacity} blocks are "
+                "staged or active (no cached block to evict)"
+            )
+        if self._ref[bid] != 0:
+            raise KVPoolError(
+                f"block {bid} on the free path with refcount "
+                f"{self._ref[bid]} (double allocation)"
+            )
+        self._state[bid] = BlockState.STAGED
+        self._ref[bid] = 1
+        self.counters.allocs += 1
+        self.counters.in_use_peak = max(self.counters.in_use_peak,
+                                        self.in_use)
+        return bid
+
+    def activate(self, bid: int) -> None:
+        """staged -> active: staging finished, the owning request is
+        admitted. Activating a block that was never staged (or is shared)
+        is a protocol error."""
+        self._check(bid)
+        if self._state[bid] is not BlockState.STAGED:
+            raise KVPoolError(
+                f"activate on block {bid} in state "
+                f"{self._state[bid].value!r} (must be staged)"
+            )
+        self._state[bid] = BlockState.ACTIVE
+
+    def retain(self, bid: int) -> None:
+        """Add an owner: a prefix hit on an active or cached block. A
+        cached block revives off the eviction list."""
+        self._check(bid)
+        st = self._state[bid]
+        if st is BlockState.CACHED:
+            self._evictable.pop(bid)
+            self._state[bid] = BlockState.ACTIVE
+            self._ref[bid] = 1
+            # a revival raises in_use exactly like an allocation does
+            self.counters.in_use_peak = max(self.counters.in_use_peak,
+                                            self.in_use)
+            return
+        if st is not BlockState.ACTIVE:
+            raise KVPoolError(
+                f"retain on block {bid} in state {st.value!r} "
+                "(only active/cached blocks can gain owners)"
+            )
+        self._ref[bid] += 1
+
+    def release(self, bid: int) -> None:
+        """Drop one owner. At refcount 0 a prefix-indexed block becomes
+        cached (evictable, still addressable by content); an unindexed
+        one returns to the free list. Releasing below zero raises."""
+        self._check(bid)
+        if self._state[bid] is BlockState.FREE or self._ref[bid] < 1:
+            raise KVPoolError(
+                f"release on block {bid} (state {self._state[bid].value!r}, "
+                f"refcount {self._ref[bid]}): refcounts never go negative"
+            )
+        self._ref[bid] -= 1
+        if self._ref[bid] > 0:
+            return
+        key = self._key_of.get(bid)
+        if key is not None:
+            self._state[bid] = BlockState.CACHED
+            self._evictable[bid] = key  # most-recently released = MRU
+        else:
+            self._state[bid] = BlockState.FREE
+            self._free.append(bid)
+
+    # -- prefix index (hash-consing) ---------------------------------------
+    def lookup(self, key: bytes) -> int | None:
+        self.counters.prefix_block_lookups += 1
+        bid = self._index.get(key)
+        if bid is not None:
+            self.counters.prefix_block_hits += 1
+        return bid
+
+    def register(self, key: bytes, bid: int) -> int:
+        """Hash-cons: publish ``bid`` as THE block for ``key``. If the
+        key is already taken (a concurrent request staged the same
+        content), the existing block wins and ``bid`` stays a private
+        unshared copy — returns the canonical id either way."""
+        self._check(bid)
+        if self._state[bid] is not BlockState.ACTIVE:
+            raise KVPoolError(
+                f"register on block {bid} in state "
+                f"{self._state[bid].value!r} (must be active: blocks are "
+                "published at admission, after staging completes)"
+            )
+        existing = self._index.get(key)
+        if existing is not None:
+            return existing
+        if bid in self._key_of:
+            raise KVPoolError(f"block {bid} already registered")
+        self._index[key] = bid
+        self._key_of[bid] = key
+        return bid
+
+
+# ---------------------------------------------------------------------------
+# Device pool: the model's own cache specs at (batch=num_blocks,
+# max_len=block_size), with per-leaf axes probed from spec diffs.
+# ---------------------------------------------------------------------------
+
+
+def _diff_axis(a, b) -> int:
+    for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+        if x != y:
+            return i
+    raise ValueError(
+        f"cache leaf {a.shape} has no differing axis between probes; "
+        "the paged pool cannot address it"
+    )
+
+
+def probe_batch_axes(api, cfg, minfo, max_len: int):
+    """Which axis of each cache leaf is the batch (slot/block) axis?
+    Diff the spec shapes for batch=2 vs batch=3."""
+    s2 = api.cache_specs(cfg, minfo, 2, max_len)
+    s3 = api.cache_specs(cfg, minfo, 3, max_len)
+    return jax.tree.map(_diff_axis, s2, s3, is_leaf=L.is_spec)
+
+
+def probe_length_axes(api, cfg, minfo, batch: int):
+    """Which axis of each cache leaf is the sequence-length axis? Diff
+    the spec shapes for max_len=16 vs max_len=32. Together with the
+    batch axis this fully describes how a leaf pages: pool leaves carry
+    blocks on the batch axis and ``block_size`` positions on the length
+    axis, whatever the family's layout (GQA 5-D KV, int8 scales, MLA
+    latent)."""
+    s16 = api.cache_specs(cfg, minfo, batch, 16)
+    s32 = api.cache_specs(cfg, minfo, batch, 32)
+    return jax.tree.map(_diff_axis, s16, s32, is_leaf=L.is_spec)
+
+
+class KVPool:
+    """The physical pooled cache plus generic block-granular device ops.
+
+    ``cache`` is a normal model cache pytree whose probed batch axis has
+    ``num_blocks`` entries and probed length axis ``block_size``
+    positions — the scheduler hands it (plus block tables) straight to
+    the model's decode/prefill steps, where attention scatters/gathers
+    through the tables. The helpers here are the *generic* paths used
+    off the hot loop: copy-on-write block copies and dense
+    reconstruction for tests.
+    """
+
+    def __init__(self, api, cfg, minfo, *, num_blocks: int,
+                 block_size: int) -> None:
+        self.cfg = cfg
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.batch_axes = probe_batch_axes(api, cfg, minfo, block_size)
+        self.length_axes = probe_length_axes(api, cfg, minfo, num_blocks)
+        self.cache = api.init_cache(cfg, minfo, num_blocks, block_size)
+
+    def copy_blocks(self, dst: list[int], src: list[int]) -> None:
+        """Device copy pool[src] -> pool[dst] on every leaf (the
+        copy-on-write primitive). Eager jnp ops — rare path, smoke-scale
+        tensors; the hot paths never copy."""
+        if not dst:
+            return
+        d = jnp.asarray(dst, jnp.int32)
+        s = jnp.asarray(src, jnp.int32)
+        self.cache = jax.tree.map(
+            lambda f, ax: f.at[(slice(None),) * ax + (d,)].set(
+                jnp.take(f, s, axis=ax)),
+            self.cache, self.batch_axes,
+        )
+
+    def gather(self, tables) -> dict:
+        """Dense per-request cache reconstruction: block tables ``(B,
+        nb)`` -> a cache tree shaped exactly like the slot scheduler's
+        slab with ``max_len = nb * block_size`` — the bit-exactness
+        bridge the segment programs decode through."""
+        return gather_blocks(self.cache, self.batch_axes,
+                             self.length_axes, tables)
+
+
+def gather_blocks(cache, batch_axes, length_axes, tables):
+    """Pool -> dense slab view, per leaf, jit-traceable. The paged
+    segment program runs this ONCE at entry, decodes every step on the
+    dense view with the slab scheduler's own (aligned/ragged) machinery,
+    and ``scatter_blocks`` writes the blocks back at exit — block
+    bookkeeping costs O(1) gathers per segment, not per token."""
+    t = jnp.asarray(tables, jnp.int32)
+
+    def leaf(f, ba, la):
+        g = jnp.take(f, t, axis=ba)              # axis ba -> (B, nb)
+        # merge the (nb, block) pair back into one length axis; the
+        # batch axis precedes the length axis in every family layout,
+        # so the block axis sits at la + 1 after the take
+        g = jnp.moveaxis(g, ba + 1, la)
+        shape = list(g.shape)
+        merged = shape[la] * shape[la + 1]
+        return g.reshape(*shape[:la], merged, *shape[la + 2:])
+
+    return jax.tree.map(leaf, cache, batch_axes, length_axes)
+
+
+def scatter_blocks(cache, dense, batch_axes, length_axes, tables):
+    """Dense slab view -> pool, the inverse of ``gather_blocks``.
+
+    Every table entry is written back wholesale. Blocks shared between
+    rows (prefix hits) or with the index receive the values they already
+    hold — decode only writes positions inside each row's exclusive
+    blocks (the copy-on-write invariant) — and duplicate scratch entries
+    receive junk nothing reads, so the scatter is order-independent."""
+    t = jnp.asarray(tables, jnp.int32)
+
+    def leaf(f, g, ba, la):
+        shape = list(g.shape)
+        bs = f.shape[la]
+        nb = shape[la] // bs
+        g = g.reshape(*shape[:la], nb, bs, *shape[la + 1:])
+        g = jnp.moveaxis(g, la, ba + 1)          # (…, B, nb, …, bs, …)
+        return f.at[(slice(None),) * ba + (t,)].set(g.astype(f.dtype))
+
+    return jax.tree.map(leaf, cache, dense, batch_axes, length_axes)
+
+
+# ---------------------------------------------------------------------------
+# Request-level orchestration: tables, prefix splicing, COW.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestBlocks:
+    """One request's logical->physical mapping while it lives in the
+    pool: ``bids[j]`` backs positions ``[j*bs, (j+1)*bs)``."""
+
+    bids: list[int]
+    prefix_hit_blocks: int      # leading bids spliced from the index
+    span: int                   # positions covered: len(bids) * bs
+
+    def table_row(self, width: int) -> np.ndarray:
+        row = np.full((width,), SCRATCH_BLOCK, np.int32)
+        row[: len(self.bids)] = self.bids
+        return row
+
+
+class PagedKVManager:
+    """Allocator + device pool + prefix index, with request-granular ops.
+
+    The scheduler talks to this and to nothing lower: ``begin_request``
+    (prefix splice + atomic span allocation, at staging start),
+    ``publish_prompt`` (activate + hash-cons full prompt blocks, at
+    admission), ``ensure_exclusive`` (copy-on-write before a write into
+    a shared block), ``release_request`` (at retirement).
+    """
+
+    def __init__(self, api, cfg, minfo, *, num_blocks: int,
+                 block_size: int) -> None:
+        self.block_size = int(block_size)
+        self.alloc = BlockAllocator(num_blocks)
+        self.pool = KVPool(api, cfg, minfo, num_blocks=num_blocks,
+                           block_size=block_size)
+
+    @property
+    def counters(self) -> PoolCounters:
+        return self.alloc.counters
+
+    def blocks_needed(self, n_positions: int) -> int:
+        return -(-int(n_positions) // self.block_size)
+
+    def begin_request(self, prompt: np.ndarray, n_positions: int
+                      ) -> RequestBlocks | None:
+        """Start staging: splice every full prompt[:-1] block already in
+        the index (refcount bump, zero compute), then allocate fresh
+        staged blocks for the rest of the request's whole KV span
+        (``n_positions`` = prompt + generation - 1 write positions).
+        Atomic: returns ``None`` without side effects when the pool
+        cannot cover the remainder (the scheduler defers staging)."""
+        bs = self.block_size
+        need = self.blocks_needed(n_positions)
+        # prefix walk: longest run of full prompt[:-1] blocks in the index
+        hits: list[int] = []
+        n_full = (int(prompt.size) - 1) // bs
+        for j in range(min(n_full, need)):
+            bid = self.alloc.lookup(prefix_key(prompt, (j + 1) * bs))
+            if bid is None:
+                break
+            hits.append(bid)
+        # retain-then-check: reviving a cached hit removes it from the
+        # evictable pool, so availability must be measured AFTER the
+        # retains — checking can_alloc first would double-count revived
+        # hits as still-evictable and let alloc() raise mid-loop.
+        for bid in hits:
+            self.alloc.retain(bid)
+        fresh_needed = need - len(hits)
+        if not self.alloc.can_alloc(fresh_needed):
+            for bid in hits:     # rollback: revived hits re-cache
+                self.alloc.release(bid)
+            return None
+        fresh = [self.alloc.alloc() for _ in range(fresh_needed)]
+        return RequestBlocks(bids=hits + list(fresh),
+                             prefix_hit_blocks=len(hits),
+                             span=need * bs)
+
+    def publish_prompt(self, prompt: np.ndarray, rb: RequestBlocks) -> None:
+        """At admission: staged blocks go active, and every full
+        prompt[:-1] block is hash-consed into the prefix index so later
+        requests splice it. (Blocks covering generated positions stay
+        private: their future content depends on this request's own
+        sampling stream, not on any shareable prefix.)"""
+        bs = self.block_size
+        for bid in rb.bids[rb.prefix_hit_blocks:]:
+            self.alloc.activate(bid)
+        n_full = (int(prompt.size) - 1) // bs
+        for j in range(rb.prefix_hit_blocks, min(n_full, len(rb.bids))):
+            self.alloc.register(prefix_key(prompt, (j + 1) * bs),
+                                rb.bids[j])
+
+    def ensure_exclusive(self, rb: RequestBlocks, block_idx: int) -> bool:
+        """Copy-on-write: if the block backing ``block_idx`` is shared
+        (refcount > 1) or published (another request could splice it
+        between now and the write), divert this request onto a private
+        copy before it writes. Returns True when a copy happened.
+
+        The scheduler's structural invariant (sharing covers only full
+        prompt[:-1] blocks; writes start at position ``S - 1``) makes
+        this a no-op on today's paths — it is the protocol's safety net,
+        and the property tests exercise it directly."""
+        bid = rb.bids[block_idx]
+        shared = self.alloc.refcount(bid) > 1 or bid in self.alloc._key_of
+        if not shared:
+            return False
+        new = self.alloc.alloc()       # comes out staged
+        self.pool.copy_blocks([new], [bid])
+        if self.alloc.state(bid) is BlockState.ACTIVE:
+            self.alloc.activate(new)   # the copy mirrors the original
+        rb.bids[block_idx] = new
+        self.alloc.release(bid)
+        self.counters.cow_copies += 1
+        return True
+
+    def release_request(self, rb: RequestBlocks) -> None:
+        """Retirement: drop this request's ownership of every block.
+        Published blocks whose refcount reaches zero stay cached
+        (evictable) for future prefix hits; private ones free."""
+        for bid in rb.bids:
+            self.alloc.release(bid)
+        rb.bids = []

@@ -59,6 +59,11 @@ under a dropping ``capacity_factor`` a padded prefill can route real
 tokens differently than an exact-length one — serve MoE with a no-drop
 capacity factor (or exact-fit buckets) when bit-parity with solo decode
 matters.
+
+``PagedContinuousBatchingServer`` (below) swaps the slab cache for the
+block-granular paged KV pool of ``launch.kvpool`` — prefix caching,
+chunked prefill-ahead, and admission fused into the segment program —
+with the same external contract and bit-identical tokens.
 """
 
 from __future__ import annotations
@@ -79,6 +84,7 @@ from repro.core.modes import (
     coerce_layer_plan,
 )
 from repro.kernels import ops as kops
+from repro.launch import kvpool as kvp
 from repro.launch import sampling
 from repro.launch.sampling import SamplingParams
 from repro.launch.serve import (
@@ -130,26 +136,88 @@ class _Slot:
         return self.rid is None
 
 
-def probe_batch_axes(api, cfg: ModelConfig, minfo, max_len: int):
-    """Which axis of each cache leaf is the batch (slot) axis?
+# per-leaf batch-axis probing now lives with the paged pool (which also
+# probes length axes); re-exported here for existing callers/tests
+probe_batch_axes = kvp.probe_batch_axes
 
-    Diff the spec shapes for batch=2 vs batch=3 — the axis whose size
-    changed is the batch axis. Works for every cache layout without
-    hardcoding family knowledge.
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Typed scheduler counters (one object, attribute access; indexing
+    kept as a compatibility shim for older call sites).
+
+    Executable-cache counters (``compiles``/``hits``) are THE re-trace
+    regression signal; ``wasted_steps`` counts free/dead slot rows the
+    batched segment programs decode alongside active ones; the pool/
+    prefix fields are live only on the paged scheduler.
     """
-    s2 = api.cache_specs(cfg, minfo, 2, max_len)
-    s3 = api.cache_specs(cfg, minfo, 3, max_len)
 
-    def axis(a, b) -> int:
-        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-            if x != y:
-                return i
-        raise ValueError(
-            f"cache leaf {a.shape} has no batch axis; the slot scheduler "
-            "cannot place requests into it"
-        )
+    # executable cache
+    compiles: int = 0
+    hits: int = 0
+    # admission / decode
+    admitted: int = 0
+    segments: int = 0
+    decode_steps: int = 0
+    wasted_steps: int = 0
+    admit_deferrals: int = 0
+    # paged pool (PagedContinuousBatchingServer only)
+    stage_chunks: int = 0
+    stage_stalls: int = 0
+    cow_copies: int = 0
+    evictions: int = 0
+    prefix_block_lookups: int = 0
+    prefix_block_hits: int = 0
+    pool_blocks: int = 0
+    pool_in_use: int = 0
+    pool_in_use_peak: int = 0
 
-    return jax.tree.map(axis, s2, s3, is_leaf=L.is_spec)
+    def __getitem__(self, key: str) -> int:
+        return getattr(self, key)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        setattr(self, key, value)
+
+    @property
+    def exec_hit_rate(self) -> float:
+        return self.hits / max(self.compiles + self.hits, 1)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up prompt blocks served from the prefix
+        index (block-granular)."""
+        return self.prefix_block_hits / max(self.prefix_block_lookups, 1)
+
+    @property
+    def pool_occupancy(self) -> float:
+        return self.pool_in_use / max(self.pool_blocks, 1)
+
+    @property
+    def wasted_step_frac(self) -> float:
+        return self.wasted_steps / max(self.decode_steps, 1)
+
+    def summary(self) -> str:
+        """One printable line per concern — the serving example's stats
+        report."""
+        lines = [
+            f"executable cache: {self.compiles} compiles, {self.hits} hits "
+            f"({self.exec_hit_rate:.0%} hit rate)",
+            f"admission: {self.admitted} admitted, "
+            f"{self.admit_deferrals} deferrals",
+            f"decode: {self.segments} segments, {self.decode_steps} "
+            f"slot-steps, wasted_step_frac {self.wasted_step_frac:.2f}",
+        ]
+        if self.pool_blocks:
+            lines.append(
+                f"kv pool: {self.pool_in_use}/{self.pool_blocks} blocks "
+                f"(peak {self.pool_in_use_peak}), "
+                f"prefix hit rate {self.prefix_hit_rate:.0%} "
+                f"({self.prefix_block_hits}/{self.prefix_block_lookups} "
+                f"blocks), {self.stage_chunks} staged chunks, "
+                f"{self.stage_stalls} stalls, {self.cow_copies} COW, "
+                f"{self.evictions} evictions",
+            )
+        return "\n".join(lines)
 
 
 class ContinuousBatchingServer:
@@ -204,9 +272,6 @@ class ContinuousBatchingServer:
         self.buckets = tuple(sorted(b for b in buckets if b <= max_len))
         self.segment = segment
         self.admit_batch = max(1, min(admit_batch, num_slots))
-        self.axes = probe_batch_axes(self.api, cfg, self.minfo, max_len)
-        # THE slot cache: allocated once, lives as long as the server.
-        self.cache = self.api.init_cache(cfg, self.minfo, num_slots, max_len)
         self.slots = [_Slot() for _ in range(num_slots)]
         self.pending: collections.deque = collections.deque()
         self.finished: list[FinishedRequest] = []
@@ -218,9 +283,17 @@ class ContinuousBatchingServer:
         self._toks = jnp.zeros((num_slots, 1), jnp.int32)
         self._done_raw: list[tuple] = []   # retired, not yet materialized
         self._deferred = False             # admission hysteresis armed
-        self.stats = {"compiles": 0, "hits": 0, "admitted": 0,
-                      "segments": 0, "decode_steps": 0, "wasted_steps": 0,
-                      "admit_deferrals": 0}
+        self.stats = SchedulerStats()
+        self._init_kv()
+
+    def _init_kv(self) -> None:
+        """Allocate the KV memory (hook: the paged subclass builds a
+        block pool here instead of the dense slab)."""
+        self.axes = probe_batch_axes(self.api, self.cfg, self.minfo,
+                                     self.max_len)
+        # THE slot cache: allocated once, lives as long as the server.
+        self.cache = self.api.init_cache(self.cfg, self.minfo,
+                                         self.num_slots, self.max_len)
 
     # -- executable cache --------------------------------------------------
     def _compiled(self, key: tuple, builder: Callable[[], Callable]):
@@ -229,9 +302,9 @@ class ContinuousBatchingServer:
         fn = self._exec.get(key)
         if fn is None:
             fn = self._exec[key] = builder()
-            self.stats["compiles"] += 1
+            self.stats.compiles += 1
         else:
-            self.stats["hits"] += 1
+            self.stats.hits += 1
         return fn
 
     def executable_cache_keys(self) -> list[tuple]:
@@ -359,7 +432,7 @@ class ContinuousBatchingServer:
             slot.prompt = prompt
             slot.sample = sample
             slot.key = keys[j]
-            self.stats["admitted"] += 1
+            self.stats.admitted += 1
             if slot.remaining == 0:
                 self._retire(slot_idx)
 
@@ -429,7 +502,7 @@ class ContinuousBatchingServer:
         if (take < threshold and len(free) < self.num_slots
                 and not self._deferred):
             self._deferred = True
-            self.stats["admit_deferrals"] += 1
+            self.stats.admit_deferrals += 1
             return 0
         self._deferred = False
         reqs = [self.pending.popleft() for _ in range(take)]
@@ -560,12 +633,12 @@ class ContinuousBatchingServer:
         with kops.execution_plan(self.plan):
             buf, self._toks, self.cache = seg(
                 self.params, self._toks, self.cache, pos_arg, state)
-        self.stats["segments"] += 1
-        self.stats["decode_steps"] += steps * len(active)
+        self.stats.segments += 1
+        self.stats.decode_steps += steps * len(active)
         # shrink-to-fit guarantees steps <= every active slot's remaining
         # (no active slot overshoots); the waste that remains is the
         # free/dead rows the batched program decodes alongside them
-        self.stats["wasted_steps"] += steps * (self.num_slots - len(active))
+        self.stats.wasted_steps += steps * (self.num_slots - len(active))
         for i in active:
             slot = self.slots[i]
             take = min(steps, slot.remaining)
@@ -582,12 +655,371 @@ class ContinuousBatchingServer:
         self._advance()
         return self._materialize()
 
+    def _has_work(self) -> bool:
+        return bool(self.pending) or any(not s.free for s in self.slots)
+
     def run(self) -> list[FinishedRequest]:
         """Drain every pending + active request; returns all finished
         requests (ordered by rid). The whole drain is enqueued without
         host syncs; tokens are fetched once at the end."""
-        while self.pending or any(not s.free for s in self.slots):
+        while self._has_work():
             self._advance(draining=True)
         self._materialize()
         out, self.finished = self.finished, []
         return sorted(out, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool scheduler: block tables + prefix caching + prefill-ahead.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Staging:
+    """A pending request whose prompt KV is being staged block-by-block
+    into the pool (chunked prefill-ahead), before it owns any slot."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    sample: SamplingParams | None
+    rb: kvp.RequestBlocks
+    staged: int               # positions [0, staged) hold valid KV
+    target: int               # = prompt.size - 1 (prefill writes S-1)
+
+    @property
+    def done(self) -> bool:
+        return self.staged >= self.target
+
+
+class PagedContinuousBatchingServer(ContinuousBatchingServer):
+    """Continuous batching over a block-granular paged KV pool.
+
+    Same external contract as the slab scheduler (``submit`` / ``step``
+    / ``run``, bit-identical tokens), different memory and admission
+    disciplines:
+
+      * **Paged KV** — ONE physical block pool (``launch.kvpool``)
+        instead of per-slot max-length rows; each request maps its
+        positions onto pooled blocks through a logical block table, and
+        the segment program's attention gathers/scatters through the
+        tables (``models.attention``). Capacity is
+        ``num_blocks * block_size`` *positions*, shared: short requests
+        no longer reserve max_len rows.
+      * **Prefix caching** — full prompt blocks are hash-consed: a
+        request whose prompt starts with an already-served prefix
+        splices those blocks (refcount bump) instead of recomputing
+        their KV; retired requests' published blocks stay cached until
+        LRU eviction. Copy-on-write isolates any write into shared
+        state (structurally unreachable today — sharing stops before
+        every write range — but enforced, not assumed).
+      * **Chunked prefill-ahead** — pending requests' prompt KV stages
+        in fixed-size chunks BETWEEN decode segments (one bounded
+        staging program per boundary while slots decode), so by the
+        time a slot frees, admission is a host-side block-table splice.
+        The correction step — decode of the true last prompt token at
+        its true position — is the admitted row's FIRST step of the
+        very next segment program: admission costs zero extra
+        dispatches, closing the admission/segment-fusion open item (one
+        program per scheduler iteration, vs prefill + correction +
+        segment at the slab scheduler's boundary).
+
+    Numerics: the gathered (B, nb*block_size) view equals the slab
+    cache wherever the causal mask looks (junk in unwritten blocks sits
+    behind ``kpos <= pos`` exactly like a slab's stale tail), and
+    ``nb * block_size == max_len`` keeps program shapes identical — so
+    generation is bit-identical to the slab scheduler AND to solo
+    decode, prefix hits and chunk boundaries included. (MoE under a
+    dropping capacity factor: chunk boundaries change which tokens
+    compete, the same caveat as prompt bucketing — serve no-drop for
+    bit-parity.) Sampling needs nothing new: the position-keyed PRNG
+    never sees block geometry.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefill_chunk: int | None = None,
+                 stage_ahead: int | None = None, **kw) -> None:
+        # consumed by _init_kv, which super().__init__ calls
+        self.block_size = int(block_size)
+        self._num_blocks_arg = num_blocks
+        self.prefill_chunk = int(prefill_chunk or block_size)
+        self._stage_ahead_arg = stage_ahead
+        super().__init__(cfg, params, **kw)
+
+    def _init_kv(self) -> None:
+        if self.max_len % self.block_size:
+            raise ValueError(
+                f"max_len {self.max_len} must be a multiple of "
+                f"block_size {self.block_size} (tables are fixed-width; "
+                "the gathered view must equal the slab shape)"
+            )
+        self.blocks_per_table = self.max_len // self.block_size
+        nb = self._num_blocks_arg
+        if nb is None:
+            # full tables for every slot + staging/prefix slack + scratch
+            nb = (self.num_slots + 2) * self.blocks_per_table + 1
+        self.mgr = kvp.PagedKVManager(
+            self.api, self.cfg, self.minfo,
+            num_blocks=nb, block_size=self.block_size,
+        )
+        self.cache = None  # the pool replaces the slab entirely
+        self.stage_ahead = (self._stage_ahead_arg
+                            if self._stage_ahead_arg is not None
+                            else self.num_slots)
+        # logical -> physical tables, host-side; unoccupied entries point
+        # at the reserved scratch block (dead writes land in junk)
+        self._tables = np.full((self.num_slots, self.blocks_per_table),
+                               kvp.SCRATCH_BLOCK, np.int32)
+        self._slot_rb: list[kvp.RequestBlocks | None] = (
+            [None] * self.num_slots)
+        self._staging: collections.deque[_Staging] = collections.deque()
+        self.stats.pool_blocks = self.mgr.alloc.capacity
+
+    # -- bookkeeping -------------------------------------------------------
+    def _sync_pool_stats(self) -> None:
+        c = self.mgr.counters
+        self.stats.cow_copies = c.cow_copies
+        self.stats.evictions = c.evictions
+        self.stats.prefix_block_lookups = c.prefix_block_lookups
+        self.stats.prefix_block_hits = c.prefix_block_hits
+        self.stats.pool_in_use = self.mgr.alloc.in_use
+        self.stats.pool_in_use_peak = c.in_use_peak
+
+    def _has_work(self) -> bool:
+        return super()._has_work() or bool(self._staging)
+
+    def submit(self, prompt, max_new_tokens: int,
+               sample: SamplingParams | None = None) -> int:
+        prompt_arr = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt_arr.size >= 1 and max_new_tokens >= 1:
+            need = self.mgr.blocks_needed(
+                prompt_arr.size + max_new_tokens - 1)
+            if need > self.mgr.alloc.capacity:
+                raise ValueError(
+                    f"request needs {need} blocks, pool holds "
+                    f"{self.mgr.alloc.capacity} — raise num_blocks or "
+                    "shrink the request"
+                )
+        return super().submit(prompt, max_new_tokens, sample)
+
+    # -- chunked prefill-ahead (staging) -----------------------------------
+    def _stage_fn(self) -> Callable:
+        return jax.jit(
+            make_prefill_step(self.cfg, self.api, self.minfo, self.mesh),
+            donate_argnums=(2,),
+        )
+
+    def _stage_round(self, entries: list[_Staging]) -> None:
+        """ONE bounded staging program advances every incomplete staging
+        entry by up to ``prefill_chunk`` tokens, each row writing at its
+        own frontier through its own block table (the same rowwise-
+        position machinery as ragged segment decode, at prefill width).
+        Fixed chunk length + batch size keyed executables; the zero-
+        padded tail of a final chunk writes junk beyond the prompt that
+        later decode writes overwrite or the causal mask hides (the
+        bucket-padding argument; MoE: padded/co-staged rows share expert
+        capacity — serve no-drop for bit-parity, as with bucketing)."""
+        k, c = len(entries), self.prefill_chunk
+        toks = np.zeros((k, c), np.int32)
+        pos = np.empty((k,), np.int32)
+        bt = np.empty((k, self.blocks_per_table), np.int32)
+        for j, st in enumerate(entries):
+            valid = min(st.target - st.staged, c)
+            toks[j, :valid] = st.prompt[st.staged:st.staged + valid]
+            pos[j] = st.staged
+            bt[j] = st.rb.table_row(self.blocks_per_table)
+        fn = self._compiled(("stage", k, c, self._plan_key),
+                            self._stage_fn)
+        with kops.execution_plan(self.plan):
+            _, self.mgr.pool.cache = fn(
+                self.params, {"tokens": jnp.asarray(toks)},
+                self.mgr.pool.cache, None, jnp.asarray(pos),
+                jnp.asarray(bt),
+            )
+        for st in entries:
+            st.staged += min(st.target - st.staged, c)
+        self.stats.stage_chunks += k
+
+    def _stage(self, *, catch_up: bool) -> None:
+        """Prefill-ahead: start staging pending requests (prefix splice
+        + atomic span allocation), then advance every incomplete staging
+        entry by one batched chunk round — or to completion when there
+        is no active decode to overlap behind (``catch_up``)."""
+        while self.pending and len(self._staging) < self.stage_ahead:
+            rid, prompt, max_new, sample = self.pending[0]
+            rb = self.mgr.begin_request(prompt, prompt.size + max_new - 1)
+            if rb is None:
+                self.stats.stage_stalls += 1
+                break
+            self.pending.popleft()
+            hit_len = min(rb.prefix_hit_blocks * self.block_size,
+                          prompt.size - 1)
+            self._staging.append(_Staging(
+                rid, prompt, max_new, sample, rb,
+                staged=hit_len, target=prompt.size - 1,
+            ))
+        while True:
+            work = [st for st in self._staging if not st.done]
+            if not work:
+                return
+            self._stage_round(work)
+            if not catch_up:
+                return
+
+    # -- admission: a block-table splice, zero dispatches ------------------
+    def _admit_ready(self) -> tuple[list[int], list[int]]:
+        """Move fully staged head requests into free slots. Pure host
+        bookkeeping — the admitted row's correction step (decode of
+        ``prompt[-1]`` at position S-1, exactly the logits solo decode
+        computes there) runs as its first step INSIDE the next segment
+        program, so admission adds no dispatch of its own."""
+        admit_slots: list[int] = []
+        admit_toks: list[int] = []
+        free = [i for i, s in enumerate(self.slots) if s.free]
+        while free and self._staging and self._staging[0].done:
+            st = self._staging.popleft()
+            i = free.pop(0)
+            self.mgr.publish_prompt(st.prompt, st.rb)
+            # the first write position S-1 must be exclusively owned;
+            # structurally it always is (sharing covers only full
+            # prompt[:-1] blocks) — this enforces rather than assumes
+            wb = (int(st.prompt.size) - 1) // self.block_size
+            if wb < len(st.rb.bids):
+                self.mgr.ensure_exclusive(st.rb, wb)
+            slot = self.slots[i]
+            slot.rid = st.rid
+            slot.pos = int(st.prompt.size) - 1
+            slot.remaining = st.max_new
+            slot.generated = 0
+            slot.chunks = []
+            slot.prompt = st.prompt
+            slot.sample = st.sample
+            slot.key = (None if st.sample is None else
+                        np.asarray(sampling.request_key(st.sample.seed)))
+            self._tables[i] = st.rb.table_row(self.blocks_per_table)
+            self._slot_rb[i] = st.rb
+            admit_slots.append(i)
+            admit_toks.append(int(st.prompt[-1]))
+            self.stats.admitted += 1
+        return admit_slots, admit_toks
+
+    def _retire(self, slot_idx: int) -> None:
+        rb = self._slot_rb[slot_idx]
+        if rb is not None:
+            self.mgr.release_request(rb)
+            self._slot_rb[slot_idx] = None
+        self._tables[slot_idx] = kvp.SCRATCH_BLOCK
+        super()._retire(slot_idx)
+
+    # -- segment decode (admission fused in) -------------------------------
+    def _paged_segment_fn(self, num_steps: int, admit_k: int) -> Callable:
+        """The slab scheduler's batched segment scan, bracketed by block
+        bookkeeping: gather the tables' blocks into a dense slab view
+        ONCE, decode every step on it with the existing dense machinery
+        (the aligned/ragged fast paths kept verbatim — paging costs O(1)
+        gathers per segment, not per token), scatter the blocks back at
+        the end. Plus the admission token merge: newly admitted rows
+        enter the scan at their correction position, so one program
+        covers admit + decode — no separate admission dispatch."""
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        max_pos = self.max_len - 1
+        baxes, laxes = self.mgr.pool.batch_axes, self.mgr.pool.length_axes
+
+        def segment(params, toks, pool, pos, bt, admit_slots, admit_toks,
+                    sample=None):
+            if admit_k:
+                toks = toks.at[admit_slots].set(admit_toks)
+            dense = kvp.gather_blocks(pool, baxes, laxes, bt)
+            buf = jnp.zeros((toks.shape[0], num_steps), jnp.int32)
+
+            def body(carry, i):
+                tok, dense, buf = carry
+                p = jnp.minimum(pos + i, max_pos)
+                nxt, dense = step(params, tok, dense, p, None, sample)
+                buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+                return (nxt, dense, buf), None
+
+            (last, dense, buf), _ = jax.lax.scan(
+                body, (toks, dense, buf),
+                jnp.arange(num_steps, dtype=jnp.int32),
+            )
+            pool = kvp.scatter_blocks(pool, dense, baxes, laxes, bt)
+            return buf, last, pool
+
+        return jax.jit(segment, donate_argnums=(1, 2))
+
+    def _segment_steps(self, active: list[int], *,
+                       draining: bool = False) -> int:
+        """Shrink-to-fit as in the slab scheduler, with one more reason
+        to cap at ``segment``: an INCOMPLETE staging entry needs
+        boundaries to interleave its chunks behind decode — that cadence
+        IS the prefill-ahead overlap. (Merely having a backlog does not:
+        ``_stage`` already ran this iteration, so whatever could start
+        staging has, and fully staged entries just wait for a
+        retirement, which is itself a boundary — capping for them would
+        be pure dispatch overhead, the mistake the slab scheduler's
+        hysteresis timeout exists to bound.)"""
+        min_rem = min(self.slots[i].remaining for i in active)
+        staging_wants_boundaries = any(
+            not st.done for st in self._staging)
+        entry_possible = staging_wants_boundaries or (
+            not draining and any(s.free for s in self.slots))
+        if entry_possible:
+            return min(min_rem, self.segment)
+        if min_rem <= self.segment:
+            return min_rem
+        return 1 << (min_rem.bit_length() - 1)
+
+    def _advance(self, *, draining: bool = False) -> None:
+        active_now = any(not s.free and s.remaining > 0
+                         for s in self.slots)
+        self._stage(catch_up=not active_now)
+        admit_slots, admit_toks = self._admit_ready()
+        self._sync_pool_stats()
+        active = [i for i, s in enumerate(self.slots)
+                  if not s.free and s.remaining > 0]
+        if not active:
+            return
+        steps = self._segment_steps(active, draining=draining)
+        pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
+        for i in active:
+            pos[i] = self.slots[i].pos
+        aligned = (len(active) == self.num_slots
+                   and len({self.slots[i].pos for i in active}) == 1)
+        state = self._segment_sample_state(active)
+        admit_k = len(admit_slots)
+        seg = self._compiled(
+            ("pseg", self.num_slots, steps,
+             "aligned" if aligned else "ragged",
+             "sampled" if state is not None else "greedy",
+             admit_k, self._plan_key),
+            lambda: self._paged_segment_fn(steps, admit_k),
+        )
+        pos_arg = (jnp.int32(self.slots[active[0]].pos) if aligned
+                   else jnp.asarray(pos))
+        bt = jnp.asarray(self._tables)
+        a_slots = jnp.asarray(admit_slots, jnp.int32)
+        a_toks = jnp.asarray(np.asarray(admit_toks,
+                                        np.int32).reshape(-1, 1))
+        with kops.execution_plan(self.plan):
+            buf, self._toks, self.mgr.pool.cache = seg(
+                self.params, self._toks, self.mgr.pool.cache, pos_arg,
+                bt, a_slots, a_toks, state,
+            )
+        self.stats.segments += 1
+        self.stats.decode_steps += steps * len(active)
+        self.stats.wasted_steps += steps * (self.num_slots - len(active))
+        for i in active:
+            slot = self.slots[i]
+            take = min(steps, slot.remaining)
+            slot.chunks.append((buf, i, take))
+            slot.generated += take
+            slot.remaining -= take
+            slot.pos += take
+            if slot.remaining == 0:
+                self._retire(i)
+        # re-sync after the retirements so stats read at a quiescent
+        # boundary (e.g. the serving example's summary after run())
+        # reflect the released blocks, not the pre-segment snapshot
+        self._sync_pool_stats()

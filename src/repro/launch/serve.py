@@ -78,11 +78,13 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
 
     from repro.parallel.hints import sharding_hints
 
-    def serve_step(params, tokens, cache, pos, memory=None, sample=None):
+    def serve_step(params, tokens, cache, pos, memory=None, sample=None,
+                   block_tables=None):
+        kw = {} if block_tables is None else {"block_tables": block_tables}
         with sharding_hints(mesh, minfo):
             logits, cache = api.decode_step(
                 params, cfg, tokens, cache, pos, minfo=minfo, mesh=mesh,
-                memory=memory,
+                memory=memory, **kw,
             )
         logits = L.mask_pad_logits(logits, cfg.vocab_size)
         next_tok = sampling.sample_tokens(logits[:, -1, :], sample, pos + 1)
@@ -92,17 +94,36 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
 
 
 def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
+    """Build the jit-able prompt-KV writer.
+
+    ``cache_pos`` (scalar or per-row ``(B,)``) makes the step *chunked*:
+    it writes S tokens starting at that position instead of 0, so a long
+    prompt prefills as a sequence of bounded-length programs (the paged
+    scheduler's prefill-ahead staging; ``Server.generate(prefill_chunk=)``
+    for slab caches). ``block_tables`` routes the writes through the
+    paged pool. Both default off, keeping the original signature/HLO for
+    every existing caller (incl. non-transformer families that take
+    neither kwarg)."""
     from repro.parallel.hints import sharding_hints
 
-    def prefill_step(params, batch, cache, sample=None):
+    def prefill_step(params, batch, cache, sample=None, cache_pos=None,
+                     block_tables=None):
+        kw = {}
+        if cache_pos is not None:
+            kw["cache_pos"] = cache_pos
+        if block_tables is not None:
+            kw["block_tables"] = block_tables
         with sharding_hints(mesh, minfo):
             logits, cache = api.prefill(
-                params, cfg, batch, cache, minfo=minfo, mesh=mesh
+                params, cfg, batch, cache, minfo=minfo, mesh=mesh, **kw
             )
         logits = L.mask_pad_logits(logits, cfg.vocab_size)
-        # prefill of S tokens emits the token at sequence index S
-        next_tok = sampling.sample_tokens(
-            logits[:, -1, :], sample, batch["tokens"].shape[1])
+        # prefill of S tokens starting at p emits the token at sequence
+        # index p + S (p = 0 for the classic whole-prompt prefill)
+        idx = batch["tokens"].shape[1]
+        if cache_pos is not None:
+            idx = cache_pos + idx
+        next_tok = sampling.sample_tokens(logits[:, -1, :], sample, idx)
         return next_tok[:, None], cache
 
     return prefill_step
@@ -244,7 +265,8 @@ class Server:
     def generate(self, prompts: Array, num_tokens: int,
                  extra: dict | None = None, *,
                  decode: str = "scan",
-                 sample: SamplingParams | None = None) -> ServeResult:
+                 sample: SamplingParams | None = None,
+                 prefill_chunk: int | None = None) -> ServeResult:
         """prompts: (B, S) int32 — one bucket; decode num_tokens.
 
         ``decode="scan"`` (default) runs all steps as one compiled
@@ -254,6 +276,13 @@ class Server:
         sampling with a position-keyed PRNG stream per batch row: the
         same seed reproduces the same tokens under scan and loop decode
         alike, and temperature 0 is bit-identical to greedy.
+        ``prefill_chunk`` splits the prompt's KV build into bounded
+        chunks (each written at its true offset) — token-for-token
+        identical to whole-prompt prefill, and the building block the
+        paged scheduler's prefill-ahead staging interleaves behind
+        decode. (MoE caveat: under a dropping capacity factor, chunk
+        boundaries — like bucket padding — change which tokens compete
+        for expert capacity; serve MoE no-drop for bit-parity.)
         """
         if decode not in ("scan", "loop"):
             raise ValueError(f"decode must be 'scan' or 'loop', got {decode!r}")
@@ -263,6 +292,16 @@ class Server:
                 f"prompt {s} + generate {num_tokens} exceeds max_len "
                 f"{self.max_len}"
             )
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
+            if self.cfg.family not in PER_LAYER_PLAN_FAMILIES:
+                raise ValueError(
+                    "chunked prefill needs a prefill that takes a "
+                    "cache_pos offset (the generic transformer's dense/"
+                    f"moe stacks); family {self.cfg.family!r} does not"
+                )
         state = sampling.sample_state(sample, b) if sample is not None else None
         cache = self._take_cache(b)
         batch = {"tokens": prompts, **(extra or {})}
@@ -276,7 +315,16 @@ class Server:
                 memory = W.encode(self.params, self.cfg, batch["frames"])
             if self.cfg.family == "vlm":
                 memory = batch.get("image_embeds")
-            nxt, cache = self._prefill(self.params, batch, cache, state)
+            if prefill_chunk is not None and s > prefill_chunk:
+                c0 = 0
+                while c0 < s:
+                    c1 = min(c0 + prefill_chunk, s)
+                    chunk = dict(batch, tokens=prompts[:, c0:c1])
+                    nxt, cache = self._prefill(
+                        self.params, chunk, cache, state, jnp.int32(c0))
+                    c0 = c1
+            else:
+                nxt, cache = self._prefill(self.params, batch, cache, state)
             pieces = [prompts, nxt]
             steps = num_tokens - 1
             if steps > 0 and decode == "scan":

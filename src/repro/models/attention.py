@@ -132,6 +132,60 @@ def rowwise_pos(pos) -> bool:
     return pos is not None and getattr(pos, "ndim", 0) == 1
 
 
+# ---------------------------------------------------------------------------
+# Paged KV (block tables): gather/scatter between the pooled cache and
+# the dense layout the attention math runs on.
+# ---------------------------------------------------------------------------
+
+def _paged_write_index(block_tables: Array, cache_pos, s: int, bs: int):
+    """Physical (block, offset) for each written token position.
+
+    ``block_tables`` (B, nb) maps logical block j of each row onto a
+    pooled block id. Positions are ``cache_pos`` (scalar or per-row
+    ``(B,)``) plus the within-call token index. Returns ``(pb, off)``
+    with shape ``(B,)`` for single-token decode and ``(B, s)`` for a
+    prefill chunk — advanced-index scatters either way, so pooled
+    writes cost one scatter exactly like the slot scheduler's rowwise
+    path. Out-of-range logical blocks (a padded staging chunk running
+    past the table) clamp onto the row's last table entry: those
+    positions are overwritten before any unmasked read sees them (same
+    argument as bucket padding).
+    """
+    b = block_tables.shape[0]
+    pos = jnp.asarray(cache_pos, jnp.int32)
+    if s == 1:
+        p = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos  # (B,)
+    else:
+        start = pos[:, None] if pos.ndim == 1 else pos
+        p = jnp.broadcast_to(start + jnp.arange(s, dtype=jnp.int32),
+                             (b, s))
+    blk = jnp.minimum(p // bs, block_tables.shape[1] - 1)
+    pb = jnp.take_along_axis(
+        block_tables, blk.reshape(b, -1), axis=1).reshape(p.shape)
+    return pb, p % bs
+
+
+def _paged_gather_kv(leaf: Array, block_tables: Array) -> Array:
+    """(P, Hkv, bs, Dh) pooled KV -> (B, Hkv, nb*bs, Dh) dense view."""
+    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, Hkv, bs, Dh)
+    g = jnp.moveaxis(g, 1, 2)                     # (B, Hkv, nb, bs, Dh)
+    b, h = g.shape[0], g.shape[1]
+    return g.reshape(b, h, -1, leaf.shape[-1])
+
+
+def _paged_gather_scale(leaf: Array, block_tables: Array) -> Array:
+    """(P, Hkv, bs) pooled scales -> (B, Hkv, nb*bs)."""
+    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, Hkv, bs)
+    g = jnp.moveaxis(g, 1, 2)                     # (B, Hkv, nb, bs)
+    return g.reshape(g.shape[0], g.shape[1], -1)
+
+
+def _paged_gather_lat(leaf: Array, block_tables: Array) -> Array:
+    """(P, bs, r) pooled MLA latent/rope -> (B, nb*bs, r)."""
+    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, bs, r)
+    return g.reshape(g.shape[0], -1, leaf.shape[-1])
+
+
 def _quantize_kv(x: Array) -> tuple[Array, Array]:
     """Per-(token, head) int8 quantization: x (B, Hkv, S, Dh)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,Hkv,S)
@@ -253,6 +307,7 @@ def gqa_attention(
     cache: dict | None = None,     # per-layer slice (no leading L dim)
     cache_pos: Array | None = None,  # scalar write offset (decode/prefill)
     memory: Array | None = None,   # cross-attention memory (B, T, D)
+    block_tables: Array | None = None,  # (B, nb) paged-KV mapping
 ) -> tuple[Array, dict | None]:
     b, s, d = x.shape
     h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -289,7 +344,28 @@ def gqa_attention(
         else:
             kq, vq = k.astype(cfg.kv_cache_dtype), v.astype(cfg.kv_cache_dtype)
         new_cache = dict(cache)
-        if rowwise_pos(cache_pos):
+        if block_tables is not None:
+            # paged KV: the cache leaves are the pooled (P, Hkv, bs, Dh)
+            # physical blocks; each written position scatters to its
+            # row's table entry (blocks shared across rows by the prefix
+            # cache are never in any row's write range — the scheduler's
+            # copy-on-write guarantee).
+            bs_blk = cache["k"].shape[2]
+            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk)
+            if s == 1:
+                kv_vals = (kq[:, :, 0, :], vq[:, :, 0, :])
+            else:
+                kv_vals = (kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3))
+            new_cache["k"] = cache["k"].at[pb, :, po, :].set(kv_vals[0])
+            new_cache["v"] = cache["v"].at[pb, :, po, :].set(kv_vals[1])
+            if int8:
+                s_vals = ((ks[:, :, 0], vs[:, :, 0]) if s == 1
+                          else (ks.transpose(0, 2, 1), vs.transpose(0, 2, 1)))
+                new_cache["k_scale"] = (
+                    cache["k_scale"].at[pb, :, po].set(s_vals[0]))
+                new_cache["v_scale"] = (
+                    cache["v_scale"].at[pb, :, po].set(s_vals[1]))
+        elif rowwise_pos(cache_pos):
             # per-row scatter: slot row i writes its own position — ONE
             # batched program over unaligned slots instead of num_slots
             # vmapped batch-1 programs (the scheduler's segment decode).
@@ -317,7 +393,23 @@ def gqa_attention(
                     cache["k_scale"], ks, (0, 0, cache_pos))
                 new_cache["v_scale"] = jax.lax.dynamic_update_slice(
                     cache["v_scale"], vs, (0, 0, cache_pos))
-        if int8:
+        if block_tables is not None:
+            # dense (B, Hkv, nb*bs, Dh) view gathered through the block
+            # table; junk in padded/unwritten blocks sits behind the
+            # causal mask (exactly like a slab cache's stale tail), so
+            # the attend below is bit-identical to the slab path.
+            kr = _paged_gather_kv(new_cache["k"], block_tables)
+            vr = _paged_gather_kv(new_cache["v"], block_tables)
+            if int8:
+                k = _dequantize_kv(
+                    kr, _paged_gather_scale(new_cache["k_scale"],
+                                            block_tables), cfg.dtype)
+                v = _dequantize_kv(
+                    vr, _paged_gather_scale(new_cache["v_scale"],
+                                            block_tables), cfg.dtype)
+            else:
+                k, v = kr.astype(cfg.dtype), vr.astype(cfg.dtype)
+        elif int8:
             k = _dequantize_kv(new_cache["k"], new_cache["k_scale"], cfg.dtype)
             v = _dequantize_kv(new_cache["v"], new_cache["v_scale"], cfg.dtype)
         else:
@@ -343,6 +435,7 @@ def mla_attention(
     *,
     cache: dict | None = None,
     cache_pos: Array | None = None,
+    block_tables: Array | None = None,
 ) -> tuple[Array, dict | None]:
     b, s, d = x.shape
     h = cfg.num_heads
@@ -370,7 +463,23 @@ def mla_attention(
     new_cache = None
     if cache is not None:
         new_cache = dict(cache)
-        if rowwise_pos(cache_pos):
+        if block_tables is not None:
+            # paged MLA: latent + rope leaves are (P, bs, r) pooled
+            # blocks; the (block, offset) advanced-index scatter and the
+            # table gather mirror the GQA path exactly.
+            bs_blk = cache["c_kv"].shape[1]
+            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk)
+            ckv_w = c_kv[:, 0, :] if s == 1 else c_kv
+            kr_w = k_rope[:, 0, :] if s == 1 else k_rope
+            new_cache["c_kv"] = cache["c_kv"].at[pb, po, :].set(
+                ckv_w.astype(cache["c_kv"].dtype))
+            new_cache["k_rope"] = cache["k_rope"].at[pb, po, :].set(
+                kr_w.astype(cache["k_rope"].dtype))
+            c_kv_full = _paged_gather_lat(
+                new_cache["c_kv"], block_tables).astype(cfg.dtype)
+            k_rope_full = _paged_gather_lat(
+                new_cache["k_rope"], block_tables).astype(cfg.dtype)
+        elif rowwise_pos(cache_pos):
             # per-row scatter (see gqa_attention): batched decode of
             # slots at unaligned positions, single-token writes only.
             if s != 1:
@@ -388,8 +497,9 @@ def mla_attention(
                 cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
             new_cache["k_rope"] = jax.lax.dynamic_update_slice(
                 cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
-        c_kv_full = new_cache["c_kv"].astype(cfg.dtype)
-        k_rope_full = new_cache["k_rope"].astype(cfg.dtype)
+        if block_tables is None:
+            c_kv_full = new_cache["c_kv"].astype(cfg.dtype)
+            k_rope_full = new_cache["k_rope"].astype(cfg.dtype)
     else:
         c_kv_full, k_rope_full = c_kv, k_rope
 

@@ -116,10 +116,12 @@ def _remat(fn, cfg: ModelConfig):
 
 
 def _decoder_block(p, cfg, x, positions, *, kind, table, minfo, mesh,
-                   cache=None, cache_pos=None, memory=None):
+                   cache=None, cache_pos=None, memory=None,
+                   block_tables=None):
     h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)       # flexible
     a, new_cache = attn_lib.attention(
         p["attn"], cfg, h, positions, cache=cache, cache_pos=cache_pos,
+        block_tables=block_tables,
     )
     x = x + a
     if kind == "cross" and memory is not None:
@@ -167,7 +169,7 @@ def _unboundary(x, cfg: ModelConfig):
 
 
 def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
-               caches=None, cache_pos=None, memory=None):
+               caches=None, cache_pos=None, memory=None, block_tables=None):
     """Run every scan group in the layer plan. caches mirrors blocks.
 
     ``layer_base`` tracks the global layer index across scan groups so an
@@ -194,6 +196,7 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                     p_cross, cfg, x, positions, kind="cross", table=table,
                     minfo=minfo, mesh=mesh, memory=memory,
                     cache=c_cross, cache_pos=cache_pos,
+                    block_tables=block_tables,
                 )
 
             def group_body(x, xs):
@@ -204,6 +207,7 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                     y, nc = _decoder_block(
                         p_l, cfg, x, positions, kind="dense", table=table,
                         minfo=minfo, mesh=mesh, cache=c_l, cache_pos=cache_pos,
+                        block_tables=block_tables,
                     )
                     return y, nc
 
@@ -239,7 +243,7 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                         y, nc = _decoder_block(
                             p_l, cfg, x, positions, kind="dense", table=table,
                             minfo=minfo, mesh=mesh, cache=c_l,
-                            cache_pos=cache_pos,
+                            cache_pos=cache_pos, block_tables=block_tables,
                         )
                         return _boundary(y, cfg), nc
 
@@ -267,6 +271,7 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                 y, nc = _decoder_block(
                     p_l, cfg, x, positions, kind=kind, table=table,
                     minfo=minfo, mesh=mesh, cache=c_l, cache_pos=cache_pos,
+                    block_tables=block_tables,
                 )
                 return _boundary(y, cfg), nc
 
@@ -284,7 +289,7 @@ def _run_stack(params, cfg, x, positions, *, table, minfo, mesh,
                     y, nc = _decoder_block(
                         p_l, cfg, x, positions, kind=kind, table=table,
                         minfo=minfo, mesh=mesh, cache=c_l,
-                        cache_pos=cache_pos,
+                        cache_pos=cache_pos, block_tables=block_tables,
                     )
                     cache_full = jax.tree.map(
                         lambda a, u: jax.lax.dynamic_update_index_in_dim(
@@ -383,15 +388,28 @@ def init_cache(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
 
 
 def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
-            table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None):
+            table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None,
+            cache_pos=None, block_tables=None):
+    """Write the prompt's KV. ``cache_pos`` (default 0) is the position
+    of the chunk's first token — chunked prefill runs this repeatedly
+    with advancing offsets (scalar, or per-row ``(B,)`` for staged rows
+    at unaligned frontiers); RoPE, the causal mask, and the KV writes
+    all key off it. ``block_tables`` (B, nb) routes the writes through
+    the paged KV pool instead of a dense slab."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = L.embed_lookup(params["embed"], tokens,
                        sharded="model" in minfo.axis_names)
-    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cache_pos is None:
+        cache_pos = jnp.int32(0)
+    if attn_lib.rowwise_pos(cache_pos):
+        positions = cache_pos[:, None] + jnp.arange(s)[None, :]
+    else:
+        positions = jnp.broadcast_to(cache_pos + jnp.arange(s)[None, :],
+                                     (b, s))
     x, new_cache = _run_stack(
         params, cfg, x, positions, table=table, minfo=minfo, mesh=mesh,
-        caches=cache, cache_pos=jnp.int32(0),
+        caches=cache, cache_pos=cache_pos, block_tables=block_tables,
         memory=batch.get("image_embeds"),
     )
     x = _unboundary(x, cfg)
@@ -401,11 +419,14 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
 
 def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
                 pos: Array, *, table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST,
-                mesh=None, memory: Array | None = None):
+                mesh=None, memory: Array | None = None, block_tables=None):
     """One token: tokens (B, 1), pos int32 — scalar (whole batch at one
     length) or per-row ``(B,)`` (batched slots at unaligned positions:
     RoPE, causal masks, and KV writes all key off each row's own
-    position — see ``attention.rowwise_pos``)."""
+    position — see ``attention.rowwise_pos``). With ``block_tables``
+    (B, nb) the cache is the paged KV pool and reads/writes go through
+    each row's table (``attention`` gathers the dense view; the
+    contiguous slab fast path is untouched when tables are absent)."""
     b = tokens.shape[0]
     x = L.embed_lookup(params["embed"], tokens,
                        sharded="model" in minfo.axis_names)
@@ -416,6 +437,7 @@ def decode_step(params, cfg: ModelConfig, tokens: Array, cache: dict,
     x, new_cache = _run_stack(
         params, cfg, x, positions, table=table, minfo=minfo, mesh=mesh,
         caches=cache, cache_pos=pos, memory=memory,
+        block_tables=block_tables,
     )
     x = _unboundary(x, cfg)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)

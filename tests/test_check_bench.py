@@ -39,6 +39,32 @@ def test_committed_bench_records_the_pr4_acceptance_numbers():
     assert crossover > 0
 
 
+def test_committed_bench_records_the_pr5_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    hit = next(v for n, v in by_name.items()
+               if n.endswith("paged/prefix_hit_rate"))
+    assert 0 < hit <= 1
+    ratio = next(v for n, v in by_name.items()
+                 if n.endswith("paged_over_sync_admission"))
+    assert ratio >= 1.0
+
+
+def test_zero_prefix_hit_rate_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("paged/prefix_hit_rate"):
+            r["derived"] = 0.0
+    assert any("prefix cache" in e for e in check(rows))
+
+
+def test_regressed_paged_ratio_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("paged_over_sync_admission"):
+            r["derived"] = 0.8
+    assert any("synchronous admission" in e for e in check(rows))
+
+
 def test_missing_required_row_is_flagged():
     rows = [r for r in _rows()
             if not r["name"].endswith("scan_over_loop_speedup")]

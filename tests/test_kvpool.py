@@ -1,0 +1,412 @@
+"""Paged KV pool: block allocator protocol + prefix index + COW.
+
+The allocator carries the sidebar discipline up to serving memory, so it
+gets the sidebar's kind of coverage: random interleavings of the
+lifecycle ops must never double-allocate a block, never drive a refcount
+negative, and always raise ``KVPoolError`` (leaving state untouched) on
+out-of-order transitions. Copy-on-write must isolate the writer from
+every other owner of a shared block — checked against the real device
+pool, not a mock.
+
+Hypothesis-driven where available; seeded-random versions always run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch import kvpool as kvp
+from repro.launch.kvpool import (
+    BlockAllocator,
+    BlockState,
+    KVPoolError,
+    PagedKVManager,
+    prefix_key,
+)
+from repro.models import layers as L
+from repro.models.registry import get_model
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+N_BLOCKS = 8  # 7 allocatable + scratch
+
+
+# ---------------------------------------------------------------------------
+# Allocator lifecycle: directed cases.
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_free_staged_active_cached_free():
+    a = BlockAllocator(N_BLOCKS)
+    bid = a.alloc()
+    assert a.state(bid) is BlockState.STAGED and a.refcount(bid) == 1
+    a.activate(bid)
+    assert a.state(bid) is BlockState.ACTIVE
+    a.register(b"key", bid)
+    a.retain(bid)                       # second owner (prefix hit)
+    assert a.refcount(bid) == 2
+    a.release(bid)
+    assert a.state(bid) is BlockState.ACTIVE
+    a.release(bid)                      # last owner: indexed -> cached
+    assert a.state(bid) is BlockState.CACHED
+    assert a.num_evictable == 1
+    a.retain(bid)                       # revival off the eviction list
+    assert a.state(bid) is BlockState.ACTIVE and a.num_evictable == 0
+    a.release(bid)
+    assert a.state(bid) is BlockState.CACHED
+
+
+def test_unindexed_release_returns_to_free_list():
+    a = BlockAllocator(N_BLOCKS)
+    bid = a.alloc()
+    a.activate(bid)
+    a.release(bid)
+    assert a.state(bid) is BlockState.FREE
+    assert a.num_free == a.capacity
+
+
+def test_protocol_errors_on_out_of_order_transitions():
+    a = BlockAllocator(N_BLOCKS)
+    bid = a.alloc()
+    a.activate(bid)
+    with pytest.raises(KVPoolError, match="must be staged"):
+        a.activate(bid)                 # double-activate
+    a.release(bid)                      # unindexed -> free
+    with pytest.raises(KVPoolError, match="never go negative"):
+        a.release(bid)                  # release-after-free
+    fresh = a.alloc()
+    with pytest.raises(KVPoolError, match="active/cached"):
+        a.retain(fresh)                 # staged blocks have one owner
+    with pytest.raises(KVPoolError, match="must be active"):
+        a.register(b"k", fresh)
+    with pytest.raises(KVPoolError, match="out of range"):
+        a.release(0)                    # the scratch block is reserved
+
+
+def test_exhaustion_raises_then_eviction_recycles_lru():
+    a = BlockAllocator(4)               # 3 allocatable
+    bids = [a.alloc() for _ in range(3)]
+    with pytest.raises(KVPoolError, match="exhausted"):
+        a.alloc()
+    # publish + release two in a known order -> LRU eviction order
+    for i, bid in enumerate(bids[:2]):
+        a.activate(bid)
+        a.register(f"k{i}".encode(), bid)
+        a.release(bid)
+    assert a.num_evictable == 2
+    got = a.alloc()                     # evicts bids[0] (least recent)
+    assert got == bids[0]
+    assert a.lookup(b"k0") is None      # evicted key dropped
+    assert a.lookup(b"k1") == bids[1]   # survivor still indexed
+
+
+def test_hash_consing_keeps_first_registration():
+    a = BlockAllocator(N_BLOCKS)
+    b1, b2 = a.alloc(), a.alloc()
+    a.activate(b1), a.activate(b2)
+    assert a.register(b"same", b1) == b1
+    # concurrent staging of identical content: first registration wins,
+    # the duplicate stays a private unshared copy
+    assert a.register(b"same", b2) == b1
+    a.release(b2)
+    assert a.state(b2) is BlockState.FREE   # private copy frees outright
+
+
+# ---------------------------------------------------------------------------
+# Random interleavings: the model-checked allocator.
+# ---------------------------------------------------------------------------
+
+ACTIONS = ("alloc", "activate", "retain", "release", "register")
+
+
+def _run_interleaving(seq, n_blocks=6):
+    """Drive the allocator with a random action sequence against a
+    shadow model; every legal op must agree with the model, every
+    illegal op must raise and change nothing."""
+    a = BlockAllocator(n_blocks)
+    state = {}   # bid -> (BlockState, ref) shadow
+    registered = set()
+    key_ctr = [0]
+
+    def snapshot():
+        return ({b: (a.state(b), a.refcount(b))
+                 for b in range(1, n_blocks)},
+                a.num_free, a.num_evictable)
+
+    for step, (act, tgt) in enumerate(seq):
+        bids = sorted(state) or [1]
+        bid = bids[tgt % len(bids)]
+        before = snapshot()
+        st_model = state.get(bid, (BlockState.FREE, 0))
+        try:
+            if act == "alloc":
+                got = a.alloc()
+                assert state.get(got, (BlockState.FREE, 0))[0] in (
+                    BlockState.FREE, BlockState.CACHED)
+                state[got] = (BlockState.STAGED, 1)
+                registered.discard(got)
+            elif act == "activate":
+                a.activate(bid)
+                assert st_model[0] is BlockState.STAGED
+                state[bid] = (BlockState.ACTIVE, st_model[1])
+            elif act == "retain":
+                a.retain(bid)
+                assert st_model[0] in (BlockState.ACTIVE, BlockState.CACHED)
+                state[bid] = (BlockState.ACTIVE,
+                              st_model[1] + 1 if st_model[0] is
+                              BlockState.ACTIVE else 1)
+            elif act == "release":
+                a.release(bid)
+                assert st_model[1] >= 1
+                ref = st_model[1] - 1
+                if ref > 0:
+                    state[bid] = (st_model[0], ref)
+                elif bid in registered:
+                    state[bid] = (BlockState.CACHED, 0)
+                else:
+                    state[bid] = (BlockState.FREE, 0)
+            elif act == "register":
+                key = b"k%d" % key_ctr[0]
+                key_ctr[0] += 1
+                a.register(key, bid)
+                assert st_model[0] is BlockState.ACTIVE
+                registered.add(bid)
+        except KVPoolError:
+            # illegal per the model — and state must be untouched
+            assert snapshot() == before, f"step {step}: {act} corrupted"
+            continue
+        # global invariants after every successful op
+        in_use = sum(1 for s, _ in state.values()
+                     if s in (BlockState.STAGED, BlockState.ACTIVE))
+        assert a.in_use == in_use
+        assert a.num_free + a.num_evictable + a.in_use == a.capacity
+        for b, (s, r) in state.items():
+            assert a.state(b) is s and a.refcount(b) == r, (step, b)
+            assert r >= 0
+
+
+def test_random_interleavings_seeded():
+    rng = np.random.RandomState(0)
+    for _ in range(60):
+        seq = [(ACTIONS[rng.randint(len(ACTIONS))], int(rng.randint(8)))
+               for _ in range(rng.randint(5, 60))]
+        _run_interleaving(seq)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=120, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(ACTIONS),
+                              st.integers(0, 7)),
+                    min_size=1, max_size=80))
+    def test_random_interleavings_hypothesis(seq):
+        _run_interleaving(seq)
+
+
+# ---------------------------------------------------------------------------
+# Manager: prefix splicing, COW isolation on the real device pool.
+# ---------------------------------------------------------------------------
+
+def _mgr(num_blocks=10, block_size=4):
+    cfg = cfglib.get_smoke_config("nemotron-4-15b")
+    api = get_model(cfg)
+    return PagedKVManager(api, cfg, L.HOST, num_blocks=num_blocks,
+                          block_size=block_size), cfg
+
+
+def test_begin_publish_release_and_prefix_splice():
+    mgr, _ = _mgr()
+    prompt = np.arange(1, 11, dtype=np.int32)       # S=10, bs=4
+    rb = mgr.begin_request(prompt, prompt.size + 3)  # 13 pos -> 4 blocks
+    assert rb is not None and len(rb.bids) == 4
+    assert rb.prefix_hit_blocks == 0
+    mgr.publish_prompt(prompt, rb)
+    # full blocks of prompt[:-1] (9 tokens -> 2 full blocks) registered
+    assert mgr.alloc.lookup(prefix_key(prompt, 4)) == rb.bids[0]
+    assert mgr.alloc.lookup(prefix_key(prompt, 8)) == rb.bids[1]
+    # a same-prefix request splices both, shares physically
+    rb2 = mgr.begin_request(prompt, prompt.size + 3)
+    assert rb2.prefix_hit_blocks == 2
+    assert rb2.bids[:2] == rb.bids[:2]
+    assert rb2.bids[2:] != rb.bids[2:]
+    assert mgr.alloc.refcount(rb.bids[0]) == 2
+    mgr.release_request(rb)
+    assert mgr.alloc.refcount(rb2.bids[0]) == 1     # rb2 still owns
+    mgr.release_request(rb2)
+    # published blocks stay cached; a third request still hits
+    rb3 = mgr.begin_request(prompt, prompt.size + 3)
+    assert rb3.prefix_hit_blocks == 2
+
+
+def test_begin_request_is_atomic_under_exhaustion():
+    mgr, _ = _mgr(num_blocks=4)                     # 3 allocatable
+    prompt = np.arange(1, 6, dtype=np.int32)
+    rb = mgr.begin_request(prompt, 8)               # 2 blocks
+    assert rb is not None
+    before = (mgr.alloc.num_free, mgr.alloc.in_use)
+    assert mgr.begin_request(prompt, 12) is None    # needs 3, has 1
+    assert (mgr.alloc.num_free, mgr.alloc.in_use) == before
+
+
+def test_begin_request_atomic_when_hits_are_the_evictable_blocks():
+    """Regression: availability is measured AFTER reviving cached prefix
+    hits — a hit pulled off the eviction list must not be double-counted
+    as still-evictable headroom, and a failed begin must re-cache the
+    revived hits (not leak them active or raise mid-allocation)."""
+    mgr, _ = _mgr(num_blocks=5, block_size=4)       # 4 allocatable
+    prompt = np.arange(1, 10, dtype=np.int32)       # 2 full prefix blocks
+    rb = mgr.begin_request(prompt, 9)               # 3 blocks
+    mgr.publish_prompt(prompt, rb)
+    mgr.release_request(rb)                         # 2 cached + 1 free
+    filler_rb = mgr.begin_request(
+        np.asarray([91], np.int32), 8)              # takes both free bids
+    assert filler_rb is not None and len(filler_rb.bids) == 2
+    # now free+evictable = 2, and BOTH are the cached prefix blocks a
+    # same-prefix request will revive as hits. It needs 2 hits + 1
+    # fresh: after the revivals nothing is left to allocate, so begin
+    # must fail cleanly — pre-fix, can_alloc counted the hits as
+    # still-evictable headroom and alloc() raised mid-loop.
+    cached = [b for b in range(1, 5)
+              if mgr.alloc.state(b) is kvp.BlockState.CACHED]
+    assert len(cached) == 2
+    assert mgr.begin_request(prompt, 12) is None    # no KVPoolError
+    for b in cached:                                # hits re-cached
+        assert mgr.alloc.state(b) is kvp.BlockState.CACHED
+    assert mgr.alloc.in_use == 2                    # only the filler
+
+
+def test_cow_isolates_shared_block_on_device():
+    mgr, cfg = _mgr(num_blocks=10, block_size=4)
+    prompt = np.arange(1, 10, dtype=np.int32)       # 2 full blocks
+    rb = mgr.begin_request(prompt, prompt.size + 2)
+    mgr.publish_prompt(prompt, rb)
+    rb2 = mgr.begin_request(prompt, prompt.size + 2)
+    shared = rb2.bids[0]
+    assert shared == rb.bids[0]
+    # stamp recognizable values into the shared block
+    marker = jax.tree.map(
+        lambda f, ax: f.at[(slice(None),) * ax + (shared,)].set(
+            jnp.ones_like(jnp.take(f, shared, axis=ax))),
+        mgr.pool.cache, mgr.pool.batch_axes)
+    mgr.pool.cache = marker
+    assert mgr.ensure_exclusive(rb2, 0)             # copies
+    assert rb2.bids[0] != shared
+    assert mgr.alloc.refcount(shared) == 1          # rb still owns it
+    assert mgr.counters.cow_copies == 1
+    # the copy carries the stamped content; the original is untouched;
+    # a write into the copy does not reach the original
+    for f, ax in zip(jax.tree.leaves(mgr.pool.cache),
+                     jax.tree.leaves(mgr.pool.batch_axes)):
+        np.testing.assert_array_equal(
+            np.asarray(jnp.take(f, rb2.bids[0], axis=ax)),
+            np.asarray(jnp.take(f, shared, axis=ax)))
+    mgr.pool.cache = jax.tree.map(
+        lambda f, ax: f.at[(slice(None),) * ax + (rb2.bids[0],)].set(
+            2 * jnp.ones_like(jnp.take(f, rb2.bids[0], axis=ax))),
+        mgr.pool.cache, mgr.pool.batch_axes)
+    for f, ax in zip(jax.tree.leaves(mgr.pool.cache),
+                     jax.tree.leaves(mgr.pool.batch_axes)):
+        assert not np.array_equal(
+            np.asarray(jnp.take(f, rb2.bids[0], axis=ax)),
+            np.asarray(jnp.take(f, shared, axis=ax)))
+    # exclusive block: second call is a no-op
+    assert not mgr.ensure_exclusive(rb2, 0)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.tuples(st.integers(2, 12), st.integers(1, 6)),
+                    min_size=1, max_size=6),
+           st.integers(0, 3))
+    def test_request_lifecycle_never_leaks_blocks(reqs, share_seed):
+        """Random begin/publish/cow/release traffic: afterwards every
+        block is free or cached (nothing leaks), and refcounts of live
+        requests' blocks were never negative along the way (release
+        raises otherwise)."""
+        a = BlockAllocator(64)
+        bs = 4
+        rng = np.random.RandomState(share_seed)
+        live = []
+        for plen, gen in reqs:
+            prompt = rng.randint(0, 5, size=plen).astype(np.int32)
+            need = -(-(plen + gen - 1) // bs)
+            hits = []
+            for j in range(min((plen - 1) // bs, need)):
+                bid = a.lookup(prefix_key(prompt, (j + 1) * bs))
+                if bid is None:
+                    break
+                hits.append(bid)
+            if not a.can_alloc(need - len(hits)):
+                continue
+            for h in hits:
+                a.retain(h)
+            fresh = [a.alloc() for _ in range(need - len(hits))]
+            for f in fresh:
+                a.activate(f)
+            for j in range(len(hits), min((plen - 1) // bs, need)):
+                a.register(prefix_key(prompt, (j + 1) * bs),
+                           (hits + fresh)[j])
+            live.append(hits + fresh)
+            if rng.rand() < 0.5 and live:
+                for bid in live.pop(rng.randint(len(live))):
+                    a.release(bid)
+        for bids in live:
+            for bid in bids:
+                a.release(bid)
+        assert a.in_use == 0
+        assert a.num_free + a.num_evictable == a.capacity
+
+
+# ---------------------------------------------------------------------------
+# Device pool probing + gather reconstruction.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,int8", [
+    ("nemotron-4-15b", False),
+    ("nemotron-4-15b", True),
+    ("deepseek-v3-671b", False),
+])
+def test_pool_axes_probe_and_gather_roundtrip(arch, int8):
+    """Probed batch/length axes address every leaf of every cache
+    family, and gather() reconstructs exactly the dense slab layout."""
+    cfg = cfglib.get_smoke_config(arch)
+    if int8:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=jnp.int8)
+    api = get_model(cfg)
+    bs, nb = 4, 3
+    pool = kvp.KVPool(api, cfg, L.HOST, num_blocks=1 + 2 * nb,
+                      block_size=bs)
+    for leaf, ba, la in zip(jax.tree.leaves(pool.cache),
+                            jax.tree.leaves(pool.batch_axes),
+                            jax.tree.leaves(pool.length_axes)):
+        assert leaf.shape[ba] == 1 + 2 * nb, (arch, leaf.shape, ba)
+        assert leaf.shape[la] == bs, (arch, leaf.shape, la)
+        assert ba < la
+    # fill with recognizable values, gather, compare against reshaping
+    filled = jax.tree.map(
+        lambda f: jnp.arange(f.size, dtype=jnp.float32).reshape(
+            f.shape).astype(f.dtype), pool.cache)
+    pool.cache = filled
+    tables = np.asarray([[1, 2, 3], [4, 5, 6]], np.int32)
+    dense = pool.gather(tables)
+    for g, f, ba, la in zip(jax.tree.leaves(dense),
+                            jax.tree.leaves(filled),
+                            jax.tree.leaves(pool.batch_axes),
+                            jax.tree.leaves(pool.length_axes)):
+        assert g.shape[ba] == 2 and g.shape[la] == nb * bs
+        # row 0, logical position p lives in block tables[0][p // bs]
+        for p in (0, bs, nb * bs - 1):
+            src = jnp.take(jnp.take(f, tables[0][p // bs], axis=ba),
+                           p % bs, axis=la - 1)
+            got = jnp.take(jnp.take(g, 0, axis=ba), p, axis=la - 1)
+            np.testing.assert_array_equal(np.asarray(src), np.asarray(got))

@@ -1,0 +1,277 @@
+"""Paged scheduler: bit-exact tokens through the block pool.
+
+The strongest invariant, extended from the slab scheduler's: serving
+through the paged KV pool — prefix-cache hits, chunked prefill-ahead,
+copy-on-write, admission fused into the segment program — produces, per
+request, EXACTLY the tokens a solo ``Server.generate`` (and therefore
+the PR-4 slab scheduler, which is tested against the same reference)
+produces. Paging is a memory-layout choice, never a numerics choice —
+on the GQA, int8-KV, and MLA+MoE cache families alike.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch.sampling import SamplingParams
+from repro.launch.scheduler import (
+    ContinuousBatchingServer,
+    PagedContinuousBatchingServer,
+    SchedulerStats,
+)
+from repro.launch.serve import Server
+from repro.models.registry import get_model
+
+ARCHS = ["nemotron-4-15b", "nemotron-int8", "deepseek-v3-671b"]
+
+
+def _cfg(arch: str):
+    if arch == "nemotron-int8":
+        cfg = dataclasses.replace(
+            cfglib.get_smoke_config("nemotron-4-15b"),
+            kv_cache_dtype=jnp.int8,
+        )
+    else:
+        cfg = cfglib.get_smoke_config(arch)
+    if cfg.num_experts:
+        # no-drop capacity: chunk boundaries (like bucket padding) must
+        # not change expert routing — see the scheduler docstring
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def served():
+    out = {}
+    for arch in ARCHS:
+        cfg = _cfg(arch)
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        out[arch] = (cfg, params, Server(cfg, params, max_len=48))
+    return out
+
+
+def _traffic(cfg, n, seed=0, max_prompt=14):
+    rng = np.random.RandomState(seed)
+    return [
+        (rng.randint(0, cfg.vocab_size, size=rng.randint(2, max_prompt))
+         .astype(np.int32), int(rng.randint(1, 9)))
+        for _ in range(n)
+    ]
+
+
+def _check_exact(solo, done, reqs, arch=""):
+    for r in done:
+        prompt, gen = reqs[r.rid]
+        assert r.generated == gen
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop")
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], r.tokens,
+            err_msg=f"{arch} rid {r.rid}: paged != solo decode",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_matches_solo_decode(arch, served):
+    """Mixed lengths, more requests than slots, chunked prefill-ahead
+    smaller than prompts — every family decodes the solo tokens."""
+    cfg, params, solo = served[arch]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=3, max_len=48, block_size=8,
+        prefill_chunk=8, segment=4)
+    reqs = _traffic(cfg, 7, seed=3)
+    rids = [sched.submit(p, g) for p, g in reqs]
+    done = sched.run()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    _check_exact(solo, done, reqs, arch)
+    assert all(s.free for s in sched.slots)
+    assert sched.stats.stage_chunks > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefix_cache_hits_are_token_exact(arch, served):
+    """Shared-prefix traffic: the second wave splices cached blocks
+    (prefix_block_hits > 0) and still produces solo-exact tokens —
+    including a request whose prompt extends a cached prefix."""
+    cfg, params, solo = served[arch]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=4,
+        prefill_chunk=4, segment=4)
+    rng = np.random.RandomState(11)
+    system = rng.randint(0, cfg.vocab_size, size=9).astype(np.int32)
+    reqs = []
+    for i in range(4):
+        tail = rng.randint(0, cfg.vocab_size, size=3 + i).astype(np.int32)
+        reqs.append((np.concatenate([system, tail]), 4))
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    _check_exact(solo, done, reqs, arch)
+    assert sched.stats.prefix_block_hits > 0
+    assert 0 < sched.stats.prefix_hit_rate <= 1
+    # retired requests' published blocks stay cached: a fresh identical
+    # prompt hits without any staging compute for the shared blocks
+    hits0 = sched.stats.prefix_block_hits
+    sched.submit(reqs[0][0], 4)
+    (r,) = sched.run()
+    _check_exact(solo, [r], {r.rid: reqs[0]}, arch)
+    assert sched.stats.prefix_block_hits > hits0
+
+
+def test_edge_prompts_single_token_and_block_boundary(served):
+    """S=1 (no staging at all — straight to the fused correction step)
+    and a prompt whose last token sits exactly on a block boundary."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8, segment=4)
+    single = np.asarray([7], np.int32)
+    exact = np.arange(1, 10, dtype=np.int32)     # S-1 == block_size
+    sched.submit(single, 6)
+    sched.submit(exact, 6)
+    done = sched.run()
+    for r, p in zip(done, (single, exact)):
+        ref = solo.generate(jnp.asarray(p)[None, :], 6, decode="loop")
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, p.size:], r.tokens)
+
+
+def test_paged_matches_slab_scheduler_tokens(served):
+    """Same traffic through the slab scheduler and the paged scheduler:
+    identical tokens, request for request."""
+    cfg, params, _ = served["nemotron-4-15b"]
+    reqs = _traffic(cfg, 6, seed=7)
+    slab = ContinuousBatchingServer(cfg, params, num_slots=2, max_len=48,
+                                    buckets=(8,), segment=4)
+    paged = PagedContinuousBatchingServer(cfg, params, num_slots=2,
+                                          max_len=48, block_size=8,
+                                          segment=4)
+    for p, g in reqs:
+        slab.submit(p, g)
+        paged.submit(p, g)
+    a, b = slab.run(), paged.run()
+    assert len(a) == len(b) == 6
+    for ra, rb in zip(a, b):
+        assert ra.rid == rb.rid
+        np.testing.assert_array_equal(ra.tokens, rb.tokens)
+
+
+@pytest.mark.parametrize("arch", ["nemotron-4-15b", "deepseek-v3-671b"])
+def test_sampled_paged_decode_matches_solo(arch, served):
+    """Sampled requests (mixed with greedy neighbours) keep their exact
+    position-keyed streams through staging, splicing, and the fused
+    admission step."""
+    cfg, params, solo = served[arch]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8, segment=3)
+    sp = SamplingParams(temperature=0.8, top_k=40, seed=13)
+    rng = np.random.RandomState(5)
+    reqs = [(rng.randint(0, cfg.vocab_size, size=n).astype(np.int32), 5)
+            for n in (3, 9, 6)]
+    sched.submit(reqs[0][0], 5, sample=sp)
+    sched.submit(reqs[1][0], 5)
+    sched.submit(reqs[2][0], 5, sample=sp)
+    done = sched.run()
+    for r in done:
+        prompt, gen = reqs[r.rid]
+        sample = sp if r.rid in (0, 2) else None
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop", sample=sample)
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], r.tokens)
+
+
+def test_admission_is_fused_into_segment(served):
+    """One dispatch per scheduler iteration: the executable cache holds
+    ONLY staging and fused-segment programs — no separate admission/
+    prefill program ever compiles (the slab scheduler compiles both)."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8, segment=4)
+    reqs = _traffic(cfg, 5, seed=9)
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    _check_exact(solo, done, reqs)
+    kinds = {k[0] for k in sched.executable_cache_keys()}
+    assert kinds <= {"stage", "pseg"}, kinds
+    admitting = [k for k in sched.executable_cache_keys()
+                 if k[0] == "pseg" and k[5] > 0]
+    assert admitting, "no segment program carried fused admissions"
+
+
+def test_repeat_traffic_never_recompiles(served):
+    cfg, params, _ = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8, segment=4)
+    wave = _traffic(cfg, 4, seed=5)
+    for p, g in wave:
+        sched.submit(p, g)
+    sched.run()
+    compiles = sched.stats.compiles
+    keys = sched.executable_cache_keys()
+    for p, g in wave:
+        sched.submit(p, g)
+    sched.run()
+    assert sched.stats.compiles == compiles
+    assert sched.executable_cache_keys() == keys
+
+
+def test_pool_pressure_stalls_then_recovers(served):
+    """A pool too small to stage everything at once: staging stalls
+    (recorded), requests drain in waves as blocks free, tokens stay
+    exact, and nothing leaks when the queue empties."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=32, block_size=8,
+        num_blocks=9, segment=4)     # 8 allocatable < 3 live requests
+    rng = np.random.RandomState(21)
+    reqs = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 12)
+            for _ in range(5)]       # 3 blocks each: two fit, a third stalls
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    assert len(done) == 5
+    _check_exact(solo, done, reqs)
+    assert sched.stats.stage_stalls > 0
+    assert sched.mgr.alloc.in_use == 0          # nothing leaked
+    assert sched.mgr.alloc.num_free + sched.mgr.alloc.num_evictable \
+        == sched.mgr.alloc.capacity
+
+
+def test_oversized_request_rejected_up_front(served):
+    cfg, params, _ = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=1, max_len=32, block_size=8, num_blocks=3)
+    with pytest.raises(ValueError, match="blocks"):
+        sched.submit(np.arange(1, 20, dtype=np.int32), 10)
+    with pytest.raises(ValueError, match="multiple"):
+        PagedContinuousBatchingServer(cfg, params, num_slots=1,
+                                      max_len=30, block_size=8)
+
+
+def test_scheduler_stats_typed_and_printable(served):
+    """The satellite: stats are a typed dataclass with the dict-style
+    compat shim, derived rates, and a printable summary."""
+    cfg, params, _ = served["nemotron-4-15b"]
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8, segment=4)
+    assert isinstance(sched.stats, SchedulerStats)
+    for p, g in _traffic(cfg, 4, seed=2):
+        sched.submit(p, g)
+    sched.run()
+    assert sched.stats["compiles"] == sched.stats.compiles  # shim
+    assert sched.stats.pool_blocks == sched.mgr.alloc.capacity
+    assert 0 <= sched.stats.pool_occupancy <= 1
+    assert 0 <= sched.stats.exec_hit_rate <= 1
+    text = sched.stats.summary()
+    assert "kv pool" in text and "prefix hit rate" in text
+    # the slab scheduler shares the same stats type, pool fields dormant
+    slab = ContinuousBatchingServer(cfg, params, num_slots=2, max_len=48)
+    assert isinstance(slab.stats, SchedulerStats)
+    assert slab.stats.pool_blocks == 0
+    assert "kv pool" not in slab.stats.summary()
