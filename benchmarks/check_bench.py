@@ -35,6 +35,9 @@ REQUIRED_ROWS = (
     "sync_admission/tok_s",
     "paged_over_sync_admission",
     "paged/prefix_hit_rate",
+    "paged_kernel/tok_s",
+    "paged_slab/tok_s",
+    "paged_kernel_over_slab",
 )
 # rows whose derived value is a throughput and must be a positive number
 TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
@@ -90,6 +93,17 @@ def check(records: list) -> list[str]:
                 f"{hit['name']}: the shared-prefix mix must hit the "
                 f"prefix cache (0 < rate <= 1), got {v!r} — zero means "
                 "hash-consed blocks stopped being spliced"
+            )
+    kernel = by_suffix.get("paged_kernel_over_slab")
+    if kernel is not None:
+        v = kernel["derived"]
+        if not isinstance(v, (int, float)) or not v >= 1.0:
+            errors.append(
+                f"{kernel['name']}: in-place paged decode must at least "
+                f"match the gather/scatter slab segment (>= 1.0x) on the "
+                f"boundary-heavy mix, got {v!r} — the pool round-trip "
+                "came back, or the table-walking step grew a per-step "
+                "cost the slab doesn't pay"
             )
     paged = by_suffix.get("paged_over_sync_admission")
     if paged is not None:

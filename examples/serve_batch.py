@@ -19,6 +19,7 @@ Run: PYTHONPATH=src python examples/serve_batch.py --arch deepseek-7b \
 """
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -106,9 +107,9 @@ def run_continuous(args, cfg, api, params, plan):
         sched = PagedContinuousBatchingServer(
             cfg, params, num_slots=args.slots, max_len=max_len,
             block_size=bs, prefill_chunk=args.prefill_chunk,
-            segment=args.segment, plan=plan,
+            segment=args.segment, plan=plan, kernel=args.kernel,
         )
-        kind = f"paged (block_size={bs})"
+        kind = f"paged (block_size={bs}, kernel={args.kernel})"
     else:
         sched = ContinuousBatchingServer(
             cfg, params, num_slots=args.slots, max_len=max_len,
@@ -197,6 +198,15 @@ def main():
                     help="with --continuous: serve through the paged KV "
                          "pool (block tables, prefix caching, chunked "
                          "prefill-ahead)")
+    ap.add_argument("--kernel", default="paged",
+                    choices=["paged", "slab"],
+                    help="with --paged: 'paged' decodes in place on the "
+                         "block pool (table-walking attention, no "
+                         "gather/scatter); 'slab' keeps the dense "
+                         "round-trip reference segment")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="enable the Pallas kernels (interpret mode off "
+                         "TPU) — CI's paged-attention kernel smoke")
     ap.add_argument("--block-size", type=int, default=8,
                     help="KV pool block size in token positions")
     ap.add_argument("--prefill-chunk", type=int, default=None,
@@ -216,6 +226,8 @@ def main():
     args = ap.parse_args()
 
     cfg = cfglib.get_smoke_config(args.arch)
+    if args.use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
     api = get_model(cfg)
     plan = build_plan(args, cfg)
     params = api.init(jax.random.PRNGKey(0), cfg)

@@ -30,6 +30,12 @@ from repro.kernels import activations as _activations
 from repro.kernels import ref
 from repro.kernels.activations import activation as _activation_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.paged_attention import (
+    paged_gqa_kernel as _paged_gqa_kernel,
+    paged_gqa_reference as _paged_gqa_ref,
+    paged_mla_kernel as _paged_mla_kernel,
+    paged_mla_reference as _paged_mla_ref,
+)
 from repro.kernels.sidebar_gated_mlp import sidebar_gated_mlp as _gated_kernel
 from repro.kernels.sidebar_matmul import sidebar_matmul as _matmul_kernel
 from repro.kernels.sidebar_mlp import sidebar_mlp as _mlp_kernel
@@ -182,6 +188,14 @@ def _record(op: str, mode: ExecutionMode, depth: int, variant: str,
     if rec is not None:
         rec.append(PlanDispatch(op, current_layer(), mode, depth, variant,
                                 used_kernel))
+
+
+def record_dispatch(op: str, variant: str, used_kernel: bool = False) -> None:
+    """Public trace-time dispatch record for non-sidebar hot-path ops
+    (e.g. ``kvpool.gather_blocks`` — the observable that lets tests
+    assert the paged-kernel segment issues ZERO pool-wide copies)."""
+    plan = current_plan()
+    _record(op, plan.mode, plan.depth, variant, used_kernel)
 
 
 def sidebar_mlp(
@@ -361,3 +375,94 @@ def flash_attention(
             block_q=block_q, block_k=block_k, interpret=interpret,
         )
     return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def paged_attention_gqa(
+    q: Array,                     # (B, H, Dh) — single decode token/row
+    k_pool: Array,                # (P, Hkv, bs, Dh) pooled blocks
+    v_pool: Array,
+    block_tables: Array,          # (B, nb) int32, host-validated in-bounds
+    lengths: Array,               # (B,) int32 — row attends kpos < length
+    *,
+    scale: float,
+    k_scale: Array | None = None,  # (P, Hkv, bs) fp32 int8-KV scales
+    v_scale: Array | None = None,
+    compute_dtype=None,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Paged GQA decode attention, in place on the block pool.
+
+    Dispatch mirrors the sidebar MLP ops: the Pallas kernel (table rows
+    in SMEM, per-block DMA, online softmax) when eligible on TPU or
+    under ``interpret``; otherwise the jnp reference — the slab path's
+    dense math fed by a per-layer table gather, bit-identical to it. A
+    layer planned ``FLEXIBLE_DMA`` also takes the gather route (the
+    dense-view round-trip IS that mode's memory discipline), recorded as
+    variant ``"dma"`` so per-layer plan choices stay observable.
+    """
+    _, h, dh = q.shape
+    _, hkv, bs, _ = k_pool.shape
+    eligible = h % hkv == 0 and dh % 8 == 0 and bs % 4 == 0
+    plan = current_plan()
+    dma = plan.mode is ExecutionMode.FLEXIBLE_DMA and use_kernel is None
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and not dma and (_on_tpu() or interpret))
+    )
+    if use:
+        _record("paged_attention", plan.mode, plan.depth, "paged", True)
+        return _paged_gqa_kernel(
+            q, k_pool, v_pool, block_tables, lengths, scale=scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+        )
+    _record("paged_attention", plan.mode, plan.depth,
+            "dma" if dma else "ref", False)
+    return _paged_gqa_ref(
+        q, k_pool, v_pool, block_tables, lengths, scale=scale,
+        k_scale=k_scale, v_scale=v_scale, compute_dtype=compute_dtype,
+    )
+
+
+def paged_attention_mla(
+    q_lat: Array,                 # (B, H, kvr) fp32 — q @ absorbed w_uk
+    q_rope: Array,                # (B, H, rope)
+    ckv_pool: Array,              # (P, bs, kvr) pooled latent blocks
+    krope_pool: Array,            # (P, bs, rope)
+    block_tables: Array,
+    lengths: Array,
+    *,
+    scale: float,
+    compute_dtype=None,
+    use_kernel: bool | None = None,
+    interpret: bool = False,
+) -> Array:
+    """Paged MLA absorbed decode; returns ctx_lat (B, H, kvr) fp32.
+
+    Same dispatch contract as ``paged_attention_gqa``; the w_uk
+    projection (before) and w_uv absorption (after) stay with the model.
+    """
+    _, _, kvr = q_lat.shape
+    rope = q_rope.shape[-1]
+    bs = ckv_pool.shape[1]
+    eligible = kvr % 8 == 0 and rope % 4 == 0 and bs % 4 == 0
+    plan = current_plan()
+    dma = plan.mode is ExecutionMode.FLEXIBLE_DMA and use_kernel is None
+    use = (
+        use_kernel
+        if use_kernel is not None
+        else (eligible and not dma and (_on_tpu() or interpret))
+    )
+    if use:
+        _record("paged_attention", plan.mode, plan.depth, "paged", True)
+        return _paged_mla_kernel(
+            q_lat, q_rope, ckv_pool, krope_pool, block_tables, lengths,
+            scale=scale, interpret=interpret,
+        )
+    _record("paged_attention", plan.mode, plan.depth,
+            "dma" if dma else "ref", False)
+    return _paged_mla_ref(
+        q_lat, q_rope, ckv_pool, krope_pool, block_tables, lengths,
+        scale=scale, compute_dtype=compute_dtype,
+    )

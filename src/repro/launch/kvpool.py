@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.models import layers as L
 
 Array = jax.Array
@@ -358,7 +359,11 @@ def gather_blocks(cache, batch_axes, length_axes, tables):
     segment program runs this ONCE at entry, decodes every step on the
     dense view with the slab scheduler's own (aligned/ragged) machinery,
     and ``scatter_blocks`` writes the blocks back at exit — block
-    bookkeeping costs O(1) gathers per segment, not per token."""
+    bookkeeping costs O(1) gathers per segment, not per token. With the
+    paged decode kernel this pair is OFF the hot path entirely (the
+    ``kernel="slab"`` reference and COW/tests keep it); the dispatch
+    record below is the observable tests assert that on."""
+    kops.record_dispatch("gather_blocks", "dma")
     t = jnp.asarray(tables, jnp.int32)
 
     def leaf(f, ba, la):
@@ -382,6 +387,7 @@ def scatter_blocks(cache, dense, batch_axes, length_axes, tables):
     hold — decode only writes positions inside each row's exclusive
     blocks (the copy-on-write invariant) — and duplicate scratch entries
     receive junk nothing reads, so the scatter is order-independent."""
+    kops.record_dispatch("scatter_blocks", "dma")
     t = jnp.asarray(tables, jnp.int32)
 
     def leaf(f, g, ba, la):
@@ -393,6 +399,28 @@ def scatter_blocks(cache, dense, batch_axes, length_axes, tables):
         return f.at[(slice(None),) * ba + (t,)].set(g.astype(f.dtype))
 
     return jax.tree.map(leaf, cache, dense, batch_axes, length_axes)
+
+
+def validate_tables(tables, num_blocks: int) -> None:
+    """Host-side bounds check on a block-table batch before dispatch.
+
+    The device paths deliberately carry NO bounds machinery: the paged
+    gathers declare ``mode="promise_in_bounds"`` and the paged-attention
+    kernel's table-indexed DMA would read whatever pool row a corrupt
+    entry names. This is the promise's enforcement point — cheap numpy
+    on a (B, nb) int table, raising ``KVPoolError`` instead of letting
+    a stale/sentinel entry silently alias block 0 (the old ``jnp.take``
+    clipping behaviour) or a neighbour's block.
+    """
+    t = np.asarray(tables)
+    if t.size == 0:
+        return
+    lo, hi = int(t.min()), int(t.max())
+    if lo < 0 or hi >= num_blocks:
+        raise KVPoolError(
+            f"block table entry out of range: min {lo}, max {hi} for a "
+            f"pool of {num_blocks} blocks — stale or corrupt table"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +466,20 @@ class PagedKVManager:
 
     def blocks_needed(self, n_positions: int) -> int:
         return -(-int(n_positions) // self.block_size)
+
+    def check_span(self, rb: RequestBlocks, end: int) -> None:
+        """Host-side companion to the device write's ``mode="drop"``:
+        a decode segment about to write positions up to ``end - 1``
+        must stay inside the request's allocated span. The device path
+        silently DROPS out-of-table writes (never corrupting a
+        neighbour); this check makes the scheduling bug that would have
+        produced them loud instead of a token-quality mystery."""
+        if end > rb.span:
+            raise KVPoolError(
+                f"write frontier {end} exceeds the request's allocated "
+                f"span {rb.span} ({len(rb.bids)} blocks of "
+                f"{self.block_size}) — segment length outran allocation"
+            )
 
     def begin_request(self, prompt: np.ndarray, n_positions: int
                       ) -> RequestBlocks | None:

@@ -701,9 +701,13 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
 
       * **Paged KV** — ONE physical block pool (``launch.kvpool``)
         instead of per-slot max-length rows; each request maps its
-        positions onto pooled blocks through a logical block table, and
-        the segment program's attention gathers/scatters through the
-        tables (``models.attention``). Capacity is
+        positions onto pooled blocks through a logical block table.
+        With the default ``kernel="paged"`` the segment program decodes
+        IN PLACE on the pool: per-step writes land through the tables
+        and attention walks them directly
+        (``kernels.ops.paged_attention_*``), no pool-wide copies.
+        ``kernel="slab"`` keeps the original gather → dense decode →
+        scatter segment as the reference implementation. Capacity is
         ``num_blocks * block_size`` *positions*, shared: short requests
         no longer reserve max_len rows.
       * **Prefix caching** — full prompt blocks are hash-consed: a
@@ -724,12 +728,14 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         program per scheduler iteration, vs prefill + correction +
         segment at the slab scheduler's boundary).
 
-    Numerics: the gathered (B, nb*block_size) view equals the slab
-    cache wherever the causal mask looks (junk in unwritten blocks sits
-    behind ``kpos <= pos`` exactly like a slab's stale tail), and
-    ``nb * block_size == max_len`` keeps program shapes identical — so
-    generation is bit-identical to the slab scheduler AND to solo
-    decode, prefix hits and chunk boundaries included. (MoE under a
+    Numerics: the table-ordered (B, nb*block_size) view — gathered by
+    the slab segment, walked in place by the paged kernel — equals the
+    slab cache wherever the causal mask looks (junk in unwritten blocks
+    sits behind ``kpos <= pos`` exactly like a slab's stale tail), and
+    masked logits at -1e30 underflow to exactly 0.0 in f32, so slicing
+    the table to the active frontier changes no sum — generation is
+    bit-identical to the slab scheduler AND to solo decode, prefix hits
+    and chunk boundaries included. (MoE under a
     dropping capacity factor: chunk boundaries change which tokens
     compete, the same caveat as prompt bucketing — serve no-drop for
     bit-parity.) Sampling needs nothing new: the position-keyed PRNG
@@ -739,7 +745,18 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
     def __init__(self, cfg: ModelConfig, params, *,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefill_chunk: int | None = None,
-                 stage_ahead: int | None = None, **kw) -> None:
+                 stage_ahead: int | None = None,
+                 kernel: str = "paged", **kw) -> None:
+        if kernel not in ("paged", "slab"):
+            raise ValueError(
+                f"kernel must be 'paged' or 'slab', got {kernel!r}"
+            )
+        # ``kernel="paged"`` (default): segment decode runs IN PLACE on
+        # the block pool through ``kernels.ops.paged_attention_*`` —
+        # zero pool-wide gather/scatter copies, tables sliced to the
+        # active frontier. ``kernel="slab"`` keeps the dense round-trip
+        # segment (gather_blocks / scatter_blocks) as the reference.
+        self.kernel = kernel
         # consumed by _init_kv, which super().__init__ calls
         self.block_size = int(block_size)
         self._num_blocks_arg = num_blocks
@@ -829,8 +846,10 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             toks[j, :valid] = st.prompt[st.staged:st.staged + valid]
             pos[j] = st.staged
             bt[j] = st.rb.table_row(self.blocks_per_table)
-        fn = self._compiled(("stage", k, c, self._plan_key),
-                            self._stage_fn)
+        kvp.validate_tables(bt, self.mgr.pool.num_blocks)
+        fn = self._compiled(
+            ("stage", k, c, self.blocks_per_table, self._plan_key),
+            self._stage_fn)
         with kops.execution_plan(self.plan):
             _, self.mgr.pool.cache = fn(
                 self.params, {"tokens": jnp.asarray(toks)},
@@ -949,6 +968,53 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
 
         return jax.jit(segment, donate_argnums=(1, 2))
 
+    def _paged_kernel_segment_fn(self, num_steps: int,
+                                 admit_k: int) -> Callable:
+        """The slab-free segment: decode runs IN PLACE on the block
+        pool. No ``gather_blocks`` / ``scatter_blocks`` brackets — the
+        scan carries the pool itself and every step's attention walks
+        the block table directly (``kernels.ops.paged_attention_*``),
+        so the segment's cache traffic is the ~steps × slots KV rows it
+        actually touches instead of two pool-wide copies. The table is
+        already sliced to the active frontier by ``_advance``, so the
+        attention width tracks the longest live prefix, not
+        ``max_len``. Admission merge as in the slab segment."""
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        max_pos = self.max_len - 1
+
+        def segment(params, toks, pool, pos, bt, admit_slots, admit_toks,
+                    sample=None):
+            if admit_k:
+                toks = toks.at[admit_slots].set(admit_toks)
+            buf = jnp.zeros((toks.shape[0], num_steps), jnp.int32)
+
+            def body(carry, i):
+                tok, pool, buf = carry
+                p = jnp.minimum(pos + i, max_pos)
+                nxt, pool = step(params, tok, pool, p, None, sample, bt)
+                buf = jax.lax.dynamic_update_slice(buf, nxt, (0, i))
+                return (nxt, pool, buf), None
+
+            (last, pool, buf), _ = jax.lax.scan(
+                body, (toks, pool, buf),
+                jnp.arange(num_steps, dtype=jnp.int32),
+            )
+            return buf, last, pool
+
+        return jax.jit(segment, donate_argnums=(1, 2))
+
+    def _segment_table_width(self, active: list[int], steps: int) -> int:
+        """Block-table width for this segment: cover the farthest
+        position any active row will attend to (its write frontier
+        after ``steps``), rounded up to a power of two so executable
+        shapes stay few, clamped to the full table. Narrower tables
+        mean the paged kernel's grid only walks blocks that can hold
+        live KV."""
+        frontier = max(self.slots[i].pos + steps for i in active)
+        nbu = -(-frontier // self.block_size)
+        nbu = 1 << max(0, (nbu - 1).bit_length())
+        return max(1, min(self.blocks_per_table, nbu))
+
     def _segment_steps(self, active: list[int], *,
                        draining: bool = False) -> int:
         """Shrink-to-fit as in the slab scheduler, with one more reason
@@ -989,16 +1055,32 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                    and len({self.slots[i].pos for i in active}) == 1)
         state = self._segment_sample_state(active)
         admit_k = len(admit_slots)
+        if self.kernel == "paged":
+            width = self._segment_table_width(active, steps)
+            seg_fn = self._paged_kernel_segment_fn
+        else:
+            width = self.blocks_per_table
+            seg_fn = self._paged_segment_fn
+        # host-side guards for the drop-sentinel write path: every table
+        # entry must be a real pool block (gathers promise in-bounds)
+        # and every active row's write frontier must stay inside its
+        # allocated span (writes past it would silently drop)
+        bt_np = self._tables[:, :width]
+        kvp.validate_tables(bt_np, self.mgr.pool.num_blocks)
+        for i in active:
+            rb = self._slot_rb[i]
+            if rb is not None:
+                self.mgr.check_span(rb, self.slots[i].pos + steps)
         seg = self._compiled(
             ("pseg", self.num_slots, steps,
              "aligned" if aligned else "ragged",
              "sampled" if state is not None else "greedy",
-             admit_k, self._plan_key),
-            lambda: self._paged_segment_fn(steps, admit_k),
+             admit_k, self.kernel, width, self._plan_key),
+            lambda: seg_fn(steps, admit_k),
         )
         pos_arg = (jnp.int32(self.slots[active[0]].pos) if aligned
                    else jnp.asarray(pos))
-        bt = jnp.asarray(self._tables)
+        bt = jnp.asarray(bt_np)
         a_slots = jnp.asarray(admit_slots, jnp.int32)
         a_toks = jnp.asarray(np.asarray(admit_toks,
                                         np.int32).reshape(-1, 1))

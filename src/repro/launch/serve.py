@@ -74,6 +74,10 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     / ``sampling.merge_rows`` — ``None`` keeps exact greedy argmax; the
     token written at sequence index ``pos + 1`` is keyed by that index
     (see ``launch.sampling`` for the position-keyed PRNG rule).
+    ``block_tables`` makes ``cache`` a paged block pool decoded IN
+    PLACE: writes land through the tables and attention walks them
+    directly (``kernels.ops.paged_attention_*``) — the paged
+    scheduler's slab-free segment path.
     """
 
     from repro.parallel.hints import sharding_hints

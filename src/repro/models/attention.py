@@ -137,7 +137,8 @@ def rowwise_pos(pos) -> bool:
 # the dense layout the attention math runs on.
 # ---------------------------------------------------------------------------
 
-def _paged_write_index(block_tables: Array, cache_pos, s: int, bs: int):
+def _paged_write_index(block_tables: Array, cache_pos, s: int, bs: int,
+                       num_blocks: int):
     """Physical (block, offset) for each written token position.
 
     ``block_tables`` (B, nb) maps logical block j of each row onto a
@@ -146,12 +147,17 @@ def _paged_write_index(block_tables: Array, cache_pos, s: int, bs: int):
     with shape ``(B,)`` for single-token decode and ``(B, s)`` for a
     prefill chunk — advanced-index scatters either way, so pooled
     writes cost one scatter exactly like the slot scheduler's rowwise
-    path. Out-of-range logical blocks (a padded staging chunk running
-    past the table) clamp onto the row's last table entry: those
-    positions are overwritten before any unmasked read sees them (same
-    argument as bucket padding).
+    path. A position past the table (a padded staging chunk running
+    past it, or an idle row parked at ``max_len - 1`` under a sliced
+    table) gets the out-of-range sentinel ``num_blocks`` — callers
+    scatter with ``mode="drop"`` so the write vanishes instead of
+    silently clamping onto the row's LAST real block (which corrupts a
+    possibly prefix-shared neighbour when the table is fully
+    allocated). The scheduler additionally span-checks real rows
+    host-side before dispatch (``kvpool.PagedKVManager.check_span``).
     """
     b = block_tables.shape[0]
+    nb = block_tables.shape[1]
     pos = jnp.asarray(cache_pos, jnp.int32)
     if s == 1:
         p = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos  # (B,)
@@ -159,15 +165,27 @@ def _paged_write_index(block_tables: Array, cache_pos, s: int, bs: int):
         start = pos[:, None] if pos.ndim == 1 else pos
         p = jnp.broadcast_to(start + jnp.arange(s, dtype=jnp.int32),
                              (b, s))
-    blk = jnp.minimum(p // bs, block_tables.shape[1] - 1)
+    blk = p // bs
     pb = jnp.take_along_axis(
-        block_tables, blk.reshape(b, -1), axis=1).reshape(p.shape)
+        block_tables, jnp.minimum(blk, nb - 1).reshape(b, -1),
+        axis=1).reshape(p.shape)
+    # out-of-table positions -> one past the pool: a dead row that
+    # mode="drop" scatters discard entirely
+    pb = jnp.where(blk < nb, pb, num_blocks)
     return pb, p % bs
+
+
+# Table gathers declare mode="promise_in_bounds" instead of jnp.take's
+# default OOB *clipping*, which would silently read block 0 for any
+# stale/corrupt table entry. The promise is real: tables are built from
+# allocator-owned block ids padded with SCRATCH_BLOCK, and the scheduler
+# re-validates host-side before every dispatch (kvpool.validate_tables).
 
 
 def _paged_gather_kv(leaf: Array, block_tables: Array) -> Array:
     """(P, Hkv, bs, Dh) pooled KV -> (B, Hkv, nb*bs, Dh) dense view."""
-    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, Hkv, bs, Dh)
+    g = leaf.at[block_tables].get(
+        mode="promise_in_bounds")        # (B, nb, Hkv, bs, Dh)
     g = jnp.moveaxis(g, 1, 2)                     # (B, Hkv, nb, bs, Dh)
     b, h = g.shape[0], g.shape[1]
     return g.reshape(b, h, -1, leaf.shape[-1])
@@ -175,14 +193,16 @@ def _paged_gather_kv(leaf: Array, block_tables: Array) -> Array:
 
 def _paged_gather_scale(leaf: Array, block_tables: Array) -> Array:
     """(P, Hkv, bs) pooled scales -> (B, Hkv, nb*bs)."""
-    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, Hkv, bs)
+    g = leaf.at[block_tables].get(
+        mode="promise_in_bounds")        # (B, nb, Hkv, bs)
     g = jnp.moveaxis(g, 1, 2)                     # (B, Hkv, nb, bs)
     return g.reshape(g.shape[0], g.shape[1], -1)
 
 
 def _paged_gather_lat(leaf: Array, block_tables: Array) -> Array:
     """(P, bs, r) pooled MLA latent/rope -> (B, nb*bs, r)."""
-    g = jnp.take(leaf, block_tables, axis=0)      # (B, nb, bs, r)
+    g = leaf.at[block_tables].get(
+        mode="promise_in_bounds")        # (B, nb, bs, r)
     return g.reshape(g.shape[0], -1, leaf.shape[-1])
 
 
@@ -351,20 +371,27 @@ def gqa_attention(
             # cache are never in any row's write range — the scheduler's
             # copy-on-write guarantee).
             bs_blk = cache["k"].shape[2]
-            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk)
+            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk,
+                                        cache["k"].shape[0])
             if s == 1:
                 kv_vals = (kq[:, :, 0, :], vq[:, :, 0, :])
             else:
                 kv_vals = (kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3))
-            new_cache["k"] = cache["k"].at[pb, :, po, :].set(kv_vals[0])
-            new_cache["v"] = cache["v"].at[pb, :, po, :].set(kv_vals[1])
+            # mode="drop": out-of-table positions carry the OOB sentinel
+            # block id and must vanish, never clamp onto a real block
+            new_cache["k"] = cache["k"].at[pb, :, po, :].set(
+                kv_vals[0], mode="drop")
+            new_cache["v"] = cache["v"].at[pb, :, po, :].set(
+                kv_vals[1], mode="drop")
             if int8:
                 s_vals = ((ks[:, :, 0], vs[:, :, 0]) if s == 1
                           else (ks.transpose(0, 2, 1), vs.transpose(0, 2, 1)))
                 new_cache["k_scale"] = (
-                    cache["k_scale"].at[pb, :, po].set(s_vals[0]))
+                    cache["k_scale"].at[pb, :, po].set(
+                        s_vals[0], mode="drop"))
                 new_cache["v_scale"] = (
-                    cache["v_scale"].at[pb, :, po].set(s_vals[1]))
+                    cache["v_scale"].at[pb, :, po].set(
+                        s_vals[1], mode="drop"))
         elif rowwise_pos(cache_pos):
             # per-row scatter: slot row i writes its own position — ONE
             # batched program over unaligned slots instead of num_slots
@@ -393,11 +420,31 @@ def gqa_attention(
                     cache["k_scale"], ks, (0, 0, cache_pos))
                 new_cache["v_scale"] = jax.lax.dynamic_update_slice(
                     cache["v_scale"], vs, (0, 0, cache_pos))
+        if block_tables is not None and s == 1:
+            # paged decode attention IN PLACE on the pool: the op walks
+            # the block table directly (Pallas table-indexed DMA on
+            # TPU / under interpret; a per-layer table gather feeding
+            # the identical dense math in the jnp reference) — no
+            # pool-wide slab view anywhere on the decode hot path.
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            lengths = jnp.broadcast_to(pos, (b,)).astype(jnp.int32) + 1
+            ctx = kops.paged_attention_gqa(
+                q[:, :, 0, :], new_cache["k"], new_cache["v"],
+                block_tables, lengths, scale=1.0 / math.sqrt(dh),
+                k_scale=new_cache["k_scale"] if int8 else None,
+                v_scale=new_cache["v_scale"] if int8 else None,
+                compute_dtype=cfg.dtype,
+                interpret=cfg.use_pallas
+                and jax.default_backend() != "tpu",
+            )
+            out = ctx.reshape(b, 1, h * dh)
+            return linear(out, params["wo"]), new_cache
         if block_tables is not None:
-            # dense (B, Hkv, nb*bs, Dh) view gathered through the block
-            # table; junk in padded/unwritten blocks sits behind the
-            # causal mask (exactly like a slab cache's stale tail), so
-            # the attend below is bit-identical to the slab path.
+            # prefill chunks (s > 1): dense (B, Hkv, nb*bs, Dh) view
+            # gathered through the block table; junk in padded/unwritten
+            # blocks sits behind the causal mask (exactly like a slab
+            # cache's stale tail), so the attend below is bit-identical
+            # to the slab path.
             kr = _paged_gather_kv(new_cache["k"], block_tables)
             vr = _paged_gather_kv(new_cache["v"], block_tables)
             if int8:
@@ -468,17 +515,22 @@ def mla_attention(
             # blocks; the (block, offset) advanced-index scatter and the
             # table gather mirror the GQA path exactly.
             bs_blk = cache["c_kv"].shape[1]
-            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk)
+            pb, po = _paged_write_index(block_tables, cache_pos, s, bs_blk,
+                                        cache["c_kv"].shape[0])
             ckv_w = c_kv[:, 0, :] if s == 1 else c_kv
             kr_w = k_rope[:, 0, :] if s == 1 else k_rope
             new_cache["c_kv"] = cache["c_kv"].at[pb, po, :].set(
-                ckv_w.astype(cache["c_kv"].dtype))
+                ckv_w.astype(cache["c_kv"].dtype), mode="drop")
             new_cache["k_rope"] = cache["k_rope"].at[pb, po, :].set(
-                kr_w.astype(cache["k_rope"].dtype))
-            c_kv_full = _paged_gather_lat(
-                new_cache["c_kv"], block_tables).astype(cfg.dtype)
-            k_rope_full = _paged_gather_lat(
-                new_cache["k_rope"], block_tables).astype(cfg.dtype)
+                kr_w.astype(cache["k_rope"].dtype), mode="drop")
+            if s != 1:
+                # prefill chunks attend through the dense gathered view;
+                # single-token decode goes in place on the pool via
+                # kops.paged_attention_mla in the absorbed branch below
+                c_kv_full = _paged_gather_lat(
+                    new_cache["c_kv"], block_tables).astype(cfg.dtype)
+                k_rope_full = _paged_gather_lat(
+                    new_cache["k_rope"], block_tables).astype(cfg.dtype)
         elif rowwise_pos(cache_pos):
             # per-row scatter (see gqa_attention): batched decode of
             # slots at unaligned positions, single-token writes only.
@@ -503,7 +555,6 @@ def mla_attention(
     else:
         c_kv_full, k_rope_full = c_kv, k_rope
 
-    t = c_kv_full.shape[1]
     scale = 1.0 / math.sqrt(nope + rope)
 
     if cache is not None and s == 1:
@@ -511,22 +562,41 @@ def mla_attention(
         w_uk = params["w_uk"].reshape(cfg.kv_lora_rank, h, nope)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
                            w_uk.astype(jnp.float32))        # (B,1,H,kvr)
-        logits = (
-            jnp.einsum("bshr,btr->bhst", q_lat, c_kv_full.astype(jnp.float32))
-            + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
-                         k_rope_full.astype(jnp.float32))
-        ) * scale
-        end = cache_pos + s - 1                # scalar, or (B,) per-row
-        if rowwise_pos(cache_pos):
-            end = end[:, None, None, None]
-        mask = jnp.arange(t)[None, None, None, :] <= end
-        logits = jnp.where(mask, logits, -1e30)
-        p = jax.nn.softmax(logits, axis=-1)                  # flexible op
-        ctx_lat = jnp.einsum("bhst,btr->bshr", p, c_kv_full.astype(jnp.float32))
+        if block_tables is not None:
+            # paged absorbed decode IN PLACE on the compressed pool —
+            # same contract as the GQA route: Pallas table-indexed DMA
+            # on TPU/interpret, per-layer table gather in the reference.
+            pos = jnp.asarray(cache_pos, jnp.int32)
+            lengths = jnp.broadcast_to(pos, (b,)).astype(jnp.int32) + 1
+            ctx_lat = kops.paged_attention_mla(
+                q_lat[:, 0], q_rope[:, 0], new_cache["c_kv"],
+                new_cache["k_rope"], block_tables, lengths, scale=scale,
+                compute_dtype=cfg.dtype,
+                interpret=cfg.use_pallas
+                and jax.default_backend() != "tpu",
+            )[:, None]                                       # (B,1,H,kvr)
+        else:
+            t = c_kv_full.shape[1]
+            logits = (
+                jnp.einsum("bshr,btr->bhst", q_lat,
+                           c_kv_full.astype(jnp.float32))
+                + jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
+                             k_rope_full.astype(jnp.float32))
+            ) * scale
+            end = cache_pos + s - 1            # scalar, or (B,) per-row
+            if rowwise_pos(cache_pos):
+                end = end[:, None, None, None]
+            mask = jnp.arange(t)[None, None, None, :] <= end
+            logits = jnp.where(mask, logits, -1e30)
+            p = jax.nn.softmax(logits, axis=-1)              # flexible op
+            ctx_lat = jnp.einsum("bhst,btr->bshr", p,
+                                 c_kv_full.astype(jnp.float32))
         w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vdh)
         out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv.astype(jnp.float32))
         out = out.reshape(b, s, h * vdh).astype(cfg.dtype)
         return linear(out, params["wo"]), new_cache
+
+    t = c_kv_full.shape[1]
 
     # ---- train/prefill: expand per-head keys/values (naive MLA).
     k_nope = linear(c_kv_full, params["w_uk"]).reshape(b, t, h, nope)

@@ -49,6 +49,21 @@ def test_committed_bench_records_the_pr5_acceptance_numbers():
     assert ratio >= 1.0
 
 
+def test_committed_bench_records_the_pr6_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    ratio = next(v for n, v in by_name.items()
+                 if n.endswith("paged_kernel_over_slab"))
+    assert ratio >= 1.0
+
+
+def test_regressed_paged_kernel_ratio_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("paged_kernel_over_slab"):
+            r["derived"] = 0.8
+    assert any("pool round-trip" in e for e in check(rows))
+
+
 def test_zero_prefix_hit_rate_is_flagged():
     rows = _rows()
     for r in rows:
