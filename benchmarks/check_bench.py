@@ -38,6 +38,13 @@ REQUIRED_ROWS = (
     "paged_kernel/tok_s",
     "paged_slab/tok_s",
     "paged_kernel_over_slab",
+    "tp2/tok_s",
+    "tp_solo/tok_s",
+    "tp2_over_solo",
+    "tp_tokens_match",
+    "fleet_prefix_hit_rate",
+    "fleet_random_hit_rate",
+    "router_affinity_over_random",
 )
 # rows whose derived value is a throughput and must be a positive number
 TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
@@ -104,6 +111,27 @@ def check(records: list) -> list[str]:
                 f"boundary-heavy mix, got {v!r} — the pool round-trip "
                 "came back, or the table-walking step grew a per-step "
                 "cost the slab doesn't pay"
+            )
+    tp_match = by_suffix.get("tp_tokens_match")
+    if tp_match is not None:
+        v = tp_match["derived"]
+        if v != 1:
+            errors.append(
+                f"{tp_match['name']}: tensor-parallel serving must be "
+                f"token-identical to the solo server (== 1), got {v!r} — "
+                "the shard_map partition stopped being a pure "
+                "parallelization (psum placement, vocab offset, or KV "
+                "sharding drifted)"
+            )
+    affinity = by_suffix.get("router_affinity_over_random")
+    if affinity is not None:
+        v = affinity["derived"]
+        if not isinstance(v, (int, float)) or not v >= 1.0:
+            errors.append(
+                f"{affinity['name']}: prefix-affinity routing must at "
+                f"least match random spray on shared-prefix waves "
+                f"(>= 1.0), got {v!r} — the router stopped steering "
+                "requests to the replica holding their prefix blocks"
             )
     paged = by_suffix.get("paged_over_sync_admission")
     if paged is not None:

@@ -434,6 +434,165 @@ def paged_kernel_rows():
     ]
 
 
+# tensor-parallel serving: the SAME paged scheduler, solo vs a (1,2)
+# mesh (shard_map step programs, weights/KV split on "model", logits
+# all-gathered per step). Runs in a SUBPROCESS so the bench can force
+# two virtual CPU devices without disturbing this process's jax. On one
+# physical CPU the two "devices" share cores, so the tp row measures
+# the sharding + collective OVERHEAD (tp2_over_solo < 1 is expected
+# here); the gated invariant is tp_tokens_match — TP must be a pure
+# parallelization, token-identical to solo serving.
+MESH_TRIALS = 3
+
+_MESH_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses, json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs as cfglib
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.scheduler import PagedContinuousBatchingServer
+from repro.models.registry import get_model
+
+ARCH, PREFIX, GEN, TRIALS = %r, %d, %d, %d
+cfg = dataclasses.replace(
+    cfglib.get_smoke_config(ARCH), d_model=256, num_heads=8,
+    num_kv_heads=2, d_ff=1024, num_layers=4,
+)
+api = get_model(cfg)
+params = api.init(jax.random.PRNGKey(0), cfg)
+rng = np.random.RandomState(7)
+system = rng.randint(0, cfg.vocab_size, size=PREFIX).astype(np.int32)
+reqs = [
+    (np.concatenate([system, rng.randint(
+        0, cfg.vocab_size, size=rng.randint(2, 7)).astype(np.int32)]),
+     int(rng.randint(4, 17)))
+    for _ in range(16)
+]
+useful = sum(g for _, g in reqs)
+max_len = PREFIX + 8 + GEN
+
+def make(mesh):
+    return PagedContinuousBatchingServer(
+        cfg, params, num_slots=4, max_len=max_len, block_size=8,
+        prefill_chunk=8, segment=8, mesh=mesh)
+
+solo, tp = make(None), make(make_serving_mesh((1, 2)))
+
+def run(server):
+    for p, g in reqs:
+        server.submit(p, g)
+    t0 = time.perf_counter()
+    done = server.run()
+    return time.perf_counter() - t0, done
+
+_, d_solo = run(solo)          # warmup: compile + seed prefix index
+_, d_tp = run(tp)
+match = all(
+    np.array_equal(a.tokens, b.tokens)
+    for a, b in zip(sorted(d_solo, key=lambda r: r.rid),
+                    sorted(d_tp, key=lambda r: r.rid))
+) and len(d_solo) == len(d_tp) == len(reqs)
+ratios, so, tr = [], [], []
+for _ in range(TRIALS):
+    sw, ds = run(solo)
+    tw, dt = run(tp)
+    match = match and all(
+        np.array_equal(a.tokens, b.tokens)
+        for a, b in zip(sorted(ds, key=lambda r: r.rid),
+                        sorted(dt, key=lambda r: r.rid)))
+    ratios.append(sw / tw)
+    so.append(useful / sw)
+    tr.append(useful / tw)
+mid = int(np.argsort(ratios)[len(ratios) // 2])
+print(json.dumps({"solo_tok_s": so[mid], "tp_tok_s": tr[mid],
+                  "ratio": ratios[mid], "match": int(match)}))
+"""
+
+
+def mesh_rows():
+    import json
+    import os
+    import subprocess
+    import sys
+
+    child = _MESH_CHILD % (ARCH, PAGED_PREFIX, GEN, MESH_TRIALS)
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    res = subprocess.run(
+        [sys.executable, "-c", child], capture_output=True, text=True,
+        timeout=900, env=env,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"mesh bench child failed:\n{res.stdout}\n{res.stderr}")
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    return [
+        (f"serving/{ARCH}/tp2/tok_s", 1e6 / data["tp_tok_s"],
+         data["tp_tok_s"]),
+        (f"serving/{ARCH}/tp_solo/tok_s", 1e6 / data["solo_tok_s"],
+         data["solo_tok_s"]),
+        (f"serving/{ARCH}/tp2_over_solo", 0.0, data["ratio"]),
+        (f"serving/{ARCH}/tp_tokens_match", 0.0, float(data["match"])),
+    ]
+
+
+# replica-router fleet: 4 paged replicas, shared-prefix wave traffic,
+# prefix-affinity steering vs random spray. Greedy decode + seeded
+# traffic + seeded router make BOTH hit rates deterministic, so the
+# affinity-over-random ratio is a hard-gateable invariant, not a timing.
+FLEET_REPLICAS, FLEET_WAVES, FLEET_PER_WAVE, FLEET_FAMILIES = 4, 3, 8, 4
+
+
+def _fleet_waves(cfg):
+    rng = np.random.RandomState(7)
+    fams = [rng.randint(0, cfg.vocab_size, size=PAGED_PREFIX).astype(
+        np.int32) for _ in range(FLEET_FAMILIES)]
+    waves = []
+    for _ in range(FLEET_WAVES):
+        wave = []
+        for i in range(FLEET_PER_WAVE):
+            tail = rng.randint(0, cfg.vocab_size,
+                               size=rng.randint(2, 7)).astype(np.int32)
+            wave.append((np.concatenate([fams[i % FLEET_FAMILIES], tail]),
+                         int(rng.randint(2, 7))))
+        waves.append(wave)
+    return waves
+
+
+def router_rows():
+    from repro.launch.router import ReplicaRouter
+
+    cfg = _continuous_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    waves = _fleet_waves(cfg)
+    max_len = PAGED_PREFIX + 8 + GEN
+    rates = {}
+    for policy in ("prefix", "random"):
+        replicas = [
+            PagedContinuousBatchingServer(
+                cfg, params, num_slots=2, max_len=max_len,
+                block_size=PAGED_BLOCK, prefill_chunk=PAGED_BLOCK,
+                segment=8)
+            for _ in range(FLEET_REPLICAS)
+        ]
+        fleet = ReplicaRouter(replicas, policy=policy, seed=3)
+        for wave in waves:
+            for p, g in wave:
+                fleet.submit(p, g)
+            fleet.run()   # drain between waves so the index seeds
+        rates[policy] = fleet.stats.prefix_hit_rate
+    return [
+        (f"serving/{ARCH}/fleet_prefix_hit_rate", 0.0, rates["prefix"]),
+        (f"serving/{ARCH}/fleet_random_hit_rate", 0.0, rates["random"]),
+        (f"serving/{ARCH}/router_affinity_over_random", 0.0,
+         rates["prefix"] / max(rates["random"], 1e-9)),
+    ]
+
+
 def rows():
     return (loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
-            + paged_rows() + paged_kernel_rows())
+            + paged_rows() + paged_kernel_rows() + mesh_rows()
+            + router_rows())

@@ -47,6 +47,19 @@ def build_sampling(args) -> SamplingParams | None:
                           top_p=args.top_p, seed=args.seed)
 
 
+def build_mesh(args):
+    """``--mesh RxC`` (or RxCxP) -> a canonical serving mesh; the
+    "model" (last) axis is the tensor-parallel degree. Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get more
+    than one CPU device."""
+    if not args.mesh:
+        return None
+    from repro.launch.mesh import make_serving_mesh
+
+    shape = tuple(int(d) for d in args.mesh.lower().split("x"))
+    return make_serving_mesh(shape)
+
+
 def build_plan(args, cfg):
     mode = ExecutionMode(args.execution_mode)
     if args.pipeline_depths:
@@ -66,7 +79,7 @@ def run_static(args, cfg, api, params, plan):
           f"batch={args.batch}, prompt={args.prompt_len}, gen={args.gen}, "
           f"plan={plan}, decode={args.decode}, sample={sample}")
     server = Server(cfg, params, max_len=args.prompt_len + args.gen,
-                    plan=plan)
+                    plan=plan, mesh=build_mesh(args))
     prompts = jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         cfg.vocab_size, dtype=jnp.int32,
@@ -98,6 +111,7 @@ def run_static(args, cfg, api, params, plan):
 
 def run_continuous(args, cfg, api, params, plan):
     sample = build_sampling(args)
+    mesh = build_mesh(args)
     max_len = args.prompt_len + args.gen
     if args.paged:
         # block_size must divide max_len; snap to the nearest divisor
@@ -108,15 +122,19 @@ def run_continuous(args, cfg, api, params, plan):
             cfg, params, num_slots=args.slots, max_len=max_len,
             block_size=bs, prefill_chunk=args.prefill_chunk,
             segment=args.segment, plan=plan, kernel=args.kernel,
+            mesh=mesh,
         )
         kind = f"paged (block_size={bs}, kernel={args.kernel})"
     else:
         sched = ContinuousBatchingServer(
             cfg, params, num_slots=args.slots, max_len=max_len,
             buckets=(args.prompt_len // 2, args.prompt_len),
-            segment=args.segment, plan=plan,
+            segment=args.segment, plan=plan, mesh=mesh,
         )
         kind = "slab"
+    if mesh is not None:
+        kind += (f", mesh={'x'.join(map(str, mesh.devices.shape))} "
+                 f"{tuple(mesh.axis_names)}")
     print(f"arch={cfg.arch_id} continuous [{kind}]: "
           f"requests={args.requests}, slots={args.slots}, "
           f"segment={args.segment}, plan={plan}, sample={sample}")
@@ -211,6 +229,10 @@ def main():
                     help="KV pool block size in token positions")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prefill-ahead chunk length (default block size)")
+    ap.add_argument("--mesh", default=None,
+                    help="serving mesh shape 'DATAxMODEL' (e.g. 1x2): "
+                         "continuous serving runs tensor-parallel over "
+                         "the mesh's 'model' axis via shard_map")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--segment", type=int, default=8)

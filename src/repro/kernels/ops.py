@@ -400,6 +400,15 @@ def paged_attention_gqa(
     layer planned ``FLEXIBLE_DMA`` also takes the gather route (the
     dense-view round-trip IS that mode's memory discipline), recorded as
     variant ``"dma"`` so per-layer plan choices stay observable.
+
+    Under tensor-parallel serving this runs INSIDE the shard_map body,
+    so ``h``/``hkv`` are per-shard locals (``H/tp``, ``Hkv/tp``) and the
+    pool leaves are the shard's own head slice. Eligibility is decided
+    on those locals — and since ``make_tp_spec`` only admits degrees
+    dividing both head counts, the group size ``h // hkv`` (and hence
+    kernel eligibility) is invariant across TP degrees: a config that
+    takes the kernel solo takes it on every shard, with no collectives
+    inside the kernel.
     """
     _, h, dh = q.shape
     _, hkv, bs, _ = k_pool.shape
@@ -442,6 +451,9 @@ def paged_attention_mla(
 
     Same dispatch contract as ``paged_attention_gqa``; the w_uk
     projection (before) and w_uv absorption (after) stay with the model.
+    Under TP only ``H`` is sharded (the latent pool replicates — it is
+    head-free), so eligibility, decided on ``kvr``/``rope``/``bs``
+    alone, is TP-degree-invariant by construction.
     """
     _, _, kvr = q_lat.shape
     rope = q_rope.shape[-1]

@@ -252,6 +252,12 @@ class BlockAllocator:
             self.counters.prefix_block_hits += 1
         return bid
 
+    def peek(self, key: bytes) -> int | None:
+        """Side-effect-free index probe: no counters, no LRU touch. The
+        replica router calls this across the whole fleet per request —
+        counting those probes would drown the real hit-rate stats."""
+        return self._index.get(key)
+
     def register(self, key: bytes, bid: int) -> int:
         """Hash-cons: publish ``bid`` as THE block for ``key``. If the
         key is already taken (a concurrent request staged the same
@@ -323,13 +329,17 @@ class KVPool:
     """
 
     def __init__(self, api, cfg, minfo, *, num_blocks: int,
-                 block_size: int) -> None:
+                 block_size: int, place=None) -> None:
         self.cfg = cfg
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
         self.batch_axes = probe_batch_axes(api, cfg, minfo, block_size)
         self.length_axes = probe_length_axes(api, cfg, minfo, num_blocks)
         self.cache = api.init_cache(cfg, minfo, num_blocks, block_size)
+        if place is not None:
+            # tensor-parallel serving: the pool's KV-head axes live on
+            # the mesh's "model" axis, block/position axes replicate
+            self.cache = place(self.cache)
 
     def copy_blocks(self, dst: list[int], src: list[int]) -> None:
         """Device copy pool[src] -> pool[dst] on every leaf (the
@@ -454,11 +464,11 @@ class PagedKVManager:
     """
 
     def __init__(self, api, cfg, minfo, *, num_blocks: int,
-                 block_size: int) -> None:
+                 block_size: int, place=None) -> None:
         self.block_size = int(block_size)
         self.alloc = BlockAllocator(num_blocks)
         self.pool = KVPool(api, cfg, minfo, num_blocks=num_blocks,
-                           block_size=block_size)
+                           block_size=block_size, place=place)
 
     @property
     def counters(self) -> PoolCounters:
@@ -466,6 +476,21 @@ class PagedKVManager:
 
     def blocks_needed(self, n_positions: int) -> int:
         return -(-int(n_positions) // self.block_size)
+
+    def prefix_affinity(self, prompt: np.ndarray) -> int:
+        """How many leading full ``prompt[:-1]`` blocks this pool already
+        holds — the router's steering signal. Pure ``peek``: no counter
+        or LRU side effects, so probing every replica per request leaves
+        the per-replica prefix stats untouched."""
+        bs = self.block_size
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_full = (int(prompt.size) - 1) // bs
+        hits = 0
+        for j in range(n_full):
+            if self.alloc.peek(prefix_key(prompt, (j + 1) * bs)) is None:
+                break
+            hits += 1
+        return hits
 
     def check_span(self, rb: RequestBlocks, end: int) -> None:
         """Host-side companion to the device write's ``mode="drop"``:

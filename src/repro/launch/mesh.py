@@ -13,6 +13,10 @@ Axes:
 "data" (and "pod") carry batch + FSDP parameter sharding; "model" is
 tensor/expert parallel. Cross-pod traffic is only the FSDP gradient
 reduce-scatter / param all-gather over ("pod","data") — DCN-friendly.
+
+Every mesh in the system uses exactly these axis names — ``mesh_info``
+asserts it, so a hand-rolled mesh with drifting names fails loudly at
+construction instead of silently missing the "model" TP specs.
 """
 
 from __future__ import annotations
@@ -20,22 +24,49 @@ from __future__ import annotations
 from repro.models.layers import MeshInfo
 from repro.parallel.compat import auto_mesh
 
+# the one canonical axis-name vocabulary, by mesh rank
+CANONICAL_AXES = {
+    2: ("data", "model"),
+    3: ("pod", "data", "model"),
+}
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return auto_mesh(shape, axes)
+    return auto_mesh(shape, CANONICAL_AXES[len(shape)])
 
 
 def mesh_info(mesh) -> MeshInfo:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return MeshInfo.from_axes(tuple(mesh.axis_names), sizes)
+    names = tuple(mesh.axis_names)
+    expected = CANONICAL_AXES.get(len(names))
+    if names != expected:
+        raise ValueError(
+            f"mesh axes {names} diverge from the canonical "
+            f"{expected or 'serving axis sets ' + str(tuple(CANONICAL_AXES.values()))}"
+            " — every sharded program in launch/ keys its specs off these"
+            " names"
+        )
+    sizes = dict(zip(names, mesh.devices.shape))
+    return MeshInfo.from_axes(names, sizes)
 
 
-def make_host_mesh():
+def make_host_mesh(*, multi_pod: bool = False):
     """Single-device mesh with the production axis names (all size 1) —
-    lets the same sharded step functions run on one CPU for smoke tests."""
-    return auto_mesh((1, 1), ("data", "model"))
+    lets the same sharded step functions run on one CPU for smoke tests.
+    ``multi_pod`` mirrors ``make_production_mesh``'s 3-axis name set so
+    both axis vocabularies smoke through the identical step programs."""
+    shape = (1, 1, 1) if multi_pod else (1, 1)
+    return auto_mesh(shape, CANONICAL_AXES[len(shape)])
+
+
+def make_serving_mesh(shape: tuple[int, ...]):
+    """A serving mesh of the given shape over the visible devices, with
+    the canonical axis names for its rank — ``(1, 2)`` is data=1 x
+    model=2 tensor parallel. Total size must match what the shape asks
+    for (``auto_mesh`` validates against the real device count)."""
+    if len(shape) not in CANONICAL_AXES:
+        raise ValueError(f"serving mesh must be rank 2 or 3, got {shape}")
+    return auto_mesh(tuple(shape), CANONICAL_AXES[len(shape)])
 
 
 def num_chips(mesh) -> int:

@@ -143,6 +143,54 @@ def analyze(compiled, *, chips: int, model_flops: float,
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel serving: analytic per-step collective model.
+# ---------------------------------------------------------------------------
+
+def tp_step_collectives(cfg, *, batch: int, tp: int, seq: int = 1,
+                        steps: int = 1) -> dict[str, float]:
+    """Modeled per-device collective bytes for ``steps`` iterations of
+    the tensor-parallel serve/segment step (``launch.serve``'s shard_map
+    program), with the same accounting conventions as
+    ``collective_bytes``/``hlo_analysis.analyze_hlo`` (result-shape
+    bytes per device x ``ALGO_FACTOR``), so model and measurement
+    subtract to ~0 on the compiled HLO.
+
+    Per decode step the Megatron partition emits exactly:
+
+      * one fp32 all-reduce of the (B, S, D) embedding partial — the
+        vocab-row-sharded lookup accumulates in fp32 before the cast,
+        keeping the (1,1)-mesh path bit-exact;
+      * per layer, TWO activation-dtype all-reduces of (B, S, D): the
+        attention output projection's row-parallel partial and the
+        MLP / MoE down-projection's (MoE folds routed + shared expert
+        partials into ONE psum);
+      * one fp32 all-gather assembling the (B, S, V_padded) logits from
+        the vocab-column-sharded unembed (result bytes = the full
+        gathered buffer, as the parsers count them).
+
+    The KV cache never moves: heads are model-sharded, so paged reads /
+    writes (and the Pallas kernel's table walks) are shard-local. At
+    ``tp <= 1`` every collective degenerates to identity and the model
+    returns zeros.
+    """
+    import jax.numpy as jnp
+
+    from repro.models.layers import padded_vocab
+
+    out = {k: 0.0 for k in _COLL_KINDS}
+    if tp <= 1:
+        return out
+    act_bytes = jnp.dtype(cfg.dtype).itemsize
+    tok = batch * seq
+    ar = tok * cfg.d_model * 4                      # embed partial, fp32
+    ar += cfg.num_layers * 2 * tok * cfg.d_model * act_bytes
+    ag = tok * padded_vocab(cfg.vocab_size) * 4     # gathered logits, fp32
+    out["all-reduce"] = ar * ALGO_FACTOR["all-reduce"] * steps
+    out["all-gather"] = ag * ALGO_FACTOR["all-gather"] * steps
+    return out
+
+
+# ---------------------------------------------------------------------------
 # MODEL_FLOPS helpers.
 # ---------------------------------------------------------------------------
 

@@ -91,6 +91,7 @@ from repro.launch.serve import (
     PER_LAYER_PLAN_FAMILIES,
     make_prefill_step,
     make_serve_step,
+    make_tp_spec,
 )
 from repro.models import layers as L
 from repro.models.registry import get_model
@@ -254,10 +255,17 @@ class ContinuousBatchingServer:
         self.params = params
         self.plan = plan
         self.mesh = mesh
-        self.minfo = (
-            L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
-        )
         self.api = get_model(cfg)
+        # mesh => tensor-parallel serving: every step program below runs
+        # under shard_map with params/pool partitioned on "model"
+        self.tp = make_tp_spec(cfg, self.api, mesh) if mesh is not None \
+            else None
+        self.minfo = self.tp.minfo if self.tp is not None else L.HOST
+        # folded into EVERY executable-cache key by _compiled: a server
+        # on a different mesh (or none) can never reuse a stale program
+        self._mesh_key = self.tp.mesh_key if self.tp is not None else None
+        if self.tp is not None:
+            self.params = self.tp.place_params(params)
         if not self.api.rowwise_decode_pos:
             raise ValueError(
                 f"family {cfg.family!r} decode_step takes scalar positions "
@@ -294,11 +302,18 @@ class ContinuousBatchingServer:
         # THE slot cache: allocated once, lives as long as the server.
         self.cache = self.api.init_cache(self.cfg, self.minfo,
                                          self.num_slots, self.max_len)
+        if self.tp is not None:
+            # KV heads live on the model axis; everything else replicates
+            self.cache = self.tp.place_cache(self.cache)
 
     # -- executable cache --------------------------------------------------
     def _compiled(self, key: tuple, builder: Callable[[], Callable]):
-        """(kind, shape-key..., plan) -> compiled program. Repeat traffic
-        hits the cache; a new bucket or plan is a recorded compile."""
+        """(kind, shape-key..., plan, mesh) -> compiled program. Repeat
+        traffic hits the cache; a new bucket or plan is a recorded
+        compile. The (mesh shape, axis names) tail means a server
+        rebuilt on a different mesh can never replay a program whose
+        shard_map was specialized to another device grid."""
+        key = key + (self._mesh_key,)
         fn = self._exec.get(key)
         if fn is None:
             fn = self._exec[key] = builder()
@@ -347,9 +362,9 @@ class ContinuousBatchingServer:
         ``kpos <= pos`` read before it is ever visible (the same
         argument as prompt bucketing)."""
         prefill_step = make_prefill_step(self.cfg, self.api, self.minfo,
-                                         self.mesh)
+                                         self.mesh, tp=self.tp)
         serve_step = make_serve_step(self.cfg, self.api, self.minfo,
-                                     self.mesh)
+                                     self.mesh, tp=self.tp)
         axes = self.axes
 
         def admit(params, padded, full, prev_toks, toks, pos, slots,
@@ -523,7 +538,8 @@ class ContinuousBatchingServer:
         matmuls stay dense over slots — no per-slot vmap into batch-1
         programs.
         """
-        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh,
+                               tp=self.tp)
         max_pos = self.max_len - 1
 
         def segment(params, toks, cache, pos, sample=None):
@@ -658,6 +674,12 @@ class ContinuousBatchingServer:
     def _has_work(self) -> bool:
         return bool(self.pending) or any(not s.free for s in self.slots)
 
+    @property
+    def load(self) -> int:
+        """Outstanding requests on this server: queued + occupying a
+        slot. The replica router's least-loaded signal."""
+        return len(self.pending) + sum(not s.free for s in self.slots)
+
     def run(self) -> list[FinishedRequest]:
         """Drain every pending + active request; returns all finished
         requests (ordered by rid). The whole drain is enqueued without
@@ -779,6 +801,7 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self.mgr = kvp.PagedKVManager(
             self.api, self.cfg, self.minfo,
             num_blocks=nb, block_size=self.block_size,
+            place=self.tp.place_cache if self.tp is not None else None,
         )
         self.cache = None  # the pool replaces the slab entirely
         self.stage_ahead = (self._stage_ahead_arg
@@ -806,6 +829,10 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
     def _has_work(self) -> bool:
         return super()._has_work() or bool(self._staging)
 
+    @property
+    def load(self) -> int:
+        return super().load + len(self._staging)
+
     def submit(self, prompt, max_new_tokens: int,
                sample: SamplingParams | None = None) -> int:
         prompt_arr = np.asarray(prompt, np.int32).reshape(-1)
@@ -823,7 +850,8 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
     # -- chunked prefill-ahead (staging) -----------------------------------
     def _stage_fn(self) -> Callable:
         return jax.jit(
-            make_prefill_step(self.cfg, self.api, self.minfo, self.mesh),
+            make_prefill_step(self.cfg, self.api, self.minfo, self.mesh,
+                              tp=self.tp),
             donate_argnums=(2,),
         )
 
@@ -941,7 +969,8 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         the end. Plus the admission token merge: newly admitted rows
         enter the scan at their correction position, so one program
         covers admit + decode — no separate admission dispatch."""
-        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh,
+                               tp=self.tp)
         max_pos = self.max_len - 1
         baxes, laxes = self.mgr.pool.batch_axes, self.mgr.pool.length_axes
 
@@ -979,7 +1008,8 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         already sliced to the active frontier by ``_advance``, so the
         attention width tracks the longest live prefix, not
         ``max_len``. Admission merge as in the slab segment."""
-        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh)
+        step = make_serve_step(self.cfg, self.api, self.minfo, self.mesh,
+                               tp=self.tp)
         max_pos = self.max_len - 1
 
         def segment(params, toks, pool, pos, bt, admit_slots, admit_toks,

@@ -35,6 +35,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from repro.configs.base import ModelConfig
 from repro.core.modes import (
     ExecutionMode,
@@ -47,6 +49,8 @@ from repro.launch import sampling
 from repro.launch.sampling import SamplingParams
 from repro.models import layers as L
 from repro.models.registry import ModelApi, get_model
+from repro.parallel import tp as tplib
+from repro.parallel.compat import shard_map as _shard_map
 
 Array = jax.Array
 
@@ -65,7 +69,114 @@ _CACHE_REUSE_FAMILIES = ("dense", "moe", "vlm")
 PER_LAYER_PLAN_FAMILIES = ("dense", "moe")
 
 
-def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
+# ---------------------------------------------------------------------------
+# Tensor-parallel serving: the whole step under ONE shard_map.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TpSpec:
+    """Everything the step builders need to shard_map a serve/prefill
+    step over the mesh's "model" axis.
+
+    The partitioning is classic Megatron TP driven entirely by the
+    model's own ParamSpecs: every param/cache dim whose pspec mentions
+    "model" is split (column-parallel wq/wk/wv/w_up/w_gate and the
+    vocab-row-sharded embed table, row-parallel wo/w_down, the KV pool's
+    head axis, expert stacks over experts); everything else — tokens,
+    positions, block tables, per-row lengths, sampling state, MLA latent
+    caches — is replicated host metadata. Inside the shard_map body the
+    ambient ``parallel.tp`` context makes the model functions psum their
+    row-parallel partials and all-gather the logits once per step.
+
+    ``cfg_local`` is the per-shard view: ONLY the head counts change —
+    all other shapes the forward pass derives from the (already sliced)
+    arrays themselves, and global quantities (vocab_size for the padded-
+    logit mask, num_experts for routing/capacity) must stay global.
+    """
+
+    mesh: Any
+    axis: str                  # "model"
+    size: int                  # shard count on that axis
+    cfg_local: ModelConfig
+    minfo: L.MeshInfo          # mesh axes WITH sizes (drives spec choices)
+    param_pspecs: Any          # P tree matching the params tree
+    cache_pspecs: Any          # P tree matching the cache/pool tree
+
+    @property
+    def mesh_key(self) -> tuple:
+        """Hashable mesh identity for executable-cache keys."""
+        return (tuple(self.mesh.devices.shape), tuple(self.mesh.axis_names))
+
+    def param_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_pspecs)
+
+    def cache_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.cache_pspecs)
+
+    def place_params(self, params):
+        return jax.device_put(params, self.param_shardings())
+
+    def place_cache(self, cache):
+        return jax.device_put(cache, self.cache_shardings())
+
+
+def make_tp_spec(cfg: ModelConfig, api: ModelApi, mesh) -> TpSpec:
+    """Validate cfg against the mesh and build the serving TpSpec.
+
+    Head-axis sharding only: num_heads (and num_kv_heads for GQA) must
+    divide by the model-axis size — the head-dim fallback some cache
+    specs allow under GSPMD is excluded here because the paged kernels
+    and the absorbed-MLA einsums want whole heads per shard. Every
+    model-sharded param dim is checked for divisibility so a bad
+    (config, mesh) pairing fails at construction, not inside XLA.
+    """
+    from repro.launch.mesh import mesh_info
+
+    minfo = mesh_info(mesh)  # asserts the canonical axis names
+    size = minfo.size("model")
+    problems = []
+    if cfg.num_heads % size:
+        problems.append(f"num_heads {cfg.num_heads} % tp {size} != 0")
+    if not cfg.use_mla and cfg.num_kv_heads % size:
+        problems.append(f"num_kv_heads {cfg.num_kv_heads} % tp {size} != 0")
+    specs = api.param_specs(cfg, minfo)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs, is_leaf=L.is_spec)
+    for path, s in flat:
+        pspec = tplib.model_only_pspec(s.pspec)
+        for dim, entry in zip(s.shape, tuple(pspec)):
+            if entry == "model" and dim % size:
+                problems.append(
+                    f"param{jax.tree_util.keystr(path)}: model-sharded "
+                    f"dim {dim} % tp {size} != 0"
+                )
+    if problems:
+        raise ValueError(
+            f"config {cfg.arch_id!r} cannot tensor-parallel over "
+            f"{dict(minfo.sizes)}: " + "; ".join(problems)
+        )
+    param_pspecs = jax.tree.map(
+        lambda s: tplib.model_only_pspec(s.pspec), specs, is_leaf=L.is_spec)
+    # cache pspecs depend only on (cfg, minfo), never on batch/length —
+    # probe with nominal sizes; the same tree serves slab caches and the
+    # paged pool (identical leaf structure, batch axis = blocks).
+    cache_pspecs = jax.tree.map(
+        lambda s: tplib.model_only_pspec(s.pspec),
+        api.cache_specs(cfg, minfo, 1, 8), is_leaf=L.is_spec)
+    cfg_local = cfg
+    if size > 1:
+        kw = {"num_heads": cfg.num_heads // size}
+        if not cfg.use_mla:
+            kw["num_kv_heads"] = cfg.num_kv_heads // size
+        cfg_local = dataclasses.replace(cfg, **kw)
+    return TpSpec(mesh=mesh, axis="model", size=size, cfg_local=cfg_local,
+                  minfo=minfo, param_pspecs=param_pspecs,
+                  cache_pspecs=cache_pspecs)
+
+
+def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh,
+                    tp: TpSpec | None = None):
     """decode one token: (params, tokens(B,1), cache, pos[, memory, sample]).
 
     ``pos`` is scalar (whole batch at one length) or per-row ``(B,)``
@@ -78,9 +189,49 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     PLACE: writes land through the tables and attention walks them
     directly (``kernels.ops.paged_attention_*``) — the paged
     scheduler's slab-free segment path.
+
+    ``tp`` switches the step to manual tensor parallelism: the WHOLE
+    body runs under one ``shard_map`` over the mesh's "model" axis with
+    params/cache partitioned per ``TpSpec`` and everything else
+    replicated, the ambient ``parallel.tp`` context supplying the psums
+    and the single per-step logit all-gather. The Pallas paged kernel
+    traces per-shard unmodified (it sees a dense local head slice). The
+    inner api call gets ``mesh=None``/no sharding hints —
+    ``with_sharding_constraint`` belongs to the auto-partitioned
+    (GSPMD) route, not inside a manual region.
     """
 
     from repro.parallel.hints import sharding_hints
+
+    if tp is not None:
+        cfg_l, minfo_l, rep = tp.cfg_local, tp.minfo, P()
+
+        def tp_body(params, tokens, cache, pos, memory, sample,
+                    block_tables):
+            kw = {} if block_tables is None else {"block_tables": block_tables}
+            with tplib.tensor_parallel(tp.axis, tp.size):
+                logits, cache = api.decode_step(
+                    params, cfg_l, tokens, cache, pos, minfo=minfo_l,
+                    mesh=None, memory=memory, **kw,
+                )
+            logits = L.mask_pad_logits(logits, cfg.vocab_size)
+            next_tok = sampling.sample_tokens(logits[:, -1, :], sample,
+                                              pos + 1)
+            return next_tok[:, None], cache
+
+        def tp_serve_step(params, tokens, cache, pos, memory=None,
+                          sample=None, block_tables=None):
+            fn = _shard_map(
+                tp_body, mesh=tp.mesh,
+                in_specs=(tp.param_pspecs, rep, tp.cache_pspecs, rep, rep,
+                          rep, rep),
+                out_specs=(rep, tp.cache_pspecs),
+                check_vma=False,
+            )
+            return fn(params, tokens, cache, pos, memory, sample,
+                      block_tables)
+
+        return tp_serve_step
 
     def serve_step(params, tokens, cache, pos, memory=None, sample=None,
                    block_tables=None):
@@ -97,7 +248,8 @@ def make_serve_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     return serve_step
 
 
-def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
+def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
+                      mesh, tp: TpSpec | None = None):
     """Build the jit-able prompt-KV writer.
 
     ``cache_pos`` (scalar or per-row ``(B,)``) makes the step *chunked*:
@@ -107,8 +259,44 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
     for slab caches). ``block_tables`` routes the writes through the
     paged pool. Both default off, keeping the original signature/HLO for
     every existing caller (incl. non-transformer families that take
-    neither kwarg)."""
+    neither kwarg). ``tp`` shard_maps the step exactly like
+    ``make_serve_step`` — multi-token rowwise staging chunks write their
+    KV through the same partitioned pool."""
     from repro.parallel.hints import sharding_hints
+
+    if tp is not None:
+        cfg_l, minfo_l, rep = tp.cfg_local, tp.minfo, P()
+
+        def tp_body(params, batch, cache, sample, cache_pos, block_tables):
+            kw = {}
+            if cache_pos is not None:
+                kw["cache_pos"] = cache_pos
+            if block_tables is not None:
+                kw["block_tables"] = block_tables
+            with tplib.tensor_parallel(tp.axis, tp.size):
+                logits, cache = api.prefill(
+                    params, cfg_l, batch, cache, minfo=minfo_l, mesh=None,
+                    **kw,
+                )
+            logits = L.mask_pad_logits(logits, cfg.vocab_size)
+            idx = batch["tokens"].shape[1]
+            if cache_pos is not None:
+                idx = cache_pos + idx
+            next_tok = sampling.sample_tokens(logits[:, -1, :], sample, idx)
+            return next_tok[:, None], cache
+
+        def tp_prefill_step(params, batch, cache, sample=None,
+                            cache_pos=None, block_tables=None):
+            fn = _shard_map(
+                tp_body, mesh=tp.mesh,
+                in_specs=(tp.param_pspecs, rep, tp.cache_pspecs, rep, rep,
+                          rep),
+                out_specs=(rep, tp.cache_pspecs),
+                check_vma=False,
+            )
+            return fn(params, batch, cache, sample, cache_pos, block_tables)
+
+        return tp_prefill_step
 
     def prefill_step(params, batch, cache, sample=None, cache_pos=None,
                      block_tables=None):
@@ -134,7 +322,8 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo, mesh):
 
 
 def make_decode_scan(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
-                     mesh, num_steps: int) -> Callable:
+                     mesh, num_steps: int,
+                     tp: TpSpec | None = None) -> Callable:
     """``num_steps`` decode steps as one compiled program.
 
     Returns ``decode_scan(params, tok, cache, pos, memory=None,
@@ -145,8 +334,11 @@ def make_decode_scan(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
     — no per-token host round-trip, no restacked ys. Sampling keys are
     folded from (request key, token position) inside the step, so the
     scan needs no PRNG carry and matches the loop decode bit-for-bit.
+    Under ``tp`` the scanned step is the shard_mapped one; the sharded
+    cache rides the carry with matched in/out specs, so no per-step
+    resharding ever appears in the program.
     """
-    step = make_serve_step(cfg, api, minfo, mesh)
+    step = make_serve_step(cfg, api, minfo, mesh, tp=tp)
 
     def decode_scan(params, tok, cache, pos, memory=None, sample=None):
         b = tok.shape[0]
@@ -185,9 +377,7 @@ class Server:
                  ) -> None:
         self.params = params
         self.mesh = mesh
-        self.minfo = (
-            L.MeshInfo.from_axes(tuple(mesh.axis_names)) if mesh else L.HOST
-        )
+        self.minfo = L.HOST
         self.max_len = max_len
         if plan is not None and execution_mode is not None:
             raise ValueError("pass either plan= or execution_mode=, not both")
@@ -226,18 +416,27 @@ class Server:
         self.api = get_model(cfg)
         self.plan = plan
         self.execution_mode = base.mode
+        # mesh => tensor-parallel serving: the step programs run under
+        # shard_map with params/caches partitioned on the "model" axis
+        self.tp = make_tp_spec(cfg, self.api, mesh) if mesh is not None \
+            else None
+        if self.tp is not None:
+            self.minfo = self.tp.minfo
+            self.params = self.tp.place_params(params)
+        self._mesh_key = self.tp.mesh_key if self.tp is not None else None
         self._prefill = jax.jit(
-            make_prefill_step(cfg, self.api, self.minfo, mesh),
+            make_prefill_step(cfg, self.api, self.minfo, mesh, tp=self.tp),
             donate_argnums=(2,),
         )
         self._decode = jax.jit(
-            make_serve_step(cfg, self.api, self.minfo, mesh),
+            make_serve_step(cfg, self.api, self.minfo, mesh, tp=self.tp),
             donate_argnums=(2,),
         )
-        # executable cache: one compiled decode program per step count
-        # (jit itself re-specializes on batch); repeat traffic of the
-        # same (batch, gen) shape never re-traces.
-        self._decode_scans: dict[int, Callable] = {}
+        # executable cache: one compiled decode program per (step count,
+        # mesh identity) — jit itself re-specializes on batch; repeat
+        # traffic of the same (batch, gen) shape never re-traces, and a
+        # server on a different mesh can never reuse a stale program.
+        self._decode_scans: dict[tuple, Callable] = {}
         self._cache_pool: dict[int, Any] = {}
 
     # -- KV-cache pooling --------------------------------------------------
@@ -249,21 +448,23 @@ class Server:
             pooled = self._cache_pool.pop(b, None)
             if pooled is not None:
                 return pooled
-        return self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
+        cache = self.api.init_cache(self.cfg, self.minfo, b, self.max_len)
+        return self.tp.place_cache(cache) if self.tp is not None else cache
 
     def _return_cache(self, b: int, cache) -> None:
         if self.cfg.family in _CACHE_REUSE_FAMILIES:
             self._cache_pool[b] = cache
 
     def _decode_scan(self, num_steps: int) -> Callable:
-        fn = self._decode_scans.get(num_steps)
+        key = (num_steps, self._mesh_key)
+        fn = self._decode_scans.get(key)
         if fn is None:
             fn = jax.jit(
                 make_decode_scan(self.cfg, self.api, self.minfo, self.mesh,
-                                 num_steps),
+                                 num_steps, tp=self.tp),
                 donate_argnums=(2,),
             )
-            self._decode_scans[num_steps] = fn
+            self._decode_scans[key] = fn
         return fn
 
     def generate(self, prompts: Array, num_tokens: int,

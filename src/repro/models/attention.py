@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
+from repro.parallel import tp
 from repro.parallel.hints import constrain
 from repro.models.layers import (
     MeshInfo,
@@ -438,7 +439,7 @@ def gqa_attention(
                 and jax.default_backend() != "tpu",
             )
             out = ctx.reshape(b, 1, h * dh)
-            return linear(out, params["wo"]), new_cache
+            return tp.psum_partial(linear(out, params["wo"])), new_cache
         if block_tables is not None:
             # prefill chunks (s > 1): dense (B, Hkv, nb*bs, Dh) view
             # gathered through the block table; junk in padded/unwritten
@@ -467,7 +468,7 @@ def gqa_attention(
     out = _attend(q, k, v, causal=causal and memory is None, cfg=cfg,
                   offset=offset)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
-    return linear(out, params["wo"]), new_cache
+    return tp.psum_partial(linear(out, params["wo"])), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +595,7 @@ def mla_attention(
         w_uv = params["w_uv"].reshape(cfg.kv_lora_rank, h, vdh)
         out = jnp.einsum("bshr,rhv->bshv", ctx_lat, w_uv.astype(jnp.float32))
         out = out.reshape(b, s, h * vdh).astype(cfg.dtype)
-        return linear(out, params["wo"]), new_cache
+        return tp.psum_partial(linear(out, params["wo"])), new_cache
 
     t = c_kv_full.shape[1]
 
@@ -611,7 +612,7 @@ def mla_attention(
         if s > CHUNK_Q and s % CHUNK_Q == 0 else \
         _attend_direct(q_full, k_full, vv, 1, scale, True, offset)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * vdh)
-    return linear(out, params["wo"]), new_cache
+    return tp.psum_partial(linear(out, params["wo"])), new_cache
 
 
 def attention(params, cfg, x, positions, **kw):

@@ -238,18 +238,37 @@ def embed_lookup(table: Array, tokens: Array, *, sharded: bool = False) -> Array
     turns it into a local contraction + psum instead of the 'involuntary
     full rematerialization' (whole-table all-gather) a sharded gather
     triggers. Unsharded path: plain take().
+
+    Under ambient TP (manual shard_map) the local table holds vocab rows
+    [offset, offset + V_local): ids are rebased, off-shard ids one-hot to
+    all-zero rows, and the fp32 partials are psum'd BEFORE the dtype
+    cast — summing exact zeros with one exact row keeps the lookup
+    bit-identical to the unsharded take() at any shard count.
     """
     if not sharded:
         return jnp.take(table, tokens, axis=0)
-    onehot = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+    from repro.parallel import tp
+
+    ids = tokens - tp.shard_offset(table.shape[0]) \
+        if tp.active() else tokens
+    onehot = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
     out = jnp.einsum("...v,vd->...d", onehot, table,
                      preferred_element_type=jnp.float32)
-    return out.astype(table.dtype)
+    return tp.psum_partial(out).astype(table.dtype)
 
 
 def unembed(x: Array, table: Array) -> Array:
-    """Logits = x @ E^T (tied); fp32 out; width = padded vocab."""
-    return jnp.dot(x, table.T, preferred_element_type=jnp.float32)
+    """Logits = x @ E^T (tied); fp32 out; width = padded vocab.
+
+    Under ambient TP the table holds a vocab-row shard, so the local dot
+    yields a column slice of the logits — exact per column, the
+    contraction dim d is never split — which the tiled all-gather
+    reassembles to full width once per step (identity outside TP).
+    """
+    from repro.parallel import tp
+
+    return tp.all_gather_cols(
+        jnp.dot(x, table.T, preferred_element_type=jnp.float32))
 
 
 def mask_pad_logits(logits: Array, vocab: int) -> Array:

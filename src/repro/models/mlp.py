@@ -19,6 +19,7 @@ from repro.configs.base import ModelConfig
 from repro.core.function_table import DEFAULT_TABLE, FunctionTable
 from repro.kernels import ops as kops
 from repro.models.layers import MeshInfo, ParamSpec, _maybe, linear
+from repro.parallel import tp
 
 Array = jax.Array
 
@@ -50,6 +51,12 @@ def mlp(
     axis — rows are independent for every op here, so the fused kernels
     serve decode/prefill shapes too (PR 3: before this, serving never
     reached the kernels and per-layer plans had nothing to dispatch to).
+
+    Under ambient TP w_up/w_gate are column-parallel and w_down is
+    row-parallel, so every exit below returns a PARTIAL down-projection
+    over the local d_ff shard — psum'd on the model axis (identity
+    outside TP). The sidebar kernels run per-shard unmodified: they only
+    ever see the local (d, f_local)/(f_local, d) weight slices.
     """
     act_name = activation or cfg.activation
     act = table.lookup(act_name)
@@ -63,15 +70,16 @@ def mlp(
                 params["w_down"], act_name, table=table,
                 interpret=jax.default_backend() != "tpu",
             )
-            return y.reshape(x.shape)
+            return tp.psum_partial(y.reshape(x.shape))
         g = act(linear(x, params["w_gate"]))          # flexible (VPU)
         u = linear(x, params["w_up"])                 # static  (MXU)
-        return linear((g * u).astype(x.dtype), params["w_down"])
+        return tp.psum_partial(
+            linear((g * u).astype(x.dtype), params["w_down"]))
     if kernel_ok:
         y = kops.sidebar_mlp(
             x.reshape(rows, d), params["w_up"], params["w_down"], act_name,
             table=table, interpret=jax.default_backend() != "tpu",
         )
-        return y.reshape(x.shape)
+        return tp.psum_partial(y.reshape(x.shape))
     h = act(linear(x, params["w_up"]))
-    return linear(h.astype(x.dtype), params["w_down"])
+    return tp.psum_partial(linear(h.astype(x.dtype), params["w_down"]))

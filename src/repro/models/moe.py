@@ -31,6 +31,7 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import MeshInfo, ParamSpec, _maybe
+from repro.parallel import tp
 
 Array = jax.Array
 
@@ -119,7 +120,20 @@ def moe(
         and "model" in minfo.axis_names
         and cfg.moe_dispatch == "shard_map"
     )
-    if not use_shard_map:
+    if tp.active() is not None:
+        # Already inside a manual shard_map (TP serving): the router is
+        # replicated so routing decisions are GLOBAL expert ids, while
+        # the expert stack is sharded over the model axis — run the
+        # local experts at this shard's id offset and leave y a PARTIAL
+        # sum. The shared-expert slice below adds its own partial and
+        # ONE merged psum at the end reassembles the layer output.
+        weights, ids = _route(x2, params["router"], cfg)
+        e_local = params["w_gate"].shape[0]
+        y = _local_expert_pass(
+            x2, weights, ids, params["w_gate"], params["w_up"],
+            params["w_down"], tp.shard_offset(e_local), cfg, act,
+        )
+    elif not use_shard_map:
         weights, ids = _route(x2, params["router"], cfg)
         y = _local_expert_pass(
             x2, weights, ids, params["w_gate"], params["w_up"],
@@ -165,4 +179,4 @@ def moe(
         y = y + jnp.dot((g * u).astype(x2.dtype), sh["w_down"],
                         preferred_element_type=jnp.float32).astype(y.dtype)
 
-    return y.reshape(b, s, d).astype(x.dtype)
+    return tp.psum_partial(y).reshape(b, s, d).astype(x.dtype)

@@ -1,0 +1,104 @@
+"""Ambient tensor-parallel context for shard_map'ped step programs.
+
+The serving TP design wraps the WHOLE serve/prefill step in one
+``shard_map`` (see ``launch/serve.make_tp_spec``) instead of sprinkling
+inner shard_maps through the model code. Inside that manual region the
+model functions need to know (a) that partial results must be psum'd
+over the model axis and (b) which vocab/expert rows the local shard
+owns. Threading a "tp" argument through every layer signature would
+touch every model family for a serving-only concern, so — exactly like
+the execution-plan state in ``kernels/ops`` and the sharding hints in
+``parallel/hints`` — the context rides a thread-local that is active
+while the shard_map body is being traced.
+
+Every helper is an identity when no context is installed, so the model
+code stays single-source: the same ``mlp()``/``attention()`` body runs
+un-sharded, under GSPMD auto-partitioning (training), and under manual
+shard_map (TP serving). The context is installed even for a size-1
+"model" axis (a ``(1, 1)`` host mesh): a size-1 psum is an exact
+identity, which is what makes the host-mesh serving path bit-exact
+against the solo server while compiling the very same collective
+program shape the multi-device mesh runs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+@dataclass(frozen=True)
+class TpContext:
+    axis: str  # mesh axis name the step is shard_mapped over ("model")
+    size: int  # number of shards on that axis
+
+
+def active() -> TpContext | None:
+    """The installed TP context, or None outside shard_map serving."""
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def tensor_parallel(axis: str, size: int):
+    """Install the ambient TP context while tracing a shard_map body."""
+    prev = active()
+    _STATE.ctx = TpContext(axis, int(size))
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def psum_partial(x):
+    """Sum a row-parallel partial over the model axis (identity when no
+    TP context is active — the single-source-model contract)."""
+    ctx = active()
+    if ctx is None:
+        return x
+    return jax.lax.psum(x, ctx.axis)
+
+
+def all_gather_cols(x):
+    """Gather column-parallel shards along the LAST dim (tiled), so each
+    shard leaves with the full-width array. Identity outside TP."""
+    ctx = active()
+    if ctx is None:
+        return x
+    return jax.lax.all_gather(x, ctx.axis, axis=x.ndim - 1, tiled=True)
+
+
+def shard_offset(n_local):
+    """Global offset of this shard's slice given its local extent
+    (vocab rows, expert ids, ...). 0 outside TP."""
+    ctx = active()
+    if ctx is None:
+        return 0
+    return jax.lax.axis_index(ctx.axis) * n_local
+
+
+def model_only_pspec(pspec) -> P:
+    """Project a param/cache PartitionSpec onto the model axis only.
+
+    Serving TP shards exactly one thing — the head/latent ("model")
+    axis; batch/fsdp entries from the training-oriented specs are
+    dropped (those dims stay replicated across the serving mesh's data
+    axis). Tuple entries like ``("pod", "data")`` reduce to their
+    "model" member or None.
+    """
+    entries = []
+    for e in tuple(pspec):
+        if e == "model":
+            entries.append("model")
+        elif isinstance(e, (tuple, list)) and "model" in e:
+            entries.append("model")
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

@@ -56,6 +56,38 @@ def test_committed_bench_records_the_pr6_acceptance_numbers():
     assert ratio >= 1.0
 
 
+def test_committed_bench_records_the_pr7_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    match = next(v for n, v in by_name.items()
+                 if n.endswith("tp_tokens_match"))
+    assert match == 1
+    affinity = next(v for n, v in by_name.items()
+                    if n.endswith("router_affinity_over_random"))
+    assert affinity >= 1.0
+    hit = next(v for n, v in by_name.items()
+               if n.endswith("fleet_prefix_hit_rate"))
+    assert 0 < hit <= 1
+    for suffix in ("tp2/tok_s", "tp_solo/tok_s"):
+        v = next(v for n, v in by_name.items() if n.endswith(suffix))
+        assert v > 0
+
+
+def test_tp_token_mismatch_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("tp_tokens_match"):
+            r["derived"] = 0.0
+    assert any("pure parallelization" in e for e in check(rows))
+
+
+def test_regressed_router_affinity_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("router_affinity_over_random"):
+            r["derived"] = 0.7
+    assert any("steering" in e for e in check(rows))
+
+
 def test_regressed_paged_kernel_ratio_is_flagged():
     rows = _rows()
     for r in rows:

@@ -49,11 +49,11 @@ def test_scan_decode_matches_loop(arch):
         err_msg=f"{arch}: scan decode diverged from the loop",
     )
     assert scan.generated == 12 and scan.prompt_len == 8
-    # the scan executable is cached per step count: a second call with
-    # the same (batch, gen) must reuse it
-    assert set(server._decode_scans) == {11}
+    # the scan executable is cached per (step count, mesh): a second
+    # call with the same (batch, gen) must reuse it (meshless => None)
+    assert set(server._decode_scans) == {(11, None)}
     server.generate(prompts, 12, decode="scan")
-    assert set(server._decode_scans) == {11}
+    assert set(server._decode_scans) == {(11, None)}
 
 
 def test_scan_decode_single_token_and_cache_pool():
