@@ -45,6 +45,12 @@ REQUIRED_ROWS = (
     "fleet_prefix_hit_rate",
     "fleet_random_hit_rate",
     "router_affinity_over_random",
+    "overload/goodput_edf_tok_s",
+    "overload/goodput_fifo_tok_s",
+    "goodput_2x_over_fifo",
+    "overload/high_ttft_p95_edf_s",
+    "overload/preemptions",
+    "preempt_bitexact",
 )
 # rows whose derived value is a throughput and must be a positive number
 TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
@@ -132,6 +138,28 @@ def check(records: list) -> list[str]:
                 f"least match random spray on shared-prefix waves "
                 f"(>= 1.0), got {v!r} — the router stopped steering "
                 "requests to the replica holding their prefix blocks"
+            )
+    goodput = by_suffix.get("goodput_2x_over_fifo")
+    if goodput is not None:
+        v = goodput["derived"]
+        if not isinstance(v, (int, float)) or not v >= 1.0:
+            errors.append(
+                f"{goodput['name']}: EDF admission + preemption must at "
+                f"least match FIFO goodput at 2x oversubscription "
+                f"(>= 1.0), got {v!r} — high-priority requests stopped "
+                "jumping the backlog (or preemption got expensive enough "
+                "to eat the SLO wins)"
+            )
+    bitexact = by_suffix.get("preempt_bitexact")
+    if bitexact is not None:
+        v = bitexact["derived"]
+        if v != 1:
+            errors.append(
+                f"{bitexact['name']}: a preempted-then-restored drain "
+                f"must be token-identical to an unpressured one (== 1), "
+                f"got {v!r} — the spill/restore round-trip (KV copy, "
+                "position-keyed PRNG, resume splice) stopped being "
+                "lossless"
             )
     paged = by_suffix.get("paged_over_sync_admission")
     if paged is not None:

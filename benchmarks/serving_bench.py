@@ -592,7 +592,178 @@ def router_rows():
     ]
 
 
+# overload: the fleet at 2x oversubscription. A low-priority backlog
+# saturates every slot on a pool sized so two fully grown spans fill it
+# (lazy allocation's pressure case), then high-priority requests land
+# MID-DRAIN with a TTFT target. Under EDF the arrival stages by
+# reclaiming from strictly worse holders — spilling an active low to
+# the sidebar region — and admits within a boundary or two; under FIFO
+# it waits out the whole backlog. Goodput counts only SLO-compliant
+# tokens (best-effort lows carry no target, so they always comply);
+# the EDF/FIFO ratio measures the scheduling mechanism, not host
+# timing — both arms run identical seeded traffic on identical fleets.
+# preempt_bitexact is the safety side of the same coin: a forced
+# preempt/restore drain must be token-identical to an unpressured one.
+OVR_REPLICAS, OVR_SLOTS, OVR_BLOCKS = 4, 2, 13  # 12 allocatable blocks
+OVR_LOW, OVR_HIGH = 16, 8           # 16 lows on 8 slots = 2x oversub
+OVR_GEN_LOW, OVR_GEN_HIGH = 48, 24  # highs are the long SLO-bearing work
+OVR_HEAD_STEPS = 9                  # lows grown & pool full, THEN highs
+OVR_MAXLEN = 64
+
+
+def _overload_traffic(cfg):
+    rng = np.random.RandomState(11)
+    low = [(rng.randint(0, cfg.vocab_size,
+                        size=int(rng.randint(5, 9))).astype(np.int32),
+            OVR_GEN_LOW) for _ in range(OVR_LOW)]
+    # long high prompts: first-token latency is prefill-dominated on
+    # BOTH the loaded and unloaded fleet, so the TTFT comparison is
+    # about queueing (what the scheduler controls), not prompt length
+    high = [(rng.randint(0, cfg.vocab_size,
+                         size=int(rng.randint(20, 25))).astype(np.int32),
+             OVR_GEN_HIGH) for _ in range(OVR_HIGH)]
+    return low, high
+
+
+def _overload_fleet(cfg, params, scheduling):
+    from repro.launch.router import ReplicaRouter
+
+    replicas = [
+        PagedContinuousBatchingServer(
+            cfg, params, num_slots=OVR_SLOTS, max_len=OVR_MAXLEN,
+            block_size=PAGED_BLOCK, prefill_chunk=PAGED_BLOCK,
+            num_blocks=OVR_BLOCKS, segment=4, scheduling=scheduling)
+        for _ in range(OVR_REPLICAS)
+    ]
+    return ReplicaRouter(replicas, policy="prefix", seed=3)
+
+
+def _overload_drain(fleet, low, high, target):
+    """Submit the low backlog, step until every slot is occupied and
+    grown, then submit the highs mid-drain (the overload moment) and
+    drain. Returns (wall, finished, high-priority fleet ids)."""
+    t0 = time.perf_counter()
+    for p, g in low:
+        fleet.submit(p, g, priority=0)
+    done = []
+    for _ in range(OVR_HEAD_STEPS):
+        done += fleet.step()
+    hf = {fleet.submit(p, g, priority=1, ttft_target=target)
+          for p, g in high}
+    done += fleet.run()
+    return time.perf_counter() - t0, done, hf
+
+
+def _flush_fleet(fleet):
+    """Force-evict every cached block (prefix index included) on every
+    replica: each measured drain starts from the same cold pool the
+    warmup saw, so warmup and measurement execute the same schedule and
+    the measured run compiles nothing."""
+    for r in fleet.replicas:
+        r.mgr.alloc.evict_cached()
+
+
+def _goodput(wall, done, high_fids, target):
+    ok = sum(r.generated for r in done
+             if r.rid not in high_fids or r.ttft <= target)
+    return ok / wall
+
+
+def _high_only_ttfts(fleet, high):
+    """Unloaded-fleet TTFT for the high prompts. First tokens only
+    materialize at segment boundaries, and an idle fleet uncaps its
+    first segment to the whole remaining span — calibrating with the
+    traffic's full gen would measure segment shape, not first-token
+    latency. Same prompts, one-segment gen: the unloaded first
+    boundary gets the same granularity the loaded fleet's capped
+    segments have."""
+    fids = {fleet.submit(p, 4, priority=1) for p, _ in high}
+    return [r.ttft for r in fleet.run() if r.rid in fids]
+
+
+def _preempt_bitexact(cfg, params):
+    """Forced preempt/restore vs an unpressured pool, token-for-token,
+    greedy and sampled rows in the same drain."""
+    from repro.launch.sampling import SamplingParams
+
+    rng = np.random.RandomState(3)
+    reqs = [(rng.randint(0, cfg.vocab_size, size=6).astype(np.int32), 18)
+            for _ in range(2)]
+    samples = [None, SamplingParams(temperature=0.8, top_k=40, seed=13)]
+
+    def drain(**kw):
+        sched = PagedContinuousBatchingServer(
+            cfg, params, num_slots=2, max_len=48, block_size=8,
+            segment=4, **kw)
+        for (p, g), sp in zip(reqs, samples):
+            sched.submit(p, g, sp)
+        return sched.run(), sched.stats
+
+    ample, a_st = drain()               # default pool: no pressure
+    tight, t_st = drain(num_blocks=6)   # two grown spans cannot coexist
+    ok = (a_st.preemptions == 0 and t_st.preemptions > 0
+          and t_st.restores > 0 and len(ample) == len(tight) == 2)
+    for a, b in zip(sorted(ample, key=lambda r: r.rid),
+                    sorted(tight, key=lambda r: r.rid)):
+        ok = ok and np.array_equal(a.tokens, b.tokens)
+    return float(ok)
+
+
+def overload_rows():
+    cfg = _continuous_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    low, high = _overload_traffic(cfg)
+
+    edf = _overload_fleet(cfg, params, "edf")
+    _overload_drain(edf, low, high, None)   # warmup: compile every shape
+    _flush_fleet(edf)
+    _high_only_ttfts(edf, high)             # warmup the unloaded shapes
+    _flush_fleet(edf)
+    ttfts_u = _high_only_ttfts(edf, high)   # measured: unloaded fleet
+    p95_u = _pct(ttfts_u, 95)
+    # the SLO is the acceptance bound itself: high-priority first tokens
+    # within twice the unloaded fleet's p95
+    target = 2.0 * p95_u
+    _flush_fleet(edf)
+    t0 = edf.stats.totals
+    pre0, res0, stl0 = t0.preemptions, t0.restores, edf.stats.stolen
+    wall_e, done_e, hf_e = _overload_drain(edf, low, high, target)
+    good_e = _goodput(wall_e, done_e, hf_e, target)
+    p95_e = _pct([r.ttft for r in done_e if r.rid in hf_e], 95)
+    t1 = edf.stats.totals
+
+    fifo = _overload_fleet(cfg, params, "fifo")
+    _overload_drain(fifo, low, high, None)  # warmup
+    _flush_fleet(fifo)
+    wall_f, done_f, hf_f = _overload_drain(fifo, low, high, target)
+    good_f = _goodput(wall_f, done_f, hf_f, target)
+    p95_f = _pct([r.ttft for r in done_f if r.rid in hf_f], 95)
+
+    bitexact = _preempt_bitexact(cfg, params)
+    return [
+        (f"serving/{ARCH}/overload/goodput_edf_tok_s",
+         1e6 / max(good_e, 1e-9), good_e),
+        (f"serving/{ARCH}/overload/goodput_fifo_tok_s",
+         1e6 / max(good_f, 1e-9), good_f),
+        (f"serving/{ARCH}/goodput_2x_over_fifo", 0.0,
+         good_e / max(good_f, 1e-9)),
+        (f"serving/{ARCH}/overload/high_ttft_p95_unloaded_s", 0.0, p95_u),
+        (f"serving/{ARCH}/overload/high_ttft_p95_edf_s", 0.0, p95_e),
+        (f"serving/{ARCH}/overload/high_ttft_p95_fifo_s", 0.0, p95_f),
+        (f"serving/{ARCH}/overload/high_ttft_edf_over_2x_unloaded", 0.0,
+         p95_e / max(2.0 * p95_u, 1e-9)),
+        (f"serving/{ARCH}/overload/preemptions", 0.0,
+         float(t1.preemptions - pre0)),
+        (f"serving/{ARCH}/overload/restores", 0.0,
+         float(t1.restores - res0)),
+        (f"serving/{ARCH}/overload/stolen", 0.0,
+         float(edf.stats.stolen - stl0)),
+        (f"serving/{ARCH}/preempt_bitexact", 0.0, bitexact),
+    ]
+
+
 def rows():
     return (loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
             + paged_rows() + paged_kernel_rows() + mesh_rows()
-            + router_rows())
+            + router_rows() + overload_rows())

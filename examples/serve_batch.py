@@ -47,6 +47,21 @@ def build_sampling(args) -> SamplingParams | None:
                           top_p=args.top_p, seed=args.seed)
 
 
+def build_faults(args):
+    """``--faults site=rate,...`` -> a seeded ``FaultInjector`` (sites:
+    alloc, evict_storm, stage_stall — see launch/faults.py)."""
+    if not args.faults:
+        return None
+    from repro.launch.faults import FaultInjector
+
+    rates = {}
+    for part in args.faults.split(","):
+        site, rate = part.split("=")
+        rates[site.strip()] = float(rate)
+    return FaultInjector(seed=args.fault_seed, rates=rates,
+                         max_per_site=args.max_faults_per_site)
+
+
 def build_mesh(args):
     """``--mesh RxC`` (or RxCxP) -> a canonical serving mesh; the
     "model" (last) axis is the tensor-parallel degree. Run under
@@ -183,6 +198,66 @@ def run_continuous(args, cfg, api, params, plan):
             )
 
 
+def run_overload(args, cfg, api, params, plan):
+    """The CI overload smoke: 2x-oversubscribed priority traffic on a
+    deliberately tiny paged pool (optionally with seeded fault
+    injection). A low-priority backlog saturates every slot; high-
+    priority requests land mid-drain and jump it via EDF admission +
+    preemption (spill to the sidebar region, restore later). Asserts
+    the robustness invariants end to end: every request completes and
+    the pool drains with zero leaked blocks."""
+    faults = build_faults(args)
+    max_len = args.prompt_len + args.gen
+    bs = args.block_size
+    while max_len % bs:
+        bs -= 1
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=args.slots, max_len=max_len,
+        block_size=bs, prefill_chunk=args.prefill_chunk,
+        num_blocks=args.num_blocks, segment=args.segment, plan=plan,
+        kernel=args.kernel, faults=faults, scheduling="edf",
+    )
+    pool_str = (f"{args.num_blocks} blocks" if args.num_blocks
+                else "default pool")
+    print(f"arch={cfg.arch_id} overload [paged, {pool_str}, "
+          f"block_size={bs}]: slots={args.slots}, "
+          f"faults={args.faults or 'none'} (seed={args.fault_seed})")
+    rng = np.random.RandomState(args.seed)
+    n_low = 2 * args.slots                  # 2x oversubscription
+    n_high = max(1, args.slots // 2)
+    for _ in range(n_low):
+        p = rng.randint(0, cfg.vocab_size,
+                        size=max(2, args.prompt_len // 4))
+        sched.submit(p, args.gen, priority=0)
+    done = sched.step()                     # backlog mid-flight ...
+    for _ in range(n_high):                 # ... then the highs land
+        p = rng.randint(0, cfg.vocab_size,
+                        size=max(2, args.prompt_len - 1))
+        sched.submit(p, max(2, args.gen // 2), priority=1,
+                     ttft_target=60.0)
+    t0 = time.perf_counter()
+    done += sched.run()
+    dt = time.perf_counter() - t0
+    print(f"drained {len(done)} requests in {dt:.2f}s (cold)")
+    print(sched.stats.summary())
+    if faults is not None:
+        print(f"faults injected: {faults.total_injected} "
+              f"({dict(faults.injected)})")
+    # the smoke's contract: everything completes, nothing leaks
+    assert len(done) == n_low + n_high, (
+        f"drain lost requests: {len(done)} != {n_low + n_high}")
+    assert sched.mgr.alloc.in_use == 0, "pool leaked blocks"
+    assert (sched.mgr.alloc.num_free + sched.mgr.alloc.num_evictable
+            == sched.mgr.alloc.capacity), "pool accounting drifted"
+    assert len(sched.spill) == 0 and sched.spill.in_use_bytes == 0, (
+        "spill region holds payloads after a full drain")
+    if args.num_blocks:  # tiny pool: overload must actually preempt
+        assert sched.stats.preemptions > 0, (
+            "tiny-pool overload smoke never preempted"
+        )
+        assert sched.stats.restores > 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b", choices=cfglib.ARCH_IDS)
@@ -227,6 +302,24 @@ def main():
                          "TPU) — CI's paged-attention kernel smoke")
     ap.add_argument("--block-size", type=int, default=8,
                     help="KV pool block size in token positions")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: enough that "
+                         "no request ever waits; set it small to force "
+                         "preemption under load)")
+    ap.add_argument("--overload", action="store_true",
+                    help="overload smoke: 2x-oversubscribed priority "
+                         "traffic on the paged server — low-priority "
+                         "backlog, high-priority arrivals mid-drain, "
+                         "EDF admission + preemption; asserts zero "
+                         "leaks and full completion")
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault injection, 'site=rate,...' "
+                         "(sites: alloc, evict_storm, stage_stall), "
+                         "e.g. --faults alloc=0.1,evict_storm=0.1")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-faults-per-site", type=int, default=8,
+                    help="bound Bernoulli firings per site so a drain "
+                         "terminates even at rate 1.0")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prefill-ahead chunk length (default block size)")
     ap.add_argument("--mesh", default=None,
@@ -253,7 +346,9 @@ def main():
     api = get_model(cfg)
     plan = build_plan(args, cfg)
     params = api.init(jax.random.PRNGKey(0), cfg)
-    if args.continuous:
+    if args.overload:
+        run_overload(args, cfg, api, params, plan)
+    elif args.continuous:
         run_continuous(args, cfg, api, params, plan)
     else:
         run_static(args, cfg, api, params, plan)

@@ -104,3 +104,58 @@ def _median(xs) -> float:
     if n == 0:
         return 0.0
     return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+@dataclasses.dataclass
+class SegmentEvent:
+    """One serving-side watchdog trip: segment ``call`` took ``seconds``
+    against a trailing ``median`` (threshold = k * median)."""
+
+    call: int
+    seconds: float
+    median: float
+    threshold: float
+
+
+class SegmentWatchdog:
+    """Straggler detection for the serving drain loop: a segment
+    dispatch whose wall time exceeds ``k`` x the trailing median is a
+    recorded, NON-fatal event (the request still completes — the point
+    is that a wedged compile, a device hang limping through retries, or
+    a pathological host stall becomes observable in ``SchedulerStats``
+    instead of silently stretching every SLO).
+
+    Differences from ``StragglerWatchdog`` deliberate and small: serving
+    segments legitimately span several compiled shapes (admit_k, width,
+    steps all key executables), so the baseline is a plain trailing
+    median with a multiplicative ``k`` — no MAD band, no escalation
+    ladder, no evict verdict. Trips are excluded from the baseline so a
+    stall cannot poison its own detector."""
+
+    def __init__(self, *, k: float = 8.0, window: int = 64,
+                 min_samples: int = 8) -> None:
+        if k <= 1.0:
+            raise ValueError(f"k must be > 1.0, got {k}")
+        self.k = k
+        self.min_samples = min_samples
+        self._times: deque[float] = deque(maxlen=window)
+        self.events: list[SegmentEvent] = []
+        self._call = 0
+
+    def observe(self, seconds: float) -> bool:
+        """Feed one segment wall time; True = straggler event (recorded
+        in ``events``, excluded from the baseline)."""
+        self._call += 1
+        if len(self._times) >= self.min_samples:
+            med = _median(self._times)
+            threshold = self.k * med
+            if med > 0.0 and seconds > threshold:
+                self.events.append(
+                    SegmentEvent(self._call, seconds, med, threshold))
+                return True
+        self._times.append(seconds)
+        return False
+
+    @property
+    def median_segment_s(self) -> float:
+        return _median(self._times) if self._times else float("nan")

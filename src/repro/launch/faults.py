@@ -1,0 +1,106 @@
+"""Deterministic fault injection for the serving fleet.
+
+Robustness claims are worthless untested: an allocator error mid-stage,
+an eviction storm, a wedged staging round, or a replica that errors on
+dispatch are all paths the scheduler *says* it handles — this module
+makes them happen on demand, reproducibly, so the property tests can
+assert the strong invariants (no leaked blocks, no double frees,
+token-bit-exact output vs the unfaulted run) under seeded random
+interleavings instead of hoping.
+
+One ``FaultInjector`` is threaded through the stack and consulted at
+named **sites**:
+
+  ============== =====================================================
+  site           effect when it fires
+  ============== =====================================================
+  ``alloc``      ``BlockAllocator.alloc`` raises ``KVPoolError``
+                 (hooked via ``fault_hook``) — exercises begin/ensure/
+                 restore rollback atomicity
+  ``evict_storm``the scheduler force-evicts every cached block at a
+                 segment boundary (prefix index flushed) — exercises
+                 restore-after-eviction and cold re-splice paths
+  ``stage_stall``one staging round is skipped — prefill-ahead stalls,
+                 admission slips a boundary
+  ``dispatch:i`` the router's dispatch to replica ``i`` raises
+                 ``ReplicaDispatchError`` — exercises quarantine +
+                 exponential-backoff reprobe (the replica's queued
+                 work is untouched; the step simply does not run)
+  ============== =====================================================
+
+Two triggering modes compose:
+
+  * ``rates={"alloc": 0.05, ...}`` — seeded Bernoulli per consultation
+    (``np.random.RandomState``; the draw sequence is a pure function of
+    seed and consultation order, and the scheduler consults at
+    deterministic points, so a seeded run replays exactly).
+    A rate keyed ``"dispatch"`` applies to every ``dispatch:i`` site.
+  * ``script={"alloc": [3, 7]}`` — fire on exactly the Nth consultation
+    of a site (1-based), for pinpoint tests ("fail the 3rd alloc").
+
+``max_per_site`` bounds Bernoulli firings so a drain always terminates
+even at rate 1.0.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+class ReplicaDispatchError(RuntimeError):
+    """An injected failure dispatching work to a replica — the router's
+    cue to count an error against that replica's health and move on."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRecord:
+    """One injected fault: which site, on which consultation of it."""
+
+    site: str
+    call: int
+
+
+class FaultInjector:
+    """Seeded, site-addressed fault source (see module docstring)."""
+
+    def __init__(self, seed: int = 0, *,
+                 rates: dict[str, float] | None = None,
+                 script: dict[str, list[int]] | None = None,
+                 max_per_site: int | None = None) -> None:
+        self._rng = np.random.RandomState(seed)
+        self.rates = dict(rates or {})
+        self.script = {k: set(v) for k, v in (script or {}).items()}
+        self.max_per_site = max_per_site
+        self.calls: collections.Counter = collections.Counter()
+        self.injected: collections.Counter = collections.Counter()
+        self.log: list[FaultRecord] = []
+
+    def _base(self, site: str) -> str:
+        return site.split(":", 1)[0]
+
+    def fire(self, site: str) -> bool:
+        """Consult the injector at ``site``; True = inject the fault."""
+        self.calls[site] += 1
+        n = self.calls[site]
+        hit = False
+        if n in self.script.get(site, ()):
+            hit = True
+        else:
+            rate = self.rates.get(site)
+            if rate is None:
+                rate = self.rates.get(self._base(site), 0.0)
+            if rate > 0.0 and self._rng.rand() < rate:
+                budget = self.max_per_site
+                if budget is None or self.injected[site] < budget:
+                    hit = True
+        if hit:
+            self.injected[site] += 1
+            self.log.append(FaultRecord(site, n))
+        return hit
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.injected.values())

@@ -52,6 +52,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +124,10 @@ class BlockAllocator:
         self._index: dict[bytes, int] = {}
         self._key_of: dict[int, bytes] = {}
         self.counters = PoolCounters()
+        # fault-injection hook (launch.faults): consulted at every
+        # alloc(); returning True makes the alloc raise KVPoolError —
+        # callers' rollback paths must leave state untouched
+        self.fault_hook: Callable[[], bool] | None = None
 
     # -- introspection -----------------------------------------------------
     @property
@@ -167,6 +172,10 @@ class BlockAllocator:
         the least-recently-released cached block (dropping its prefix
         index entry). Raises ``KVPoolError`` when nothing is left — the
         scheduler's cue to defer staging until a release frees blocks."""
+        if self.fault_hook is not None and self.fault_hook():
+            raise KVPoolError(
+                "injected allocation failure (fault harness)"
+            )
         if self._free:
             bid = self._free.popleft()
         elif self._evictable:
@@ -243,6 +252,25 @@ class BlockAllocator:
         else:
             self._state[bid] = BlockState.FREE
             self._free.append(bid)
+
+    def evict_cached(self, n: int | None = None) -> int:
+        """Force-evict up to ``n`` cached blocks LRU-first (all of them
+        when ``n`` is None): drop the prefix-index entries and return
+        the blocks to the free list. Live owners are untouched — only
+        refcount-0 indexed blocks are evictable, so this can never pull
+        a block out from under a request (or a spilled request: spill
+        releases every block and restores from host copies). This is
+        the eviction-storm injection site and a memory-pressure valve."""
+        count = 0
+        while self._evictable and (n is None or count < n):
+            bid, key = self._evictable.popitem(last=False)  # LRU
+            del self._index[key]
+            del self._key_of[bid]
+            self._state[bid] = BlockState.FREE
+            self._free.append(bid)
+            self.counters.evictions += 1
+            count += 1
+        return count
 
     # -- prefix index (hash-consing) ---------------------------------------
     def lookup(self, key: bytes) -> int | None:
@@ -362,6 +390,41 @@ class KVPool:
         bridge the segment programs decode through."""
         return gather_blocks(self.cache, self.batch_axes,
                              self.length_axes, tables)
+
+    def read_blocks(self, bids: list[int]) -> list:
+        """Device -> host copy of whole blocks, one pytree of numpy
+        leaves per block (dtype-preserving, so a later ``write_blocks``
+        round-trip is bit-exact). The preemption spill path — rare by
+        construction, so eager per-leaf ``jnp.take`` is fine."""
+        if not bids:
+            return []
+        b = jnp.asarray(bids, jnp.int32)
+        batch = jax.tree.map(
+            lambda f, ax: np.asarray(jnp.take(f, b, axis=ax)),
+            self.cache, self.batch_axes,
+        )
+        return [
+            jax.tree.map(
+                lambda leaf, ax: np.take(leaf, j, axis=ax),
+                batch, self.batch_axes,
+            )
+            for j in range(len(bids))
+        ]
+
+    def write_blocks(self, bids: list[int], payloads: list) -> None:
+        """Host -> device: write spilled block payloads (as produced by
+        ``read_blocks``) back into pool blocks ``bids`` — the restore
+        half of preemption. Bit-exact: same dtypes, whole-block set."""
+        if not bids:
+            return
+        b = jnp.asarray(bids, jnp.int32)
+        stacked = jax.tree.map(
+            lambda *leaves: np.stack(leaves), *payloads)
+        self.cache = jax.tree.map(
+            lambda f, s, ax: f.at[(slice(None),) * ax + (b,)].set(
+                jnp.moveaxis(jnp.asarray(s), 0, ax).astype(f.dtype)),
+            self.cache, stacked, self.batch_axes,
+        )
 
 
 def gather_blocks(cache, batch_axes, length_axes, tables):
@@ -531,14 +594,117 @@ class PagedKVManager:
         for bid in hits:
             self.alloc.retain(bid)
         fresh_needed = need - len(hits)
-        if not self.alloc.can_alloc(fresh_needed):
-            for bid in hits:     # rollback: revived hits re-cache
+        fresh: list[int] = []
+        try:
+            if not self.alloc.can_alloc(fresh_needed):
+                raise KVPoolError("pool cannot cover the span")
+            for _ in range(fresh_needed):
+                fresh.append(self.alloc.alloc())
+        except KVPoolError:
+            # atomic rollback: an alloc CAN raise past the can_alloc
+            # check (injected failure) — the splice's refcount bumps and
+            # any partially allocated fresh blocks must all unwind, or
+            # the hits leak a reference forever
+            for bid in fresh:
+                self.alloc.release(bid)
+            for bid in hits:     # revived hits re-cache
                 self.alloc.release(bid)
             return None
-        fresh = [self.alloc.alloc() for _ in range(fresh_needed)]
-        return RequestBlocks(bids=hits + list(fresh),
+        return RequestBlocks(bids=hits + fresh,
                              prefix_hit_blocks=len(hits),
                              span=need * bs)
+
+    def ensure_span(self, rb: RequestBlocks, n_positions: int) -> bool:
+        """Lazy growth: extend ``rb`` with fresh exclusive blocks until
+        it covers ``n_positions`` write positions. Allocated blocks go
+        straight to active (they back this request's own generated
+        tokens — never published, never shared). Atomic: on exhaustion
+        or injected failure the partial growth unwinds and the request
+        keeps its old span — False is the scheduler's preemption cue."""
+        need = self.blocks_needed(n_positions)
+        if need <= len(rb.bids):
+            return True
+        got: list[int] = []
+        try:
+            for _ in range(need - len(rb.bids)):
+                bid = self.alloc.alloc()
+                self.alloc.activate(bid)
+                got.append(bid)
+        except KVPoolError:
+            for bid in got:
+                self.alloc.release(bid)
+            return False
+        rb.bids.extend(got)
+        rb.span = len(rb.bids) * self.block_size
+        return True
+
+    def spill_request(self, rb: RequestBlocks, valid_end: int) -> dict:
+        """Preemption: copy the blocks holding the request's first
+        ``valid_end`` positions of KV to host, then release EVERY block
+        the request owns. The victim keeps no pool references at all —
+        shared prefix blocks drop to cached (still evictable; restore
+        re-splices them if they survive, rewrites them if not), so a
+        spilled request can never be the reason an eviction is unsafe.
+        Returns the host payload for a ``SidebarSpillRegion`` entry."""
+        n = min(self.blocks_needed(valid_end), len(rb.bids))
+        blocks = self.pool.read_blocks(rb.bids[:n])
+        nbytes = sum(
+            leaf.nbytes for payload in blocks
+            for leaf in jax.tree.leaves(payload))
+        self.release_request(rb)
+        return {"blocks": blocks, "n_blocks": n, "nbytes": nbytes}
+
+    def restore_request(self, prompt: np.ndarray, payload: dict,
+                        ) -> RequestBlocks | None:
+        """Resume a spilled request: re-acquire one pool block per
+        spilled block — splicing any full ``prompt[:-1]`` block still in
+        the prefix index (bit-identical by hash-consing; prefill KV is a
+        pure function of the prefix) and writing the host copy into a
+        fresh block otherwise — then re-publish the full prompt blocks.
+        Atomic: on failure every acquired block unwinds and the caller
+        keeps the payload (the request stays spilled). The write
+        frontier resumes at ``valid_end`` inside an exclusive block, so
+        the re-spliced prefix blocks are never written (same structural
+        invariant as admission, still enforced by ``ensure_exclusive``).
+        """
+        bs = self.block_size
+        n = payload["n_blocks"]
+        n_full = (int(prompt.size) - 1) // bs
+        acquired: list[tuple[int, bool]] = []   # (bid, spliced?)
+        try:
+            for j in range(n):
+                bid = None
+                if j < n_full:
+                    bid = self.alloc.lookup(prefix_key(prompt,
+                                                       (j + 1) * bs))
+                if bid is not None:
+                    self.alloc.retain(bid)
+                    acquired.append((bid, True))
+                else:
+                    acquired.append((self.alloc.alloc(), False))
+        except KVPoolError:
+            for bid, _ in acquired:
+                self.alloc.release(bid)
+            return None
+        fresh = [bid for bid, spliced in acquired if not spliced]
+        self.pool.write_blocks(
+            fresh,
+            [payload["blocks"][j] for j, (_, spliced)
+             in enumerate(acquired) if not spliced])
+        for bid in fresh:
+            self.alloc.activate(bid)
+        rb = RequestBlocks(
+            bids=[bid for bid, _ in acquired],
+            prefix_hit_blocks=sum(1 for _, spliced in acquired if spliced),
+            span=n * bs,
+        )
+        # re-publish: restored full prompt blocks re-enter the index so
+        # later requests (and a re-preempted restore) splice them
+        for j in range(min(n_full, n)):
+            bid = rb.bids[j]
+            if bid not in self.alloc._key_of:
+                self.alloc.register(prefix_key(prompt, (j + 1) * bs), bid)
+        return rb
 
     def publish_prompt(self, prompt: np.ndarray, rb: RequestBlocks) -> None:
         """At admission: staged blocks go active, and every full

@@ -70,6 +70,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -83,9 +85,12 @@ from repro.core.modes import (
     LayerPlan,
     coerce_layer_plan,
 )
+from repro.core.sidebar import SidebarSpillRegion
+from repro.ft.watchdog import SegmentWatchdog
 from repro.kernels import ops as kops
 from repro.launch import kvpool as kvp
 from repro.launch import sampling
+from repro.launch.faults import FaultInjector
 from repro.launch.sampling import SamplingParams
 from repro.launch.serve import (
     PER_LAYER_PLAN_FAMILIES,
@@ -114,6 +119,35 @@ class FinishedRequest:
     tokens: np.ndarray        # (generated,) int32
     prompt_len: int
     generated: int
+    ttft: float = float("nan")   # submit -> first-token dispatch (s)
+    itl: float = float("nan")    # mean inter-token latency (s)
+
+
+@dataclasses.dataclass(eq=False)
+class _Request:
+    """One submitted request while it waits (pending / staging / spilled).
+
+    ``priority`` is the class (higher wins); ``ttft_target`` makes the
+    EDF deadline (``submit_t + ttft_target``; no target = deadline inf,
+    i.e. best-effort); ``itl_target`` is recorded for per-class stats.
+    ``seq`` is the arrival index — the final tie-break, which makes
+    every scheduling score a strict total order (no thrash: a victim is
+    always *strictly* worse than the request it yields to)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    sample: SamplingParams | None
+    priority: int = 0
+    ttft_target: float | None = None
+    itl_target: float | None = None
+    submit_t: float = 0.0
+    seq: int = 0
+
+    @property
+    def deadline(self) -> float:
+        return (math.inf if self.ttft_target is None
+                else self.submit_t + self.ttft_target)
 
 
 @dataclasses.dataclass
@@ -131,6 +165,8 @@ class _Slot:
     # the request's PRNG base key ((2,) uint32): position-keyed at use,
     # so the stream survives slot churn and scheduler restarts
     key: np.ndarray | None = None
+    req: _Request | None = None
+    first_t: float | None = None   # first-token dispatch time (TTFT)
 
     @property
     def free(self) -> bool:
@@ -172,12 +208,47 @@ class SchedulerStats:
     pool_blocks: int = 0
     pool_in_use: int = 0
     pool_in_use_peak: int = 0
+    # overload robustness (preemption / cancel / watchdog)
+    preemptions: int = 0       # active slots spilled to the host region
+    restores: int = 0          # spilled requests spliced back and resumed
+    unstaged: int = 0          # staging entries reclaimed back to pending
+    spilled_blocks: int = 0
+    restored_blocks: int = 0
+    cancelled: int = 0
+    watchdog_events: int = 0   # segments past k * median segment wall
+    # per-priority-class latency samples (seconds); dict fields merge by
+    # concatenation in ``router.sum_stats``
+    ttft_s: dict = dataclasses.field(default_factory=dict)
+    itl_s: dict = dataclasses.field(default_factory=dict)
 
     def __getitem__(self, key: str) -> int:
         return getattr(self, key)
 
     def __setitem__(self, key: str, value: int) -> None:
         setattr(self, key, value)
+
+    # -- per-class latency --------------------------------------------------
+    def record_ttft(self, priority: int, seconds: float) -> None:
+        self.ttft_s.setdefault(priority, []).append(float(seconds))
+
+    def record_itl(self, priority: int, seconds: float) -> None:
+        self.itl_s.setdefault(priority, []).append(float(seconds))
+
+    @staticmethod
+    def _tail(samples: dict, q: float, priority: int | None) -> float:
+        xs = (samples.get(priority, []) if priority is not None
+              else [x for v in samples.values() for x in v])
+        return float(np.percentile(xs, q)) if xs else float("nan")
+
+    def ttft_tail(self, q: float = 95.0,
+                  priority: int | None = None) -> float:
+        """Per-class (or overall) TTFT tail quantile in seconds — the
+        SLO gate the overload bench reports per priority class."""
+        return self._tail(self.ttft_s, q, priority)
+
+    def itl_tail(self, q: float = 95.0,
+                 priority: int | None = None) -> float:
+        return self._tail(self.itl_s, q, priority)
 
     @property
     def exec_hit_rate(self) -> float:
@@ -218,6 +289,15 @@ class SchedulerStats:
                 f"{self.stage_stalls} stalls, {self.cow_copies} COW, "
                 f"{self.evictions} evictions",
             )
+        if (self.preemptions or self.restores or self.cancelled
+                or self.watchdog_events):
+            lines.append(
+                f"robustness: {self.preemptions} preemptions "
+                f"({self.spilled_blocks} blocks spilled), "
+                f"{self.restores} restores, {self.unstaged} unstaged, "
+                f"{self.cancelled} cancelled, "
+                f"{self.watchdog_events} watchdog events",
+            )
         return "\n".join(lines)
 
 
@@ -234,8 +314,13 @@ class ContinuousBatchingServer:
                  num_slots: int = 4, max_len: int = 256,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  segment: int = 8, admit_batch: int = 2,
+                 scheduling: str = "edf",
+                 faults: FaultInjector | None = None,
                  plan: LayerPlan | ExecutionPlan | ExecutionMode | str |
                  None = None) -> None:
+        if scheduling not in ("edf", "fifo"):
+            raise ValueError(
+                f"scheduling must be 'edf' or 'fifo', got {scheduling!r}")
         if cfg.family not in _SUPPORTED_FAMILIES:
             raise ValueError(
                 f"continuous batching supports families {_SUPPORTED_FAMILIES}"
@@ -292,6 +377,18 @@ class ContinuousBatchingServer:
         self._done_raw: list[tuple] = []   # retired, not yet materialized
         self._deferred = False             # admission hysteresis armed
         self.stats = SchedulerStats()
+        # SLO scheduling: "edf" admits/stages by (priority, deadline,
+        # arrival); "fifo" is the strict-arrival baseline the overload
+        # bench compares against (preemption still guards lazy growth)
+        self.scheduling = scheduling
+        self.faults = faults
+        self._seq = 0                      # arrival index (score tie-break)
+        self._clock = time.monotonic       # injectable for deterministic tests
+        self._timer = time.perf_counter    # injectable (watchdog timing)
+        # segment watchdog: a dispatch past k * median segment wall is a
+        # recorded (non-fatal) event — a wedged compile or device hang
+        # becomes observable instead of silent
+        self.watchdog = SegmentWatchdog()
         self._init_kv()
 
     def _init_kv(self) -> None:
@@ -334,7 +431,9 @@ class ContinuousBatchingServer:
         return n
 
     def submit(self, prompt, max_new_tokens: int,
-               sample: SamplingParams | None = None) -> int:
+               sample: SamplingParams | None = None, *,
+               priority: int = 0, ttft_target: float | None = None,
+               itl_target: float | None = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -347,8 +446,43 @@ class ContinuousBatchingServer:
             )
         rid = self._next_rid
         self._next_rid += 1
-        self.pending.append((rid, prompt, max_new_tokens, sample))
+        self.pending.append(_Request(
+            rid, prompt, max_new_tokens, sample,
+            priority=int(priority), ttft_target=ttft_target,
+            itl_target=itl_target, submit_t=self._clock(), seq=self._seq,
+        ))
+        self._seq += 1
         return rid
+
+    def _score(self, req: _Request) -> tuple:
+        """Scheduling order, smaller = sooner. EDF: priority class first
+        (higher wins), earliest deadline inside a class, arrival as the
+        strict tie-break; no-target requests (deadline inf) are
+        best-effort behind every deadline. FIFO: arrival only — the
+        overload bench's baseline."""
+        if self.scheduling == "fifo":
+            return (req.seq,)
+        return (-req.priority, req.deadline, req.seq)
+
+    def cancel(self, rid: int) -> bool:
+        """Client abort: drop the request wherever it lives. A pending
+        request vanishes; an active one frees its slot (the paged
+        subclass releases its pool blocks — refcounts back, COW parents
+        intact) at the current boundary. Cancelled requests never
+        appear in ``finished``; sibling rows are untouched (their KV
+        lives in other slots/blocks). Returns False for unknown/already
+        finished rids."""
+        for req in self.pending:
+            if req.rid == rid:
+                self.pending.remove(req)
+                self.stats.cancelled += 1
+                return True
+        for i, slot in enumerate(self.slots):
+            if slot.rid == rid:
+                self._free_slot(i)
+                self.stats.cancelled += 1
+                return True
+        return False
 
     # -- admission ---------------------------------------------------------
     def _admit_fn(self, *, with_prefill: bool) -> Callable:
@@ -387,7 +521,8 @@ class ContinuousBatchingServer:
 
         return jax.jit(admit, donate_argnums=(2, 3))
 
-    def _admit_batch(self, slot_idxs: list[int], reqs: list[tuple]) -> None:
+    def _admit_batch(self, slot_idxs: list[int],
+                     reqs: list[_Request]) -> None:
         """Admit ``k`` requests in ONE dispatch: gather the freed slot
         rows, right-padded batched prefill (to the largest needed
         bucket), the correction step at per-row true positions (the same
@@ -403,14 +538,14 @@ class ContinuousBatchingServer:
         serve MoE with a no-drop capacity factor for bit-parity.)
         """
         k = len(reqs)
-        s_true = np.asarray([p.size for _, p, _, _ in reqs], np.int32)
+        s_true = np.asarray([r.prompt.size for r in reqs], np.int32)
         need = int(s_true.max()) - 1
         bucket = self.bucket_for(need) if need > 0 else 0
         padded = None
         if bucket:
             buf = np.zeros((k, bucket), np.int32)
-            for j, (_, p, _, _) in enumerate(reqs):
-                buf[j, : p.size - 1] = p[:-1]
+            for j, r in enumerate(reqs):
+                buf[j, : r.prompt.size - 1] = r.prompt[:-1]
             padded = jnp.asarray(buf)
         # prefill + correction fused into ONE program: each row's true
         # last prompt token decodes at its true per-row position,
@@ -418,50 +553,68 @@ class ContinuousBatchingServer:
         # from the right logits row. A sampled request samples it with
         # key (base, s_true) — exactly the key a solo Server.generate
         # folds for its first new token.
-        keys = [None if sp is None else np.asarray(
-            sampling.request_key(sp.seed)) for _, _, _, sp in reqs]
-        sampled = any(sp is not None for _, _, _, sp in reqs)
+        keys = [None if r.sample is None else np.asarray(
+            sampling.request_key(r.sample.seed)) for r in reqs]
+        sampled = any(r.sample is not None for r in reqs)
         zero = np.zeros((2,), np.uint32)
         state = sampling.merge_rows(
-            [(zero if key is None else key, sp)
-             for key, (_, _, _, sp) in zip(keys, reqs)]) if sampled else None
+            [(zero if key is None else key, r.sample)
+             for key, r in zip(keys, reqs)]) if sampled else None
         admit = self._compiled(
             ("prefill", k, bucket, self._plan_key,
              "sampled" if sampled else "greedy"),
             lambda: self._admit_fn(with_prefill=bool(bucket)),
         )
-        toks = np.asarray([[p[-1]] for _, p, _, _ in reqs], np.int32)
+        toks = np.asarray([[r.prompt[-1]] for r in reqs], np.int32)
         nxt, self._toks, self.cache = admit(
             self.params, padded, self.cache, self._toks, jnp.asarray(toks),
             jnp.asarray(s_true - 1), jnp.asarray(slot_idxs, jnp.int32),
             state,
         )
+        now = self._clock()
         for j, slot_idx in enumerate(slot_idxs):
-            rid, prompt, max_new, sample = reqs[j]
+            r = reqs[j]
             slot = self.slots[slot_idx]
-            slot.rid = rid
+            slot.rid = r.rid
             slot.pos = int(s_true[j])
-            slot.remaining = max_new - 1
+            slot.remaining = r.max_new - 1
             slot.generated = 1
             slot.chunks = [(nxt, j, 1)]
-            slot.prompt = prompt
-            slot.sample = sample
+            slot.prompt = r.prompt
+            slot.sample = r.sample
             slot.key = keys[j]
+            slot.req = r
+            slot.first_t = now     # first token dispatched here
+            self.stats.record_ttft(r.priority, now - r.submit_t)
             self.stats.admitted += 1
             if slot.remaining == 0:
                 self._retire(slot_idx)
 
+    def _free_slot(self, slot_idx: int) -> None:
+        """Vacate a slot without retiring it (cancel path; the paged
+        subclass also releases the request's pool blocks)."""
+        self.slots[slot_idx] = _Slot()
+
     def _retire(self, slot_idx: int) -> None:
         slot = self.slots[slot_idx]
+        ttft = itl = float("nan")
+        if slot.req is not None and slot.first_t is not None:
+            ttft = slot.first_t - slot.req.submit_t
+            if slot.generated > 1:
+                itl = (self._clock() - slot.first_t) / (slot.generated - 1)
+                self.stats.record_itl(slot.req.priority, itl)
         self._done_raw.append((slot.rid, slot.prompt, slot.chunks,
-                               slot.generated))
-        self.slots[slot_idx] = _Slot()
+                               slot.generated, ttft, itl))
+        self._free_slot(slot_idx)
 
     @staticmethod
     def _chunks_to_np(chunks: list[tuple], fetched: dict) -> np.ndarray:
         """Host tokens from (device_array, row, take) handles — the one
         place the async pipeline blocks. ``fetched`` memoizes whole-
         array transfers (many chunks share one segment buffer)."""
+        if not chunks:
+            # a request preempted before its first token has no chunks
+            return np.zeros((0,), np.int32)
         parts = []
         for arr, row, take in chunks:
             host = fetched.get(id(arr))
@@ -481,12 +634,13 @@ class ContinuousBatchingServer:
             return []
         fetched: dict = {}
         out = []
-        for rid, prompt, chunks, generated in self._done_raw:
+        for rid, prompt, chunks, generated, ttft, itl in self._done_raw:
             tokens = self._chunks_to_np(chunks, fetched)
             assert tokens.size == generated
             out.append(FinishedRequest(
                 rid=rid, prompt=prompt, tokens=tokens,
                 prompt_len=int(prompt.size), generated=generated,
+                ttft=ttft, itl=itl,
             ))
         self._done_raw.clear()
         self.finished.extend(out)
@@ -520,7 +674,12 @@ class ContinuousBatchingServer:
             self.stats.admit_deferrals += 1
             return 0
         self._deferred = False
-        reqs = [self.pending.popleft() for _ in range(take)]
+        # out-of-order admission: the best-scored pending requests go
+        # first (EDF inside priority classes); default traffic (no
+        # priorities, no deadlines) scores by arrival — exactly FIFO
+        reqs = sorted(self.pending, key=self._score)[:take]
+        for r in reqs:
+            self.pending.remove(r)
         with kops.execution_plan(self.plan):
             self._admit_batch(free[:take], reqs)
         return take
@@ -646,9 +805,15 @@ class ContinuousBatchingServer:
         )
         pos_arg = (jnp.int32(self.slots[active[0]].pos) if aligned
                    else jnp.asarray(pos))
+        t0 = self._timer()
         with kops.execution_plan(self.plan):
             buf, self._toks, self.cache = seg(
                 self.params, self._toks, self.cache, pos_arg, state)
+        # segment dispatch wall (trace + enqueue; execution is async) —
+        # a wedged compile shows up here, and on the host backends the
+        # dispatch is effectively synchronous so hangs do too
+        if self.watchdog.observe(self._timer() - t0):
+            self.stats.watchdog_events += 1
         self.stats.segments += 1
         self.stats.decode_steps += steps * len(active)
         # shrink-to-fit guarantees steps <= every active slot's remaining
@@ -665,10 +830,13 @@ class ContinuousBatchingServer:
             if slot.remaining == 0:
                 self._retire(i)
 
-    def step(self) -> list[FinishedRequest]:
+    def step(self, *, draining: bool = False) -> list[FinishedRequest]:
         """Admit into free slots, then decode one segment on all active
-        slots; returns requests that finished this step (synced)."""
-        self._advance()
+        slots; returns requests that finished this step (synced).
+        ``draining=True`` tells segment sizing no live submit can arrive
+        (the router's step-wise drain uses it to keep boundaries
+        identical to a blocking ``run()``)."""
+        self._advance(draining=draining)
         return self._materialize()
 
     def _has_work(self) -> bool:
@@ -696,18 +864,33 @@ class ContinuousBatchingServer:
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class _Staging:
-    """A pending request whose prompt KV is being staged block-by-block
-    into the pool (chunked prefill-ahead), before it owns any slot."""
+@dataclasses.dataclass(eq=False)
+class _Spilled:
+    """A preempted request waiting to resume: its generated tokens are
+    synced to host numpy and its KV block payload parked in the
+    ``SidebarSpillRegion`` (keyed by rid). Holds ZERO pool blocks — a
+    spilled request can never pin memory or block an eviction."""
 
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    sample: SamplingParams | None
+    req: _Request
+    generated: int
+    tokens: np.ndarray        # (generated,) int32
+    valid_end: int            # KV valid on [0, valid_end) at restore
+    n_blocks: int             # payload blocks (stats/bookkeeping)
+    first_t: float | None     # original first-token time (TTFT keeps it)
+
+
+@dataclasses.dataclass(eq=False)
+class _Staging:
+    """A request whose prompt KV is being staged block-by-block into
+    the pool (chunked prefill-ahead), before it owns any slot — or a
+    restored spill (``resume`` set) that re-enters through the same
+    staged -> admitted path with its KV already in place."""
+
+    req: _Request
     rb: kvp.RequestBlocks
     staged: int               # positions [0, staged) hold valid KV
     target: int               # = prompt.size - 1 (prefill writes S-1)
+    resume: _Spilled | None = None
 
     @property
     def done(self) -> bool:
@@ -768,6 +951,7 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                  block_size: int = 16, num_blocks: int | None = None,
                  prefill_chunk: int | None = None,
                  stage_ahead: int | None = None,
+                 spill_region: SidebarSpillRegion | None = None,
                  kernel: str = "paged", **kw) -> None:
         if kernel not in ("paged", "slab"):
             raise ValueError(
@@ -784,7 +968,12 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self._num_blocks_arg = num_blocks
         self.prefill_chunk = int(prefill_chunk or block_size)
         self._stage_ahead_arg = stage_ahead
+        self._spill_region_arg = spill_region
         super().__init__(cfg, params, **kw)
+        if self.faults is not None:
+            # allocation-failure site: every alloc consults the injector
+            self.mgr.alloc.fault_hook = (
+                lambda: self.faults.fire("alloc"))
 
     def _init_kv(self) -> None:
         if self.max_len % self.block_size:
@@ -814,6 +1003,18 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self._slot_rb: list[kvp.RequestBlocks | None] = (
             [None] * self.num_slots)
         self._staging: collections.deque[_Staging] = collections.deque()
+        # preemption: spilled requests wait here; payloads live in the
+        # host-side sidebar region keyed by rid
+        # NOTE: explicit None test — an empty region is len() == 0,
+        # i.e. falsy, and ``or`` would silently drop the caller's region
+        self.spill = (self._spill_region_arg
+                      if self._spill_region_arg is not None
+                      else SidebarSpillRegion())
+        self._spilled: list[_Spilled] = []
+        # slot -> correction token for rows admitted this boundary (the
+        # merge the segment program fuses); a dict so a victim spilled
+        # between admission and dispatch just drops its entry
+        self._admit_pending: dict[int, int] = {}
         self.stats.pool_blocks = self.mgr.alloc.capacity
 
     # -- bookkeeping -------------------------------------------------------
@@ -827,16 +1028,22 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self.stats.pool_in_use_peak = c.in_use_peak
 
     def _has_work(self) -> bool:
-        return super()._has_work() or bool(self._staging)
+        return (super()._has_work() or bool(self._staging)
+                or bool(self._spilled))
 
     @property
     def load(self) -> int:
-        return super().load + len(self._staging)
+        return super().load + len(self._staging) + len(self._spilled)
 
     def submit(self, prompt, max_new_tokens: int,
-               sample: SamplingParams | None = None) -> int:
+               sample: SamplingParams | None = None, *,
+               priority: int = 0, ttft_target: float | None = None,
+               itl_target: float | None = None) -> int:
         prompt_arr = np.asarray(prompt, np.int32).reshape(-1)
         if prompt_arr.size >= 1 and max_new_tokens >= 1:
+            # allocation is lazy (the span grows segment by segment),
+            # but the WORST-CASE span must fit the pool alone, or the
+            # request could preempt everything and still wedge
             need = self.mgr.blocks_needed(
                 prompt_arr.size + max_new_tokens - 1)
             if need > self.mgr.alloc.capacity:
@@ -845,7 +1052,26 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                     f"{self.mgr.alloc.capacity} — raise num_blocks or "
                     "shrink the request"
                 )
-        return super().submit(prompt, max_new_tokens, sample)
+        return super().submit(prompt, max_new_tokens, sample,
+                              priority=priority, ttft_target=ttft_target,
+                              itl_target=itl_target)
+
+    def cancel(self, rid: int) -> bool:
+        for st in self._staging:
+            if st.req.rid == rid:
+                # staged (or restored-but-unadmitted): release the
+                # blocks; a cancelled request's KV needs no preserving
+                self._staging.remove(st)
+                self.mgr.release_request(st.rb)
+                self.stats.cancelled += 1
+                return True
+        for sp in self._spilled:
+            if sp.req.rid == rid:
+                self._spilled.remove(sp)
+                self.spill.release(rid)
+                self.stats.cancelled += 1
+                return True
+        return super().cancel(rid)
 
     # -- chunked prefill-ahead (staging) -----------------------------------
     def _stage_fn(self) -> Callable:
@@ -871,7 +1097,7 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         bt = np.empty((k, self.blocks_per_table), np.int32)
         for j, st in enumerate(entries):
             valid = min(st.target - st.staged, c)
-            toks[j, :valid] = st.prompt[st.staged:st.staged + valid]
+            toks[j, :valid] = st.req.prompt[st.staged:st.staged + valid]
             pos[j] = st.staged
             bt[j] = st.rb.table_row(self.blocks_per_table)
         kvp.validate_tables(bt, self.mgr.pool.num_blocks)
@@ -889,23 +1115,49 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self.stats.stage_chunks += k
 
     def _stage(self, *, catch_up: bool) -> None:
-        """Prefill-ahead: start staging pending requests (prefix splice
-        + atomic span allocation), then advance every incomplete staging
-        entry by one batched chunk round — or to completion when there
-        is no active decode to overlap behind (``catch_up``)."""
-        while self.pending and len(self._staging) < self.stage_ahead:
-            rid, prompt, max_new, sample = self.pending[0]
-            rb = self.mgr.begin_request(prompt, prompt.size + max_new - 1)
+        """Prefill-ahead: restore spilled requests into free slots'
+        staging (they are furthest along), start staging the best-scored
+        pending requests (prefix splice + staging-span allocation — the
+        span is LAZY: only the prompt's blocks, growth comes per
+        segment), then advance every incomplete staging entry by one
+        batched chunk round — or to completion when there is no active
+        decode to overlap behind (``catch_up``).
+
+        Under pool pressure a better-scored request reclaims from
+        strictly worse holders (``_reclaim_for``): a lower-priority
+        staging entry is unstaged, an active slot preempted — this is
+        how a high-priority arrival jumps a saturated replica."""
+        self._try_restore()
+        while self.pending:
+            req = min(self.pending, key=self._score)
+            if len(self._staging) >= self.stage_ahead:
+                # staging entry slots are a resource too: a strictly
+                # worse entry yields its place (EDF jump); FIFO scores
+                # never reorder, so the baseline behaves as before
+                worst = max(self._staging,
+                            key=lambda st: self._score(st.req))
+                if not self._score(req) < self._score(worst.req):
+                    break
+                self._unstage(worst)
+            n_stage = max(int(req.prompt.size) - 1, 1)
+            rb = self.mgr.begin_request(req.prompt, n_stage)
+            while rb is None and self._reclaim_for(self._score(req)):
+                rb = self.mgr.begin_request(req.prompt, n_stage)
             if rb is None:
                 self.stats.stage_stalls += 1
                 break
-            self.pending.popleft()
+            self.pending.remove(req)
             hit_len = min(rb.prefix_hit_blocks * self.block_size,
-                          prompt.size - 1)
+                          req.prompt.size - 1)
             self._staging.append(_Staging(
-                rid, prompt, max_new, sample, rb,
-                staged=hit_len, target=prompt.size - 1,
+                req=req, rb=rb,
+                staged=hit_len, target=req.prompt.size - 1,
             ))
+        if self.faults is not None and self.faults.fire("stage_stall"):
+            # injected wedged staging round: no prefill work this
+            # boundary; incomplete entries pick up at the next one
+            self.stats.stage_stalls += 1
+            return
         while True:
             work = [st for st in self._staging if not st.done]
             if not work:
@@ -914,50 +1166,205 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             if not catch_up:
                 return
 
+    # -- preemption: spill / restore / reclaim -----------------------------
+    def _spill_slot(self, i: int) -> None:
+        """Preempt the request in slot ``i``: sync its generated tokens,
+        copy its live KV blocks to the host spill region, release every
+        pool block it owns, free the slot. Restore resumes bit-exactly:
+        the KV round-trips losslessly and the position-keyed PRNG makes
+        the sampled stream a pure function of (seed, position)."""
+        slot = self.slots[i]
+        rb = self._slot_rb[i]
+        tokens = self.slot_tokens(i)
+        payload = self.mgr.spill_request(rb, slot.pos)
+        self.spill.stage(slot.rid)
+        self.spill.commit(slot.rid, payload, payload["nbytes"])
+        self._spilled.append(_Spilled(
+            req=slot.req, generated=slot.generated, tokens=tokens,
+            valid_end=slot.pos, n_blocks=payload["n_blocks"],
+            first_t=slot.first_t,
+        ))
+        self._slot_rb[i] = None
+        self._tables[i] = kvp.SCRATCH_BLOCK
+        self._admit_pending.pop(i, None)   # dies with the slot
+        self.slots[i] = _Slot()
+        self.stats.preemptions += 1
+        self.stats.spilled_blocks += payload["n_blocks"]
+
+    def _unstage(self, st: _Staging) -> None:
+        """Reclaim a staging entry's blocks. A fresh entry requeues to
+        pending (prompt KV is recomputable); a restored spill re-spills
+        — its generated KV is not recomputable from the prompt."""
+        self._staging.remove(st)
+        if st.resume is None:
+            self.mgr.release_request(st.rb)
+            self.pending.append(st.req)
+            self.stats.unstaged += 1
+        else:
+            sp = st.resume
+            payload = self.mgr.spill_request(st.rb, sp.valid_end)
+            self.spill.stage(sp.req.rid)
+            self.spill.commit(sp.req.rid, payload, payload["nbytes"])
+            self._spilled.append(sp)
+            self.stats.preemptions += 1
+            self.stats.spilled_blocks += payload["n_blocks"]
+
+    def _reclaim_for(self, score: tuple,
+                     exclude_slot: int | None = None) -> bool:
+        """Free pool resources for a request scoring ``score`` by
+        victimizing the WORST strictly-worse holder: an unadmitted
+        staging entry is unstaged, an active slot is spilled. Strict
+        ordering (scores are a total order via ``seq``) means A can
+        preempt B and never vice versa — no thrash, guaranteed
+        progress. Returns False when no worse victim exists (the
+        requester is itself the worst — it waits or self-spills)."""
+        victims: list[tuple[tuple, int, object]] = []
+        for st in self._staging:
+            victims.append((self._score(st.req), 0, st))
+        for i, slot in enumerate(self.slots):
+            if i != exclude_slot and not slot.free:
+                victims.append((self._score(slot.req), 1, i))
+        victims = [v for v in victims if v[0] > score]
+        if not victims:
+            return False
+        _, kind, victim = max(victims, key=lambda v: v[0])
+        if kind == 0:
+            self._unstage(victim)
+        else:
+            self._spill_slot(victim)
+        return True
+
+    def _try_restore(self) -> None:
+        """Splice spilled requests back, best score first, one per free
+        slot: re-acquire blocks (prefix-index hits splice bit-identical
+        content; misses rewrite the host copy), re-publish, and enter
+        the staged-done queue — admission treats a restore exactly like
+        a fully staged arrival. A restore may itself reclaim from
+        strictly worse holders; on failure the request stays spilled
+        (payload untouched) for the next boundary."""
+        if not self._spilled:
+            return
+        reserved = 0   # restores this call, each owed a free slot
+        for sp in sorted(self._spilled,
+                         key=lambda s: self._score(s.req)):
+            if sum(s.free for s in self.slots) - reserved <= 0:
+                return
+            payload = self.spill.fetch(sp.req.rid)
+            rb = self.mgr.restore_request(sp.req.prompt, payload)
+            while rb is None and self._reclaim_for(self._score(sp.req)):
+                rb = self.mgr.restore_request(sp.req.prompt, payload)
+            if rb is None:
+                return
+            self._spilled.remove(sp)
+            self.spill.release(sp.req.rid)
+            self._staging.append(_Staging(
+                req=sp.req, rb=rb, staged=sp.valid_end,
+                target=sp.valid_end, resume=sp,
+            ))
+            self.stats.restores += 1
+            self.stats.restored_blocks += sp.n_blocks
+
+    # -- work-stealing handoff (router-level migration) --------------------
+    def take_spilled(self, rid: int) -> tuple[_Spilled, dict] | None:
+        """Detach a spilled request for migration to a sibling replica:
+        returns its resume state and host-side KV payload (both plain
+        numpy — device-agnostic), releasing the local spill-region
+        reservation. The router steals work this way when another
+        replica holds the victim's prefix warm (or simply has room)."""
+        for sp in self._spilled:
+            if sp.req.rid == rid:
+                self._spilled.remove(sp)
+                payload = self.spill.fetch(rid)
+                self.spill.release(rid)
+                return sp, payload
+        return None
+
+    def submit_spilled(self, sp: _Spilled, payload: dict) -> int:
+        """Adopt a request stolen from a sibling: re-key it into THIS
+        server's rid/seq space (priority, deadline and first-token time
+        travel with it — SLO accounting does not reset on migration)
+        and park it in the local spill region; the normal restore path
+        does the rest at the next boundary."""
+        rid = self._next_rid
+        self._next_rid += 1
+        sp.req.rid = rid
+        sp.req.seq = self._seq
+        self._seq += 1
+        self.spill.stage(rid)
+        self.spill.commit(rid, payload, payload["nbytes"])
+        self._spilled.append(sp)
+        return rid
+
     # -- admission: a block-table splice, zero dispatches ------------------
-    def _admit_ready(self) -> tuple[list[int], list[int]]:
-        """Move fully staged head requests into free slots. Pure host
-        bookkeeping — the admitted row's correction step (decode of
-        ``prompt[-1]`` at position S-1, exactly the logits solo decode
-        computes there) runs as its first step INSIDE the next segment
-        program, so admission adds no dispatch of its own."""
-        admit_slots: list[int] = []
-        admit_toks: list[int] = []
+    def _admit_ready(self) -> None:
+        """Move fully staged requests into free slots, best score first
+        (EDF jumps the done-queue too; FIFO scores keep arrival order).
+        Pure host bookkeeping — the admitted row's correction step
+        (decode of ``prompt[-1]`` at position S-1, exactly the logits
+        solo decode computes there) runs as its first step INSIDE the
+        next segment program, so admission adds no dispatch of its own.
+        The correction token parks in ``_admit_pending`` until that
+        dispatch; a row preempted in between just drops its entry.
+
+        A restored spill (``st.resume``) re-enters here with its KV
+        already spliced: the slot picks up at ``valid_end`` with its
+        synced tokens as a host chunk and its original first-token time
+        — downstream accounting cannot tell it was ever gone."""
+        ready = sorted((st for st in self._staging if st.done),
+                       key=lambda st: self._score(st.req))
         free = [i for i, s in enumerate(self.slots) if s.free]
-        while free and self._staging and self._staging[0].done:
-            st = self._staging.popleft()
+        for st in ready:
+            if not free:
+                return
             i = free.pop(0)
-            self.mgr.publish_prompt(st.prompt, st.rb)
-            # the first write position S-1 must be exclusively owned;
-            # structurally it always is (sharing covers only full
-            # prompt[:-1] blocks) — this enforces rather than assumes
-            wb = (int(st.prompt.size) - 1) // self.block_size
-            if wb < len(st.rb.bids):
-                self.mgr.ensure_exclusive(st.rb, wb)
+            self._staging.remove(st)
+            r, sp = st.req, st.resume
             slot = self.slots[i]
-            slot.rid = st.rid
-            slot.pos = int(st.prompt.size) - 1
-            slot.remaining = st.max_new
-            slot.generated = 0
-            slot.chunks = []
-            slot.prompt = st.prompt
-            slot.sample = st.sample
-            slot.key = (None if st.sample is None else
-                        np.asarray(sampling.request_key(st.sample.seed)))
+            slot.rid = r.rid
+            slot.prompt = r.prompt
+            slot.sample = r.sample
+            slot.key = (None if r.sample is None else
+                        np.asarray(sampling.request_key(r.sample.seed)))
+            slot.req = r
+            if sp is None:
+                self.mgr.publish_prompt(r.prompt, st.rb)
+                # the first write position S-1 must be exclusively
+                # owned; structurally it always is (sharing covers only
+                # full prompt[:-1] blocks) — enforced, not assumed
+                wb = (int(r.prompt.size) - 1) // self.block_size
+                if wb < len(st.rb.bids):
+                    self.mgr.ensure_exclusive(st.rb, wb)
+                slot.pos = int(r.prompt.size) - 1
+                slot.remaining = r.max_new
+                slot.generated = 0
+                slot.chunks = []
+                slot.first_t = None
+                tok = int(r.prompt[-1])
+                self.stats.admitted += 1
+            else:
+                # resume: KV valid on [0, valid_end); next input token
+                # is the last one generated (or prompt[-1] if preempted
+                # before any) — exactly where the stream left off
+                slot.pos = sp.valid_end
+                slot.remaining = r.max_new - sp.generated
+                slot.generated = sp.generated
+                slot.chunks = ([(sp.tokens.reshape(1, -1), 0,
+                                 sp.generated)] if sp.generated else [])
+                slot.first_t = sp.first_t
+                tok = (int(sp.tokens[-1]) if sp.generated
+                       else int(r.prompt[-1]))
             self._tables[i] = st.rb.table_row(self.blocks_per_table)
             self._slot_rb[i] = st.rb
-            admit_slots.append(i)
-            admit_toks.append(int(st.prompt[-1]))
-            self.stats.admitted += 1
-        return admit_slots, admit_toks
+            self._admit_pending[i] = tok
 
-    def _retire(self, slot_idx: int) -> None:
+    def _free_slot(self, slot_idx: int) -> None:
         rb = self._slot_rb[slot_idx]
         if rb is not None:
             self.mgr.release_request(rb)
             self._slot_rb[slot_idx] = None
         self._tables[slot_idx] = kvp.SCRATCH_BLOCK
-        super()._retire(slot_idx)
+        self._admit_pending.pop(slot_idx, None)
+        super()._free_slot(slot_idx)
 
     # -- segment decode (admission fused in) -------------------------------
     def _paged_segment_fn(self, num_steps: int, admit_k: int) -> Callable:
@@ -1057,8 +1464,9 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         be pure dispatch overhead, the mistake the slab scheduler's
         hysteresis timeout exists to bound.)"""
         min_rem = min(self.slots[i].remaining for i in active)
-        staging_wants_boundaries = any(
-            not st.done for st in self._staging)
+        staging_wants_boundaries = (
+            any(not st.done for st in self._staging)
+            or bool(self._spilled))   # spills restore only at boundaries
         entry_possible = staging_wants_boundaries or (
             not draining and any(s.free for s in self.slots))
         if entry_possible:
@@ -1067,17 +1475,65 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             return min_rem
         return 1 << (min_rem.bit_length() - 1)
 
+    def _grow_active(self, draining: bool) -> tuple[list[int], int]:
+        """Grow every active row's span to cover the coming segment —
+        the lazy-allocation flip side: staging allocated only the
+        prompt's blocks, so each boundary must secure ``pos + steps``
+        before dispatch. Best-scored rows grow first; a row that cannot
+        grow reclaims from strictly worse holders, and if none exist it
+        spills ITSELF (it is the worst — yielding now beats wedging the
+        segment). Any membership change restarts the pass, so the
+        returned (active, steps) is a fixpoint: every listed row owns
+        its full segment span. Terminates: every restart consumed a
+        victim, and victims are finite."""
+        while True:
+            active = [i for i, s in enumerate(self.slots)
+                      if not s.free and s.remaining > 0]
+            if not active:
+                return [], 0
+            steps = self._segment_steps(active, draining=draining)
+            changed = False
+            for i in sorted(active,
+                            key=lambda j: self._score(self.slots[j].req)):
+                slot = self.slots[i]
+                if slot.free:       # spilled by an earlier row's growth
+                    changed = True
+                    continue
+                rb = self._slot_rb[i]
+                need = slot.pos + steps
+                ok = self.mgr.ensure_span(rb, need)
+                while not ok and self._reclaim_for(
+                        self._score(slot.req), exclude_slot=i):
+                    changed = True
+                    ok = self.mgr.ensure_span(rb, need)
+                if not ok:
+                    self._spill_slot(i)
+                    changed = True
+            if not changed:
+                return active, steps
+
     def _advance(self, *, draining: bool = False) -> None:
+        if self.faults is not None and self.faults.fire("evict_storm"):
+            # injected eviction storm: every cached block force-evicted,
+            # prefix index flushed — restores must survive a cold pool
+            self.mgr.alloc.evict_cached()
         active_now = any(not s.free and s.remaining > 0
                          for s in self.slots)
         self._stage(catch_up=not active_now)
-        admit_slots, admit_toks = self._admit_ready()
+        self._admit_ready()
         self._sync_pool_stats()
-        active = [i for i, s in enumerate(self.slots)
-                  if not s.free and s.remaining > 0]
+        active, steps = self._grow_active(draining)
         if not active:
             return
-        steps = self._segment_steps(active, draining=draining)
+        # growth may have extended (or preemption rebuilt) block spans —
+        # refresh the dispatched tables from the live RequestBlocks
+        for i in active:
+            self._tables[i] = self._slot_rb[i].table_row(
+                self.blocks_per_table)
+        admits = sorted(self._admit_pending.items())
+        self._admit_pending.clear()
+        admit_slots = [i for i, _ in admits]
+        admit_toks = [t for _, t in admits]
         pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
         for i in active:
             pos[i] = self.slots[i].pos
@@ -1114,14 +1570,18 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         a_slots = jnp.asarray(admit_slots, jnp.int32)
         a_toks = jnp.asarray(np.asarray(admit_toks,
                                         np.int32).reshape(-1, 1))
+        t0 = self._timer()
         with kops.execution_plan(self.plan):
             buf, self._toks, self.mgr.pool.cache = seg(
                 self.params, self._toks, self.mgr.pool.cache, pos_arg,
                 bt, a_slots, a_toks, state,
             )
+        if self.watchdog.observe(self._timer() - t0):
+            self.stats.watchdog_events += 1
         self.stats.segments += 1
         self.stats.decode_steps += steps * len(active)
         self.stats.wasted_steps += steps * (self.num_slots - len(active))
+        now = self._clock()
         for i in active:
             slot = self.slots[i]
             take = min(steps, slot.remaining)
@@ -1129,6 +1589,13 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             slot.generated += take
             slot.remaining -= take
             slot.pos += take
+            if slot.first_t is None:
+                # first token dispatched this segment (admitted rows'
+                # correction step ran inside it)
+                slot.first_t = now
+                if slot.req is not None:
+                    self.stats.record_ttft(slot.req.priority,
+                                           now - slot.req.submit_t)
             if slot.remaining == 0:
                 self._retire(i)
         # re-sync after the retirements so stats read at a quiescent

@@ -72,6 +72,40 @@ def test_committed_bench_records_the_pr7_acceptance_numbers():
         assert v > 0
 
 
+def test_committed_bench_records_the_pr8_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    goodput = next(v for n, v in by_name.items()
+                   if n.endswith("goodput_2x_over_fifo"))
+    assert goodput >= 1.0
+    bitexact = next(v for n, v in by_name.items()
+                    if n.endswith("preempt_bitexact"))
+    assert bitexact == 1
+    preempts = next(v for n, v in by_name.items()
+                    if n.endswith("overload/preemptions"))
+    assert preempts > 0          # the overload run actually preempted
+    # the SLO acceptance: high-priority p95 TTFT under 2x load stays
+    # within 2x of the unloaded fleet's p95 (ratio row <= 1.0)
+    ttft = next(v for n, v in by_name.items()
+                if n.endswith("high_ttft_edf_over_2x_unloaded"))
+    assert ttft <= 1.0
+
+
+def test_regressed_goodput_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("goodput_2x_over_fifo"):
+            r["derived"] = 0.8
+    assert any("jumping the backlog" in e for e in check(rows))
+
+
+def test_inexact_preemption_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("preempt_bitexact"):
+            r["derived"] = 0.0
+    assert any("lossless" in e for e in check(rows))
+
+
 def test_tp_token_mismatch_is_flagged():
     rows = _rows()
     for r in rows:

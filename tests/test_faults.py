@@ -1,0 +1,313 @@
+"""Fault injection: the robustness claims, made to fail on demand.
+
+The ``FaultInjector`` is consulted at named sites (alloc, evict_storm,
+stage_stall, dispatch:i) and is a pure function of (seed, consultation
+order) — so a faulted serving run REPLAYS exactly, and the property
+sweep can assert the strong invariants under many seeded interleavings:
+every request still drains, tokens stay bit-exact against the unfaulted
+solo reference, no pool block leaks, no spill-region entry survives,
+and the fleet quarantines a flapping replica instead of wedging on it.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch.faults import FaultInjector, FaultRecord
+from repro.launch.router import ReplicaRouter
+from repro.launch.scheduler import PagedContinuousBatchingServer
+from repro.launch.serve import Server
+from repro.models.registry import get_model
+
+
+def _cfg(arch="nemotron-4-15b"):
+    cfg = cfglib.get_smoke_config(arch)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def nemotron():
+    cfg = _cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params, Server(cfg, params, max_len=48)
+
+
+def _traffic(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    return [
+        (rng.randint(0, cfg.vocab_size, size=rng.randint(3, 10))
+         .astype(np.int32), int(rng.randint(2, 8)))
+        for _ in range(n)
+    ]
+
+
+def _check_exact(solo, done, reqs):
+    for r in done:
+        prompt, gen = reqs[r.rid]
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop")
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], r.tokens)
+
+
+def _assert_quiescent(sched):
+    assert sched.mgr.alloc.in_use == 0
+    assert (sched.mgr.alloc.num_free + sched.mgr.alloc.num_evictable
+            == sched.mgr.alloc.capacity)
+    assert len(sched.spill) == 0 and sched.spill.in_use_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# The injector itself.
+# ---------------------------------------------------------------------------
+
+def test_injector_is_deterministic_per_seed():
+    logs = []
+    for _ in range(2):
+        fi = FaultInjector(7, rates={"alloc": 0.3, "dispatch": 0.2})
+        for i in range(200):
+            fi.fire("alloc")
+            fi.fire(f"dispatch:{i % 3}")
+        logs.append(list(fi.log))
+    assert logs[0] == logs[1] and len(logs[0]) > 0
+    other = FaultInjector(8, rates={"alloc": 0.3, "dispatch": 0.2})
+    for i in range(200):
+        other.fire("alloc")
+        other.fire(f"dispatch:{i % 3}")
+    assert other.log != logs[0]          # the seed matters
+
+
+def test_injector_script_fires_exact_calls():
+    fi = FaultInjector(0, script={"alloc": [2, 5]})
+    hits = [fi.fire("alloc") for _ in range(6)]
+    assert hits == [False, True, False, False, True, False]
+    assert fi.log == [FaultRecord("alloc", 2), FaultRecord("alloc", 5)]
+    assert fi.total_injected == 2
+
+
+def test_injector_base_site_rate_covers_indexed_sites():
+    fi = FaultInjector(0, rates={"dispatch": 1.0})
+    assert fi.fire("dispatch:0") and fi.fire("dispatch:3")
+    assert not fi.fire("alloc")          # unconfigured site never fires
+    specific = FaultInjector(0, rates={"dispatch:1": 1.0})
+    assert specific.fire("dispatch:1")
+    assert not specific.fire("dispatch:0")   # exact key wins over base
+
+
+def test_injector_max_per_site_bounds_storms():
+    fi = FaultInjector(0, rates={"alloc": 1.0}, max_per_site=3)
+    hits = sum(fi.fire("alloc") for _ in range(50))
+    assert hits == 3
+    # scripted fires are exempt from the budget (pinpoint tests)
+    fi2 = FaultInjector(0, script={"alloc": [1]}, max_per_site=0)
+    assert fi2.fire("alloc")
+
+
+# ---------------------------------------------------------------------------
+# Seeded end-to-end: faulted runs drain bit-exact with zero leaks.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_faulted_drain_is_bitexact_and_leak_free(seed, nemotron):
+    """Allocation failures, eviction storms and staging stalls all
+    land mid-run (tight pool so the alloc site is consulted under real
+    pressure too) — and the OUTPUT cannot tell: every request drains
+    with solo-exact tokens, the pool returns to empty, the spill
+    region holds nothing."""
+    cfg, params, solo = nemotron
+    faults = FaultInjector(seed, rates={
+        "alloc": 0.10, "evict_storm": 0.15, "stage_stall": 0.15,
+    }, max_per_site=8)
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8,
+        num_blocks=8, segment=4, faults=faults)
+    reqs = _traffic(cfg, 6, seed=seed + 10)
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    assert len(done) == len(reqs)
+    assert faults.total_injected > 0, "no fault ever fired — dead test"
+    _check_exact(solo, done, reqs)
+    _assert_quiescent(sched)
+
+
+def test_faulted_run_replays_exactly(nemotron):
+    """Same seed, same traffic -> same fault log and same finish order:
+    the injector consults at deterministic points, so a faulted failure
+    reproduces instead of flaking."""
+    cfg, params, _ = nemotron
+    runs = []
+    for _ in range(2):
+        faults = FaultInjector(3, rates={
+            "alloc": 0.2, "stage_stall": 0.2}, max_per_site=6)
+        sched = PagedContinuousBatchingServer(
+            cfg, params, num_slots=2, max_len=48, block_size=8,
+            num_blocks=8, segment=4, faults=faults)
+        reqs = _traffic(cfg, 5, seed=42)
+        for p, g in reqs:
+            sched.submit(p, g)
+        order = []
+        while sched._has_work():
+            order.extend(r.rid for r in sched.step(draining=True))
+        runs.append((list(faults.log), order))
+    assert runs[0] == runs[1]
+
+
+def test_scripted_alloc_failure_rolls_back_staging(nemotron):
+    """Pinpoint: fail the very first allocation — the request's staging
+    attempt unwinds atomically (a stall, not a crash) and the next
+    boundary stages it successfully."""
+    cfg, params, solo = nemotron
+    faults = FaultInjector(0, script={"alloc": [1]})
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8,
+        segment=4, faults=faults)
+    reqs = _traffic(cfg, 3, seed=1)
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    assert len(done) == 3
+    assert sched.stats.stage_stalls >= 1
+    _check_exact(solo, done, reqs)
+    _assert_quiescent(sched)
+
+
+# ---------------------------------------------------------------------------
+# Fleet: dispatch faults, quarantine with exponential backoff, stealing.
+# ---------------------------------------------------------------------------
+
+def _fleet(cfg, params, n, **kw):
+    reps = [
+        PagedContinuousBatchingServer(
+            cfg, params, num_slots=2, max_len=48, block_size=8,
+            segment=4, num_blocks=kw.pop("num_blocks", None) or None)
+        for _ in range(n)
+    ]
+    return ReplicaRouter(reps, **kw)
+
+
+def test_dispatch_faults_quarantine_with_backoff(nemotron):
+    """Three consecutive dispatch errors quarantine replica 0; its
+    queued work survives untouched and finishes once the backoff
+    expires. A second burst during the reprobe doubles the backoff."""
+    cfg, params, solo = nemotron
+    faults = FaultInjector(0, script={"dispatch:0": [1, 2, 3, 4]})
+    fleet = _fleet(cfg, params, 2, faults=faults, quarantine_after=3,
+                   backoff_steps=2)
+    reqs = _traffic(cfg, 4, seed=2)
+    fids = [fleet.submit(p, g) for p, g in reqs]
+    done = {r.rid: r for r in fleet.run()}
+    assert sorted(done) == sorted(fids)
+    assert fleet.stats.dispatch_errors == 4
+    assert fleet.stats.quarantine_events >= 2     # entered, then doubled
+    h = fleet._health[0]
+    assert h.backoff >= 0                          # reset after clean step
+    assert h.consecutive_errors == 0
+    assert fleet.quarantined == []                 # healthy at the end
+    for fid, (prompt, gen) in zip(fids, reqs):
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop")
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], done[fid].tokens)
+    assert fleet.load == 0
+
+
+def test_healthy_fleet_never_quarantines(nemotron):
+    cfg, params, _ = nemotron
+    fleet = _fleet(cfg, params, 2)
+    reqs = _traffic(cfg, 4, seed=3)
+    fids = [fleet.submit(p, g) for p, g in reqs]
+    done = fleet.run()
+    assert len(done) == len(fids)
+    assert fleet.stats.dispatch_errors == 0
+    assert fleet.stats.quarantine_events == 0
+    assert fleet.stats.stolen == 0                 # ample pools: no spills
+
+
+def test_work_stealing_moves_spilled_requests(nemotron):
+    """Same-prefix traffic concentrates on one replica (that is the
+    affinity policy working); when its tight pool preempts, the router
+    migrates the spilled victim to the idle sibling — the fleet drains
+    with every token solo-exact and the steal recorded."""
+    cfg, params, solo = nemotron
+    reps = [
+        PagedContinuousBatchingServer(
+            cfg, params, num_slots=2, max_len=48, block_size=8,
+            num_blocks=6, segment=4)               # 5 allocatable: tight
+        for _ in range(2)
+    ]
+    fleet = ReplicaRouter(reps)
+    rng = np.random.RandomState(4)
+    head = rng.randint(0, cfg.vocab_size, size=6).astype(np.int32)
+    reqs = [(head.copy(), 18) for _ in range(3)]   # 3 blocks grown, shared prefix
+    fids = [fleet.submit(p, g) for p, g in reqs]
+    done = {r.rid: r for r in fleet.run()}
+    assert sorted(done) == sorted(fids)
+    assert fleet.stats.totals.preemptions > 0, "pool never preempted"
+    assert fleet.stats.stolen > 0, "no spill migrated"
+    for fid, (prompt, gen) in zip(fids, reqs):
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop")
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], done[fid].tokens,
+            err_msg=f"fid {fid} (possibly migrated) != solo")
+    assert fleet.load == 0
+    for rep in reps:
+        _assert_quiescent(rep)
+
+
+def test_fleet_cancel_by_fleet_rid(nemotron):
+    cfg, params, solo = nemotron
+    fleet = _fleet(cfg, params, 2)
+    reqs = _traffic(cfg, 4, seed=5)
+    fids = [fleet.submit(p, g) for p, g in reqs]
+    assert fleet.cancel(fids[1])
+    assert not fleet.cancel(fids[1])               # already gone
+    assert not fleet.cancel(999)
+    done = {r.rid for r in fleet.run()}
+    assert done == set(fids) - {fids[1]}
+    assert fleet.stats.totals.cancelled == 1
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: random faulted interleavings keep every invariant.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [11, 12])
+def test_random_faulted_interleavings(seed, nemotron):
+    """Random traffic, random cancels, random fault rates, step-wise
+    drain — after the dust settles: finished == submitted - cancelled,
+    pool empty, spill region empty, and every surviving request's
+    tokens solo-exact. The scheduler-level analogue of the kvpool
+    state-machine interleaving test."""
+    cfg, params, solo = nemotron
+    rng = np.random.RandomState(seed)
+    faults = FaultInjector(seed, rates={
+        "alloc": 0.08, "evict_storm": 0.1, "stage_stall": 0.1,
+    }, max_per_site=6)
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=48, block_size=8,
+        num_blocks=8, segment=4, faults=faults)
+    reqs = _traffic(cfg, 8, seed=seed)
+    submitted, cancelled, finished = [], set(), []
+    for p, g in reqs:
+        submitted.append(sched.submit(p, g))
+        if rng.rand() < 0.5:
+            finished.extend(sched.step())
+        if rng.rand() < 0.25 and submitted:
+            victim = submitted[int(rng.randint(len(submitted)))]
+            if victim not in cancelled and sched.cancel(victim):
+                cancelled.add(victim)
+    while sched._has_work():
+        finished.extend(sched.step(draining=True))
+    assert {r.rid for r in finished} == set(submitted) - cancelled
+    _check_exact(solo, finished, reqs)
+    _assert_quiescent(sched)

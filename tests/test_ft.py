@@ -112,3 +112,81 @@ def test_trainer_data_stream_restart_alignment(tiny):
     np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
     b3 = pipeline.make_batch(cfg, CELL, step=8)
     assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Serving-side segment watchdog (non-fatal straggler events).
+# ---------------------------------------------------------------------------
+
+def test_segment_watchdog_quiet_on_steady_segments():
+    from repro.ft.watchdog import SegmentWatchdog
+
+    w = SegmentWatchdog(min_samples=4)
+    assert not any(w.observe(0.1 + 0.001 * i) for i in range(50))
+    assert w.events == []
+    assert abs(w.median_segment_s - 0.12) < 0.02
+
+
+def test_segment_watchdog_records_stall_and_keeps_baseline():
+    from repro.ft.watchdog import SegmentWatchdog
+
+    w = SegmentWatchdog(k=8.0, min_samples=4)
+    for _ in range(8):
+        w.observe(0.1)
+    assert w.observe(2.0)                  # 20x median: event
+    ev = w.events[-1]
+    assert ev.seconds == 2.0 and abs(ev.median - 0.1) < 1e-9
+    assert ev.threshold == 8.0 * ev.median
+    # the stall is EXCLUDED from the baseline: the next normal segment
+    # is judged against the same median, and a second stall still trips
+    assert abs(w.median_segment_s - 0.1) < 1e-9
+    assert not w.observe(0.1)
+    assert w.observe(2.0)
+    assert len(w.events) == 2
+
+
+def test_segment_watchdog_warms_up_before_judging():
+    from repro.ft.watchdog import SegmentWatchdog
+
+    w = SegmentWatchdog(min_samples=8)
+    # huge variance during warm-up: never an event
+    for t in (0.001, 5.0, 0.001, 5.0, 0.001):
+        assert not w.observe(t)
+    with pytest.raises(ValueError, match="k must be"):
+        SegmentWatchdog(k=1.0)
+
+
+def test_segment_watchdog_wired_into_drain_loop():
+    """An injected slow segment (fake timer) during a real paged drain
+    lands in ``SchedulerStats.watchdog_events`` — and changes nothing
+    about the tokens (non-fatal by design)."""
+    import jax
+
+    from repro.launch.scheduler import PagedContinuousBatchingServer
+    from repro.models.registry import get_model as _gm
+
+    cfg = cfglib.get_smoke_config("nemotron-4-15b")
+    api = _gm(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    from repro.ft.watchdog import SegmentWatchdog
+
+    sched = PagedContinuousBatchingServer(
+        cfg, params, num_slots=2, max_len=32, block_size=8, segment=2)
+    sched.watchdog = SegmentWatchdog(k=8.0, min_samples=2)
+    # fake timer: each call pair brackets one segment dispatch; the
+    # third segment "takes" ~1000x the baseline wall time
+    ticks = [0]
+
+    def timer():
+        ticks[0] += 1
+        return 1000.0 * ticks[0] if ticks[0] == 6 else float(ticks[0])
+
+    sched._timer = timer
+    rng = np.random.RandomState(0)
+    for _ in range(6):
+        sched.submit(
+            rng.randint(0, cfg.vocab_size, size=5).astype(np.int32), 8)
+    done = sched.run()
+    assert len(done) == 6
+    assert sched.stats.watchdog_events >= 1
+    assert len(sched.watchdog.events) == sched.stats.watchdog_events

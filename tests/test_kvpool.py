@@ -410,3 +410,160 @@ def test_pool_axes_probe_and_gather_roundtrip(arch, int8):
                            p % bs, axis=la - 1)
             got = jnp.take(jnp.take(g, 0, axis=ba), p, axis=la - 1)
             np.testing.assert_array_equal(np.asarray(src), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Lazy growth, forced eviction, spill/restore — the preemption substrate.
+# ---------------------------------------------------------------------------
+
+def test_ensure_span_grows_lazily_and_atomically():
+    mgr, _ = _mgr(num_blocks=5, block_size=4)       # 4 allocatable
+    prompt = np.arange(1, 6, dtype=np.int32)        # S=5
+    rb = mgr.begin_request(prompt, 4)               # 1 block staged
+    assert len(rb.bids) == 1
+    assert mgr.ensure_span(rb, 4)                   # covered: no-op
+    assert len(rb.bids) == 1
+    assert mgr.ensure_span(rb, 9)                   # grow to 3 blocks
+    assert len(rb.bids) == 3 and rb.span == 12
+    for b in rb.bids[1:]:                           # growth goes active
+        assert mgr.alloc.state(b) is BlockState.ACTIVE
+        assert mgr.alloc.refcount(b) == 1
+    before = (mgr.alloc.num_free, mgr.alloc.in_use, list(rb.bids))
+    assert not mgr.ensure_span(rb, 24)              # needs 6 > capacity
+    after = (mgr.alloc.num_free, mgr.alloc.in_use, list(rb.bids))
+    assert after == before                          # partial growth unwound
+    mgr.release_request(rb)
+    assert mgr.alloc.in_use == 0
+
+
+def test_evict_cached_flushes_lru_first():
+    mgr, _ = _mgr(num_blocks=8, block_size=4)
+    p1 = np.arange(1, 10, dtype=np.int32)           # 2 full prefix blocks
+    p2 = np.arange(50, 59, dtype=np.int32)
+    for p in (p1, p2):
+        rb = mgr.begin_request(p, p.size)
+        mgr.publish_prompt(p, rb)
+        mgr.release_request(rb)
+    assert mgr.alloc.num_evictable == 4
+    assert mgr.alloc.evict_cached(1) == 1           # LRU = p1's first block
+    assert mgr.alloc.lookup(prefix_key(p1, 4)) is None
+    assert mgr.alloc.lookup(prefix_key(p2, 4)) is not None
+    n = mgr.alloc.evict_cached()                    # flush the rest
+    assert n == 3 and mgr.alloc.num_evictable == 0
+    assert mgr.alloc.num_free + 0 == mgr.alloc.capacity
+    assert mgr.counters.evictions == 4
+
+
+def test_spill_restore_roundtrip_is_bit_exact():
+    """Manager-level spill -> restore: block content round-trips
+    through host numpy exactly, a surviving prefix block is re-spliced
+    (same physical block), and a flushed index forces the rewrite path
+    — both restores yield identical device bytes."""
+    mgr, _ = _mgr(num_blocks=8, block_size=4)
+    prompt = np.arange(1, 10, dtype=np.int32)       # S=9: 2 full blocks
+    rb = mgr.begin_request(prompt, 12)              # 3 blocks
+    mgr.publish_prompt(prompt, rb)
+    mgr.pool.cache = jax.tree.map(
+        lambda f: jnp.arange(f.size, dtype=jnp.float32).reshape(
+            f.shape).astype(f.dtype), mgr.pool.cache)
+    want = [np.asarray(jnp.take(f, b, axis=ax))
+            for b in rb.bids
+            for f, ax in zip(jax.tree.leaves(mgr.pool.cache),
+                             jax.tree.leaves(mgr.pool.batch_axes))]
+    payload = mgr.spill_request(rb, 12)
+    assert payload["n_blocks"] == 3 and payload["nbytes"] > 0
+    assert mgr.alloc.in_use == 0                    # victim pins nothing
+    for flush in (False, True):
+        if flush:
+            mgr.alloc.evict_cached()                # kill every splice
+        rb2 = mgr.restore_request(prompt, payload)
+        assert rb2 is not None and len(rb2.bids) == 3
+        assert rb2.prefix_hit_blocks == (2 if not flush else 0)
+        got = [np.asarray(jnp.take(f, b, axis=ax))
+               for b in rb2.bids
+               for f, ax in zip(jax.tree.leaves(mgr.pool.cache),
+                                jax.tree.leaves(mgr.pool.batch_axes))]
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(w, g)
+        # restore re-publishes: a sibling can splice the prompt blocks
+        assert mgr.alloc.lookup(prefix_key(prompt, 4)) == rb2.bids[0]
+        mgr.spill_request(rb2, 12)                  # spill again for round 2
+    assert mgr.alloc.in_use == 0
+
+
+def test_restore_unwinds_atomically_when_pool_is_full():
+    mgr, _ = _mgr(num_blocks=5, block_size=4)       # 4 allocatable
+    prompt = np.arange(1, 6, dtype=np.int32)
+    rb = mgr.begin_request(prompt, 8)               # 2 blocks
+    payload = mgr.spill_request(rb, 8)
+    mgr.alloc.evict_cached()                        # no splices survive
+    hog = mgr.begin_request(np.asarray([77], np.int32), 12)  # 3 of 4
+    before = (mgr.alloc.num_free, mgr.alloc.in_use)
+    assert mgr.restore_request(prompt, payload) is None   # needs 2, has 1
+    assert (mgr.alloc.num_free, mgr.alloc.in_use) == before
+    mgr.release_request(hog)
+    assert mgr.restore_request(prompt, payload) is not None  # payload kept
+
+
+def _injecting_hook(fail_at):
+    """A fault hook failing the Nth alloc (1-based), counting calls."""
+    calls = [0]
+
+    def hook():
+        calls[0] += 1
+        return calls[0] == fail_at
+
+    return hook, calls
+
+
+def test_begin_request_rolls_back_on_injected_failure_at_every_step():
+    """The satellite bugfix, exhaustively: begin_request's fresh-alloc
+    loop can die on ANY allocation (the fault hook fails the Nth); the
+    partially built request must fully unwind — hits re-cached, fresh
+    blocks freed, counters balanced — and a later begin succeed."""
+    for fail_at in range(1, 5):
+        mgr, _ = _mgr(num_blocks=8, block_size=4)
+        prompt = np.arange(1, 10, dtype=np.int32)   # 2 full prefix blocks
+        seed_rb = mgr.begin_request(prompt, prompt.size)
+        mgr.publish_prompt(prompt, seed_rb)
+        mgr.release_request(seed_rb)                # 2 cached hits ready
+        hook, calls = _injecting_hook(fail_at)
+        mgr.alloc.fault_hook = hook
+        before = {b: (mgr.alloc.state(b), mgr.alloc.refcount(b))
+                  for b in range(1, 8)}
+        rb = mgr.begin_request(prompt, 24)          # 2 hits + 4 fresh
+        if calls[0] >= fail_at:                     # the hook fired
+            assert rb is None
+            after = {b: (mgr.alloc.state(b), mgr.alloc.refcount(b))
+                     for b in range(1, 8)}
+            assert after == before, f"fail_at={fail_at} corrupted state"
+        else:
+            assert rb is not None
+        mgr.alloc.fault_hook = None
+        rb2 = mgr.begin_request(prompt, 24)
+        assert (rb2 is not None) or (rb is not None)
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(1, 8), st.integers(2, 12), st.integers(4, 28))
+    def test_begin_request_injection_hypothesis(fail_at, plen, span):
+        """Property form: for ANY (failing allocation index, prompt
+        length, span), a failed begin_request leaves the allocator
+        exactly as it found it."""
+        a_cfg = cfglib.get_smoke_config("nemotron-4-15b")
+        api = get_model(a_cfg)
+        mgr = PagedKVManager(api, a_cfg, L.HOST, num_blocks=8,
+                             block_size=4)
+        prompt = np.arange(1, plen + 1, dtype=np.int32)
+        hook, calls = _injecting_hook(fail_at)
+        mgr.alloc.fault_hook = hook
+        before = (mgr.alloc.num_free, mgr.alloc.num_evictable,
+                  mgr.alloc.in_use)
+        rb = mgr.begin_request(prompt, max(span, plen))
+        if rb is None:
+            assert (mgr.alloc.num_free, mgr.alloc.num_evictable,
+                    mgr.alloc.in_use) == before
+        else:
+            assert mgr.alloc.in_use == len(rb.bids)

@@ -73,3 +73,56 @@ def test_free_all_resets_intermediates_only():
     sb.free_all()
     sb.allocate("a", 64)  # re-placeable after task end
     assert sb.utilization() > 0
+
+
+# ---------------------------------------------------------------------------
+# Spill region: the sidebar ownership discipline, host-side.
+# ---------------------------------------------------------------------------
+
+def test_spill_region_lifecycle_and_accounting():
+    from repro.core.sidebar import SidebarSpillRegion
+
+    r = SidebarSpillRegion()
+    r.stage(7)
+    assert 7 in r and len(r) == 1
+    r.commit(7, {"blocks": [1, 2]}, 128)
+    assert r.in_use_bytes == 128 and r.peak_bytes == 128
+    assert r.spills == 1
+    assert r.fetch(7) == {"blocks": [1, 2]}         # non-consuming
+    assert r.fetch(7)["blocks"] == [1, 2]
+    assert r.restores == 2
+    r.release(7)
+    assert 7 not in r and r.in_use_bytes == 0
+    assert r.peak_bytes == 128                      # high-water sticks
+
+
+def test_spill_region_rejects_out_of_order_transitions():
+    from repro.core.sidebar import SidebarProtocolError, SidebarSpillRegion
+
+    r = SidebarSpillRegion()
+    with pytest.raises(SidebarProtocolError, match="commit"):
+        r.commit(1, None, 0)                        # commit before stage
+    with pytest.raises(SidebarProtocolError, match="fetch"):
+        r.stage(1) or r.fetch(1)                    # fetch uncommitted
+    with pytest.raises(SidebarProtocolError, match="already"):
+        r.stage(1)                                  # double stage
+    r.commit(1, "x", 4)
+    with pytest.raises(SidebarProtocolError, match="commit"):
+        r.commit(1, "y", 4)                         # double commit
+    r.release(1)
+    with pytest.raises(SidebarProtocolError, match="release"):
+        r.release(1)                                # double release
+
+
+def test_spill_region_capacity_bound():
+    from repro.core.sidebar import SidebarProtocolError, SidebarSpillRegion
+
+    r = SidebarSpillRegion(capacity_bytes=100)
+    r.stage(1)
+    r.commit(1, "a", 80)
+    r.stage(2)
+    with pytest.raises(SidebarProtocolError, match="capacity"):
+        r.commit(2, "b", 40)
+    r.release(1)
+    r.commit(2, "b", 40)                            # fits after release
+    assert r.in_use_bytes == 40
