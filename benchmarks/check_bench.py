@@ -45,6 +45,11 @@ REQUIRED_ROWS = (
     "fleet_prefix_hit_rate",
     "fleet_random_hit_rate",
     "router_affinity_over_random",
+    "spec/tok_s",
+    "spec_plain/tok_s",
+    "spec_over_plain",
+    "spec_tokens_match",
+    "spec/acceptance_rate",
     "overload/goodput_edf_tok_s",
     "overload/goodput_fifo_tok_s",
     "goodput_2x_over_fifo",
@@ -160,6 +165,26 @@ def check(records: list) -> list[str]:
                 f"got {v!r} — the spill/restore round-trip (KV copy, "
                 "position-keyed PRNG, resume splice) stopped being "
                 "lossless"
+            )
+    spec_match = by_suffix.get("spec_tokens_match")
+    if spec_match is not None:
+        v = spec_match["derived"]
+        if v != 1:
+            errors.append(
+                f"{spec_match['name']}: speculative decode must be "
+                f"token-identical to plain paged decode (== 1), got "
+                f"{v!r} — accept/rollback stopped being lossless (a "
+                "rejected draft leaked into the stream, or the verify "
+                "program's position-keyed sampling drifted from the "
+                "decode path's)"
+            )
+    accept = by_suffix.get("spec/acceptance_rate")
+    if accept is not None:
+        v = accept["derived"]
+        if not isinstance(v, (int, float)) or not 0 <= v <= 1:
+            errors.append(
+                f"{accept['name']}: acceptance must be a rate in [0, 1], "
+                f"got {v!r}"
             )
     paged = by_suffix.get("paged_over_sync_admission")
     if paged is not None:

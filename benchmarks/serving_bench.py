@@ -592,6 +592,73 @@ def router_rows():
     ]
 
 
+# speculative decode: the SAME paged scheduler and heavy-tail traffic,
+# spec (oracle draft, k tokens verified per step) vs plain segment
+# decode. An oracle draft (draft == target) accepts everything, so the
+# spec arm takes exactly ceil(gen/(k+1)) verify dispatches where plain
+# takes gen segment steps — the measured ratio is the dispatch-count
+# mechanism, but on this host the small draft is NOT small (it IS the
+# target), so spec_over_plain is recorded, never gated. The gated
+# invariant is spec_tokens_match: speculation must be invisible in the
+# emitted stream, bit for bit.
+SPEC_K = 3
+
+
+def spec_rows():
+    from repro.launch.spec import SpecConfig
+
+    cfg = _continuous_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    reqs = _traffic(cfg, "heavy_tail")
+    useful = sum(g for _, g in reqs)
+    max_len = PROMPT + GEN + 8
+
+    def make(spec):
+        return PagedContinuousBatchingServer(
+            cfg, params, num_slots=CONT_SLOTS, max_len=max_len,
+            block_size=PAGED_BLOCK, prefill_chunk=PAGED_BLOCK, segment=8,
+            spec=spec)
+
+    spec = make(SpecConfig(draft_cfg=cfg, draft_params=params, k=SPEC_K))
+    plain = make(None)
+
+    def run(server):
+        for p, g in reqs:
+            server.submit(p, g)
+        t0 = time.perf_counter()
+        done = server.run()
+        return time.perf_counter() - t0, done
+
+    _, d_spec = run(spec)       # warmup: compile draft/verify/stage
+    _, d_plain = run(plain)
+
+    def tokens(done):
+        return {r.rid: np.asarray(r.tokens) for r in done}
+
+    match = (len(d_spec) == len(d_plain) == len(reqs)
+             and all(np.array_equal(t, tokens(d_plain)[rid])
+                     for rid, t in tokens(d_spec).items()))
+    ratios, sp, pl = [], [], []
+    for _ in range(PAGED_TRIALS):
+        sw, ds = run(spec)
+        pw, dp = run(plain)
+        match = match and all(np.array_equal(t, tokens(dp)[rid])
+                              for rid, t in tokens(ds).items())
+        ratios.append(pw / sw)
+        sp.append(useful / sw)
+        pl.append(useful / pw)
+    mid = int(np.argsort(ratios)[len(ratios) // 2])
+    return [
+        (f"serving/{ARCH}/spec/tok_s", 1e6 / sp[mid], sp[mid]),
+        (f"serving/{ARCH}/spec_plain/tok_s", 1e6 / pl[mid], pl[mid]),
+        (f"serving/{ARCH}/spec_over_plain", 0.0, ratios[mid]),
+        (f"serving/{ARCH}/spec_tokens_match", 0.0, float(match)),
+        (f"serving/{ARCH}/spec/acceptance_rate", 0.0,
+         spec.stats.spec_acceptance_rate),
+    ]
+
+
 # overload: the fleet at 2x oversubscription. A low-priority backlog
 # saturates every slot on a pool sized so two fully grown spans fill it
 # (lazy allocation's pressure case), then high-priority requests land
@@ -766,4 +833,4 @@ def overload_rows():
 def rows():
     return (loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
             + paged_rows() + paged_kernel_rows() + mesh_rows()
-            + router_rows() + overload_rows())
+            + router_rows() + spec_rows() + overload_rows())

@@ -62,6 +62,26 @@ def build_faults(args):
                          max_per_site=args.max_faults_per_site)
 
 
+def build_spec(args, cfg, params, api):
+    """``--spec-k K`` -> a ``SpecConfig`` (K drafted tokens per row per
+    step). ``--draft-arch`` picks the draft model; the default (unset)
+    is the ORACLE draft — the target itself drafts, so greedy
+    acceptance is exactly 1.0 and the run measures pure
+    draft+verify overhead. Output tokens are bit-identical to plain
+    decode either way; only throughput depends on the draft."""
+    if not args.spec_k:
+        return None
+    from repro.launch.spec import SpecConfig
+
+    if args.draft_arch is None:
+        return SpecConfig(draft_cfg=cfg, draft_params=params, k=args.spec_k)
+    draft_cfg = cfglib.get_smoke_config(args.draft_arch)
+    draft_api = get_model(draft_cfg)
+    draft_params = draft_api.init(jax.random.PRNGKey(1), draft_cfg)
+    return SpecConfig(draft_cfg=draft_cfg, draft_params=draft_params,
+                      k=args.spec_k)
+
+
 def build_mesh(args):
     """``--mesh RxC`` (or RxCxP) -> a canonical serving mesh; the
     "model" (last) axis is the tensor-parallel degree. Run under
@@ -128,6 +148,10 @@ def run_continuous(args, cfg, api, params, plan):
     sample = build_sampling(args)
     mesh = build_mesh(args)
     max_len = args.prompt_len + args.gen
+    spec = build_spec(args, cfg, params, api)
+    if spec is not None and not args.paged:
+        raise SystemExit("--spec-k requires --paged (the verifier runs "
+                         "through the block pool)")
     if args.paged:
         # block_size must divide max_len; snap to the nearest divisor
         bs = args.block_size
@@ -137,9 +161,14 @@ def run_continuous(args, cfg, api, params, plan):
             cfg, params, num_slots=args.slots, max_len=max_len,
             block_size=bs, prefill_chunk=args.prefill_chunk,
             segment=args.segment, plan=plan, kernel=args.kernel,
-            mesh=mesh,
+            mesh=mesh, spec=spec,
         )
-        kind = f"paged (block_size={bs}, kernel={args.kernel})"
+        kind = f"paged (block_size={bs}, kernel={args.kernel}"
+        if spec is not None:
+            kind += (f", spec k={spec.k} "
+                     f"draft={spec.draft_cfg.arch_id}"
+                     f"{' (oracle)' if args.draft_arch is None else ''}")
+        kind += ")"
     else:
         sched = ContinuousBatchingServer(
             cfg, params, num_slots=args.slots, max_len=max_len,
@@ -195,6 +224,16 @@ def run_continuous(args, cfg, api, params, plan):
         if args.requests >= 3:  # enough traffic behind the first admits
             assert sched.stats.prefix_block_hits > 0, (
                 "shared-prefix smoke produced zero prefix-cache hits"
+            )
+    if spec is not None:
+        # the speculative smoke's contract: it actually speculated, the
+        # pool drained clean, and an oracle draft was always accepted
+        assert sched.stats.spec_steps > 0, "spec run never speculated"
+        assert sched.mgr.alloc.in_use == 0, "spec run leaked pool blocks"
+        if args.draft_arch is None and args.temperature is None:
+            assert sched.stats.spec_acceptance_rate == 1.0, (
+                "greedy oracle draft must be fully accepted, got "
+                f"{sched.stats.spec_acceptance_rate:.2f}"
             )
 
 
@@ -322,6 +361,17 @@ def main():
                          "terminates even at rate 1.0")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prefill-ahead chunk length (default block size)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft K tokens per row "
+                         "per step and verify them in one batched "
+                         "program (0 disables; requires --paged); "
+                         "output tokens stay bit-identical to plain "
+                         "decode regardless of the draft model")
+    ap.add_argument("--draft-arch", default=None, choices=cfglib.ARCH_IDS,
+                    help="draft model architecture for --spec-k "
+                         "(default: the target itself — the 'oracle' "
+                         "draft with greedy acceptance 1.0, measuring "
+                         "pure speculation overhead)")
     ap.add_argument("--mesh", default=None,
                     help="serving mesh shape 'DATAxMODEL' (e.g. 1x2): "
                          "continuous serving runs tensor-parallel over "

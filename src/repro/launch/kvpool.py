@@ -523,15 +523,37 @@ class PagedKVManager:
     (prefix splice + atomic span allocation, at staging start),
     ``publish_prompt`` (activate + hash-cons full prompt blocks, at
     admission), ``ensure_exclusive`` (copy-on-write before a write into
-    a shared block), ``release_request`` (at retirement).
+    a shared block), ``release_request`` (at retirement). Lazy growth
+    goes through ``ensure_span`` (the scheduler's ``_grow_active``);
+    preemption through ``spill_request``/``restore_request``.
+
+    ``spare_blocks`` appends that many physical rows to the device pool
+    WITHOUT registering them with the allocator: their ids are
+    ``num_blocks .. num_blocks + spare_blocks - 1`` (``spare_ids``).
+    They are scratch — never refcounted, never hash-consed, never
+    spilled — and exist for the speculative decoder: drafted tokens
+    write into a slot's private spares spliced into its verify table,
+    and only ACCEPTED positions are copied into allocator-owned blocks
+    (``pool.copy_blocks``). A rejected draft therefore leaves zero
+    trace in ``counters`` — not as an accounting convention but because
+    the allocator genuinely never saw it.
     """
 
     def __init__(self, api, cfg, minfo, *, num_blocks: int,
-                 block_size: int, place=None) -> None:
+                 block_size: int, place=None,
+                 spare_blocks: int = 0) -> None:
         self.block_size = int(block_size)
+        self.spare_blocks = int(spare_blocks)
         self.alloc = BlockAllocator(num_blocks)
-        self.pool = KVPool(api, cfg, minfo, num_blocks=num_blocks,
+        self.pool = KVPool(api, cfg, minfo,
+                           num_blocks=num_blocks + self.spare_blocks,
                            block_size=block_size, place=place)
+
+    @property
+    def spare_ids(self) -> range:
+        """Physical ids of the scratch rows past the allocator's reach."""
+        return range(self.alloc.num_blocks,
+                     self.alloc.num_blocks + self.spare_blocks)
 
     @property
     def counters(self) -> PoolCounters:

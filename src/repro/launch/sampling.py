@@ -106,6 +106,27 @@ def merge_rows(rows: list[tuple[Array, SamplingParams | None]]) -> dict:
     return state
 
 
+def sample_token_block(logits: Array, state: dict | None, pos) -> Array:
+    """Sample one token per (row, chunk offset): the verifier's rule.
+
+    ``logits`` (B, S, V) come from a multi-token chunk whose FIRST input
+    token sits at sequence index ``pos`` (scalar or per-row ``(B,)``);
+    the token sampled from offset ``i`` will occupy index
+    ``pos + 1 + i`` and is keyed by exactly that index — the same key
+    single-token decode folds when it reaches the position. This is what
+    makes speculative decoding's accepted prefixes bit-identical to the
+    non-speculative stream for greedy AND sampled rows alike: the
+    emitted token at any index is a pure function of (seed, index,
+    logits), and the logits at an accepted index are the plain-decode
+    logits by induction.
+    """
+    s = logits.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    cols = [sample_tokens(logits[:, i, :], state, pos + 1 + i)
+            for i in range(s)]
+    return jnp.stack(cols, axis=1)
+
+
 def sample_tokens(logits: Array, state: dict | None, pos) -> Array:
     """Sample one token per row; ``pos`` keys each row's PRNG stream.
 

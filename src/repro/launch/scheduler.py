@@ -97,7 +97,9 @@ from repro.launch.serve import (
     make_prefill_step,
     make_serve_step,
     make_tp_spec,
+    make_verify_step,
 )
+from repro.launch.spec import SpecConfig, accepted_prefix, make_draft_program
 from repro.models import layers as L
 from repro.models.registry import get_model
 
@@ -186,7 +188,15 @@ class SchedulerStats:
     Executable-cache counters (``compiles``/``hits``) are THE re-trace
     regression signal; ``wasted_steps`` counts free/dead slot rows the
     batched segment programs decode alongside active ones; the pool/
-    prefix fields are live only on the paged scheduler.
+    prefix fields are live only on the paged scheduler, as are the
+    robustness counters (``preemptions``/``restores``/``unstaged``/
+    ``spilled_blocks``...) and the speculative-decoding group
+    (``spec_steps``/``spec_drafted``/``spec_accepted``/
+    ``spec_commit_copies``, with ``spec_acceptance_rate`` derived).
+    Under speculation ``decode_steps`` still counts EMITTED tokens
+    (1..k+1 per row per verify) and ``wasted_steps`` absorbs the
+    rejected remainder, so throughput accounting stays comparable with
+    plain decode. ``summary()`` renders the lot for smoke logs.
     """
 
     # executable cache
@@ -216,6 +226,11 @@ class SchedulerStats:
     restored_blocks: int = 0
     cancelled: int = 0
     watchdog_events: int = 0   # segments past k * median segment wall
+    # speculative decoding (PagedContinuousBatchingServer(spec=...) only)
+    spec_steps: int = 0        # draft+verify scheduler iterations
+    spec_drafted: int = 0      # draft tokens submitted to the verifier
+    spec_accepted: int = 0     # of those, accepted (matched the target)
+    spec_commit_copies: int = 0  # scratch->pool block copies (accepted KV)
     # per-priority-class latency samples (seconds); dict fields merge by
     # concatenation in ``router.sum_stats``
     ttft_s: dict = dataclasses.field(default_factory=dict)
@@ -268,6 +283,14 @@ class SchedulerStats:
     def wasted_step_frac(self) -> float:
         return self.wasted_steps / max(self.decode_steps, 1)
 
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target accepted. 1.0 means
+        every draft guessed the target's position-keyed token (the
+        oracle-draft ceiling); output correctness never depends on this
+        number — only throughput does."""
+        return self.spec_accepted / max(self.spec_drafted, 1)
+
     def summary(self) -> str:
         """One printable line per concern — the serving example's stats
         report."""
@@ -288,6 +311,13 @@ class SchedulerStats:
                 f"blocks), {self.stage_chunks} staged chunks, "
                 f"{self.stage_stalls} stalls, {self.cow_copies} COW, "
                 f"{self.evictions} evictions",
+            )
+        if self.spec_steps:
+            lines.append(
+                f"speculative: {self.spec_steps} steps, "
+                f"{self.spec_accepted}/{self.spec_drafted} drafts accepted "
+                f"({self.spec_acceptance_rate:.0%}), "
+                f"{self.spec_commit_copies} commit copies",
             )
         if (self.preemptions or self.restores or self.cancelled
                 or self.watchdog_events):
@@ -434,6 +464,19 @@ class ContinuousBatchingServer:
                sample: SamplingParams | None = None, *,
                priority: int = 0, ttft_target: float | None = None,
                itl_target: float | None = None) -> int:
+        """Enqueue a request; returns its rid (echoed on the
+        ``FinishedRequest``). ``sample=None`` decodes greedy; a
+        ``SamplingParams`` gives the request its own temperature/
+        truncation/seed (the position-keyed PRNG makes the stream
+        independent of batching and scheduling). ``priority`` ranks
+        requests for staging/admission (higher first under
+        ``scheduling="edf"``; ignored by FIFO), and ``ttft_target`` /
+        ``itl_target`` (seconds) attach SLO targets: the TTFT target
+        sets the EDF deadline (``submit time + target``), both are
+        reported per-request (``r.ttft`` / ``r.itl``) and as per-class
+        distributions in ``stats``. No-target requests are best-effort
+        — they sort behind every deadline but are never starved of a
+        free slot."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -932,6 +975,30 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         dispatches, closing the admission/segment-fusion open item (one
         program per scheduler iteration, vs prefill + correction +
         segment at the slab scheduler's boundary).
+      * **Lazy allocation + preemption** — ``begin_request`` reserves
+        the staged span only; ``_grow_active`` takes decode blocks as
+        each span crosses a block boundary, so a small pool
+        oversubscribes until it genuinely can't. When a higher-scored
+        arrival (see ``_score``: priority class, then EDF deadline)
+        cannot stage, the scheduler reclaims from strictly worse-scored
+        holders — unstage first, then spill the worst active span's KV
+        to the host-side ``SidebarSpillRegion`` and hand over its slot.
+        Restore splices the blocks back and resumes position-exact; a
+        preempted-then-restored drain is token-identical to an
+        unpressured one (the position-keyed PRNG never sees scheduling
+        history).
+      * **Speculative decoding** — with ``spec=SpecConfig(...)`` each
+        segment step becomes draft → verify → commit: the draft model
+        proposes ``spec.k`` tokens per row from its own dense slot
+        cache (never the pool), the target verifies all k+1 positions
+        in ONE batched rowwise prefill through the block tables, and
+        the host commits the accepted prefix (+ the target's own token
+        at the first mismatch) by lazy span growth + scratch→pool
+        block copies. Verify KV for not-yet-granted positions lands in
+        per-slot spare scratch blocks outside the allocator, so a
+        rejected draft allocates nothing; a fully-rejected step still
+        emits one token. Emitted tokens are bit-identical to plain
+        decode for any draft, greedy and sampled.
 
     Numerics: the table-ordered (B, nb*block_size) view — gathered by
     the slab segment, walked in place by the paged kernel — equals the
@@ -952,11 +1019,19 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                  prefill_chunk: int | None = None,
                  stage_ahead: int | None = None,
                  spill_region: SidebarSpillRegion | None = None,
-                 kernel: str = "paged", **kw) -> None:
+                 kernel: str = "paged",
+                 spec: SpecConfig | None = None, **kw) -> None:
         if kernel not in ("paged", "slab"):
             raise ValueError(
                 f"kernel must be 'paged' or 'slab', got {kernel!r}"
             )
+        # speculative decoding (launch.spec): replaces segment decode
+        # with draft -> one-program verify -> host-side accept/commit.
+        # spec.k == 0 (or None) keeps plain segment decode, bit-exactly.
+        self.spec = spec
+        self._spec_on = spec is not None and spec.k > 0
+        if self._spec_on:
+            spec.validate(cfg)
         # ``kernel="paged"`` (default): segment decode runs IN PLACE on
         # the block pool through ``kernels.ops.paged_attention_*`` —
         # zero pool-wide gather/scatter copies, tables sliced to the
@@ -987,11 +1062,34 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         if nb is None:
             # full tables for every slot + staging/prefix slack + scratch
             nb = (self.num_slots + 2) * self.blocks_per_table + 1
+        # speculative decoding: each slot owns a fixed private slice of
+        # SPARE pool rows (outside the allocator — never refcounted,
+        # never spilled) big enough for the worst-case drafted overhang:
+        # k positions past a block-aligned frontier is ceil(k/bs) blocks.
+        spec_k = self.spec.k if self._spec_on else 0
+        self._n_scratch = -(-spec_k // self.block_size)
         self.mgr = kvp.PagedKVManager(
             self.api, self.cfg, self.minfo,
             num_blocks=nb, block_size=self.block_size,
             place=self.tp.place_cache if self.tp is not None else None,
+            spare_blocks=self.num_slots * self._n_scratch,
         )
+        if self._spec_on:
+            base = self.mgr.alloc.num_blocks
+            self._scratch = [
+                list(range(base + i * self._n_scratch,
+                           base + (i + 1) * self._n_scratch))
+                for i in range(self.num_slots)
+            ]
+            self.draft_api = self.spec.draft_api()
+            self._draft_params = self.spec.draft_params
+            # the draft's own dense slot cache — it NEVER takes pool
+            # blocks; always unsharded (the draft is small by design)
+            self._draft_cache = self.draft_api.init_cache(
+                self.spec.draft_cfg, L.HOST, self.num_slots, self.max_len)
+            # slot -> (rid, draft ingest frontier); keying by rid makes
+            # slot reuse / spill / restore reset the frontier for free
+            self._dpos: dict[int, tuple[int, int]] = {}
         self.cache = None  # the pool replaces the slab entirely
         self.stage_ahead = (self._stage_ahead_arg
                             if self._stage_ahead_arg is not None
@@ -1475,7 +1573,9 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             return min_rem
         return 1 << (min_rem.bit_length() - 1)
 
-    def _grow_active(self, draining: bool) -> tuple[list[int], int]:
+    def _grow_active(self, draining: bool,
+                     steps_override: int | None = None
+                     ) -> tuple[list[int], int]:
         """Grow every active row's span to cover the coming segment —
         the lazy-allocation flip side: staging allocated only the
         prompt's blocks, so each boundary must secure ``pos + steps``
@@ -1485,13 +1585,17 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         segment). Any membership change restarts the pass, so the
         returned (active, steps) is a fixpoint: every listed row owns
         its full segment span. Terminates: every restart consumed a
-        victim, and victims are finite."""
+        victim, and victims are finite. ``steps_override`` fixes the
+        span target instead of ``_segment_steps`` — the speculative path
+        secures ONE position (its ``t_in`` write); drafted positions go
+        to scratch and only accepted ones ever allocate (at commit)."""
         while True:
             active = [i for i, s in enumerate(self.slots)
                       if not s.free and s.remaining > 0]
             if not active:
                 return [], 0
-            steps = self._segment_steps(active, draining=draining)
+            steps = (steps_override if steps_override is not None
+                     else self._segment_steps(active, draining=draining))
             changed = False
             for i in sorted(active,
                             key=lambda j: self._score(self.slots[j].req)):
@@ -1522,6 +1626,9 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self._stage(catch_up=not active_now)
         self._admit_ready()
         self._sync_pool_stats()
+        if self._spec_on:
+            self._advance_spec(draining)
+            return
         active, steps = self._grow_active(draining)
         if not active:
             return
@@ -1601,4 +1708,186 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         # re-sync after the retirements so stats read at a quiescent
         # boundary (e.g. the serving example's summary after run())
         # reflect the released blocks, not the pre-segment snapshot
+        self._sync_pool_stats()
+
+    # -- speculative decoding (launch.spec) --------------------------------
+    def _hist(self, i: int) -> np.ndarray:
+        """Committed token history of the request in slot ``i`` (prompt
+        + accepted generations): ``hist[p]`` is the token at sequence
+        index ``p``, so ``hist[slot.pos]`` is the verifier's ``t_in``."""
+        slot = self.slots[i]
+        return np.concatenate(
+            [slot.prompt, self.slot_tokens(i)]).astype(np.int32)
+
+    def _draft_fn(self) -> Callable:
+        # the draft always runs unsharded and under the DEFAULT execution
+        # plan: per-layer plan entries are keyed to the TARGET's layers
+        return jax.jit(
+            make_draft_program(self.spec.draft_cfg, self.draft_api,
+                               self.spec.k, self.max_len),
+            donate_argnums=(4,),
+        )
+
+    def _verify_fn(self) -> Callable:
+        return jax.jit(
+            make_verify_step(self.cfg, self.api, self.minfo, self.mesh,
+                             tp=self.tp),
+            donate_argnums=(2,),
+        )
+
+    def _draft_tokens(self, active: list[int]) -> np.ndarray:
+        """Run the combined ingest+draft program; returns (N, k) drafts.
+
+        Each round feeds every active row the next <= k+1 committed
+        tokens past its draft frontier (``_dpos``). In steady state the
+        lag is exactly last step's commit (<= k+1), so ONE dispatch
+        ingests and drafts; after admission or a restore the loop runs
+        catch-up rounds until every frontier reaches ``pos + 1``. Rows
+        already caught up re-feed ``t_in`` as a 1-token chunk at ``pos``
+        — an idempotent KV rewrite (same token, same prefix) that keeps
+        the batch shape static. Only the FINAL round's drafts are used
+        (every row is fully ingested by then)."""
+        k = self.spec.k
+        w = k + 1
+        n = self.num_slots
+        max_pos = self.max_len - 1
+        hists = {i: self._hist(i) for i in active}
+        dpos = {}
+        for i in active:
+            rid, dp = self._dpos.get(i, (None, 0))
+            dpos[i] = dp if rid == self.slots[i].rid else 0
+        fn = self._compiled(("draft", n, k), self._draft_fn)
+        while True:
+            chunk = np.zeros((n, w), np.int32)
+            clen = np.ones((n,), np.int32)
+            start = np.full((n,), max_pos, np.int32)
+            final = True
+            for i in active:
+                pos = self.slots[i].pos
+                lag = pos + 1 - dpos[i]
+                if lag <= 0:
+                    start[i] = pos
+                    chunk[i, 0] = hists[i][pos]
+                else:
+                    take = min(lag, w)
+                    start[i] = dpos[i]
+                    chunk[i, :take] = hists[i][dpos[i]:dpos[i] + take]
+                    clen[i] = take
+                    dpos[i] += take
+                    if dpos[i] < pos + 1:
+                        final = False
+            drafts, self._draft_cache = fn(
+                self._draft_params, jnp.asarray(chunk), jnp.asarray(clen),
+                jnp.asarray(start), self._draft_cache)
+            if final:
+                break
+        for i in active:
+            self._dpos[i] = (self.slots[i].rid, dpos[i])
+        return np.asarray(drafts)
+
+    def _advance_spec(self, draining: bool) -> None:
+        """One speculative iteration: draft k, verify k+1 in ONE rowwise
+        program, accept/commit host-side. The pool only ever grows by
+        ACCEPTED positions: the verifier writes drafted positions into
+        the slot's private scratch rows (spliced into its table past the
+        allocated span), and commit copies just the blocks the accepted
+        span reaches into allocator-owned blocks — a rejected draft
+        triggers no allocation and no copy."""
+        k = self.spec.k
+        active, _ = self._grow_active(draining, steps_override=1)
+        if not active:
+            return
+        # admitted rows' correction token comes from host history here
+        # (toks[i, 0] = hist[pos]); the plain path's fused merge is moot
+        self._admit_pending.clear()
+        drafts = self._draft_tokens(active)
+        width = self._segment_table_width(active, k + 1)
+        bt_np = np.full((self.num_slots, width), kvp.SCRATCH_BLOCK,
+                        np.int32)
+        toks = np.zeros((self.num_slots, k + 1), np.int32)
+        pos = np.full((self.num_slots,), self.max_len - 1, np.int32)
+        for i in active:
+            slot = self.slots[i]
+            rb = self._slot_rb[i]
+            row = rb.table_row(self.blocks_per_table)[:width].copy()
+            # scratch splice: drafted positions past the allocated span
+            # land in this slot's private spare rows (never shared, so
+            # concurrent in-chunk reads through the table stay private)
+            need = min(self.mgr.blocks_needed(slot.pos + k + 1), width)
+            for j in range(len(rb.bids), need):
+                row[j] = self._scratch[i][j - len(rb.bids)]
+            bt_np[i] = row
+            toks[i, 0] = self._hist(i)[slot.pos]
+            toks[i, 1:] = drafts[i]
+            pos[i] = slot.pos
+        # no check_span here BY DESIGN: drafted writes intentionally
+        # exceed the span into scratch (coverage is by construction);
+        # table validity is still enforced
+        kvp.validate_tables(bt_np, self.mgr.pool.num_blocks)
+        state = self._segment_sample_state(active)
+        vf = self._compiled(
+            ("specv", self.num_slots, k, width,
+             "sampled" if state is not None else "greedy",
+             self._plan_key),
+            self._verify_fn)
+        t0 = self._timer()
+        with kops.execution_plan(self.plan):
+            tgt, self.mgr.pool.cache = vf(
+                self.params, jnp.asarray(toks), self.mgr.pool.cache,
+                jnp.asarray(pos), jnp.asarray(bt_np), state)
+        # accept policy is host-side (the Sidebar split: flexible policy
+        # on the host, static program on the accelerator) — sync here
+        tgt = np.asarray(tgt)
+        if self.watchdog.observe(self._timer() - t0):
+            self.stats.watchdog_events += 1
+        self.stats.segments += 1
+        self.stats.spec_steps += 1
+        rids = {i: self.slots[i].rid for i in active}
+        wasted = (k + 1) * (self.num_slots - len(active))
+        now = self._clock()
+        for i in sorted(active, key=lambda j: self._score(self.slots[j].req)
+                        if self.slots[j].req is not None else ()):
+            slot = self.slots[i]
+            if slot.free or slot.rid != rids[i]:
+                # spilled by a better row's commit growth below — its
+                # whole round is discarded; the restore redoes it
+                # deterministically, so the stream stays bit-exact
+                wasted += k + 1
+                continue
+            m = accepted_prefix(drafts[i], tgt[i])
+            emit = min(m + 1, slot.remaining)
+            self.stats.spec_drafted += k
+            self.stats.spec_accepted += m
+            rb = self._slot_rb[i]
+            old_nb = len(rb.bids)
+            ok = self.mgr.ensure_span(rb, slot.pos + emit)
+            while not ok and self._reclaim_for(
+                    self._score(slot.req), exclude_slot=i):
+                ok = self.mgr.ensure_span(rb, slot.pos + emit)
+            if not ok:
+                # pool genuinely can't hold the accepted span: keep what
+                # the existing span covers (>= 1 token — growth above
+                # secured pos + 1), drop the rest; progress holds
+                emit = max(1, min(emit, rb.span - slot.pos))
+            new_nb = len(rb.bids)
+            if new_nb > old_nb:
+                dst = rb.bids[old_nb:new_nb]
+                self.mgr.pool.copy_blocks(
+                    dst, self._scratch[i][:len(dst)])
+                kops.record_dispatch("spec_commit_copy", "dma")
+                self.stats.spec_commit_copies += len(dst)
+            self.stats.decode_steps += emit
+            wasted += (k + 1) - emit
+            slot.chunks.append((tgt[i].reshape(1, -1), 0, emit))
+            slot.generated += emit
+            slot.remaining -= emit
+            slot.pos += emit
+            if slot.first_t is None:
+                slot.first_t = now
+                if slot.req is not None:
+                    self.stats.record_ttft(slot.req.priority,
+                                           now - slot.req.submit_t)
+            if slot.remaining == 0:
+                self._retire(i)
+        self.stats.wasted_steps += wasted
         self._sync_pool_stats()

@@ -321,6 +321,71 @@ def make_prefill_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
     return prefill_step
 
 
+def make_verify_step(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
+                     mesh, tp: TpSpec | None = None):
+    """Build the speculative-decode verifier: one batched rowwise program.
+
+    ``verify(params, tokens (B, K+1), cache, pos (B,), block_tables,
+    sample=None) -> (target (B, K+1), cache)``. Row r's chunk is its last
+    committed token followed by K drafted tokens; the chunk writes KV at
+    positions ``pos[r] .. pos[r]+K`` through the block table (drafted
+    positions land in the row's private scratch blocks — the table splice
+    is the caller's job) and ``target[r, i]`` is the token the target
+    model emits at sequence index ``pos[r] + 1 + i``, sampled with the
+    position-keyed PRNG (greedy rows: exact argmax). Comparing drafts
+    against ``target`` host-side therefore reproduces the plain decode
+    stream exactly: position ``pos+1`` is always plain decode's token,
+    and each later position is too whenever every draft before it
+    matched. This is the PR-5 multi-token rowwise prefill with
+    ``all_logits=True`` — only transformer families (dense/moe) support
+    it; with MoE, co-batched positions share expert capacity, so serve
+    with a no-drop ``capacity_factor`` for bit-parity (same caveat as
+    chunked prefill). ``tp`` shard_maps the body exactly like
+    ``make_prefill_step``.
+    """
+    from repro.parallel.hints import sharding_hints
+
+    if tp is not None:
+        cfg_l, minfo_l, rep = tp.cfg_local, tp.minfo, P()
+
+        def tp_body(params, tokens, cache, pos, block_tables, sample):
+            with tplib.tensor_parallel(tp.axis, tp.size):
+                logits, cache = api.prefill(
+                    params, cfg_l, {"tokens": tokens}, cache, minfo=minfo_l,
+                    mesh=None, cache_pos=pos, block_tables=block_tables,
+                    all_logits=True,
+                )
+            logits = L.mask_pad_logits(logits, cfg.vocab_size)
+            target = sampling.sample_token_block(logits, sample, pos)
+            return target, cache
+
+        def tp_verify_step(params, tokens, cache, pos, block_tables,
+                           sample=None):
+            fn = _shard_map(
+                tp_body, mesh=tp.mesh,
+                in_specs=(tp.param_pspecs, rep, tp.cache_pspecs, rep, rep,
+                          rep),
+                out_specs=(rep, tp.cache_pspecs),
+                check_vma=False,
+            )
+            return fn(params, tokens, cache, pos, block_tables, sample)
+
+        return tp_verify_step
+
+    def verify_step(params, tokens, cache, pos, block_tables, sample=None):
+        with sharding_hints(mesh, minfo):
+            logits, cache = api.prefill(
+                params, cfg, {"tokens": tokens}, cache, minfo=minfo,
+                mesh=mesh, cache_pos=pos, block_tables=block_tables,
+                all_logits=True,
+            )
+        logits = L.mask_pad_logits(logits, cfg.vocab_size)
+        target = sampling.sample_token_block(logits, sample, pos)
+        return target, cache
+
+    return verify_step
+
+
 def make_decode_scan(cfg: ModelConfig, api: ModelApi, minfo: L.MeshInfo,
                      mesh, num_steps: int,
                      tp: TpSpec | None = None) -> Callable:

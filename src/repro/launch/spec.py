@@ -1,0 +1,177 @@
+"""Speculative decoding: host-side draft/accept policy, static programs.
+
+This module is the Sidebar thesis applied at the serving level. The
+fast-evolving part of speculative decoding — which draft model to run,
+how many tokens to gamble, when to accept, how to roll back — is a HOST
+policy that changes every time someone has a better idea. The expensive
+part — the target model scoring K+1 positions — is one static batched
+accelerator program. So the split mirrors the paper's scratchpad
+protocol: the accelerator keeps two hot executables (the draft program
+and the verifier), and everything speculative about speculative decoding
+lives in plain Python between dispatches:
+
+  * **Draft.** A small model (its own dense slot cache — it never takes
+    pool blocks) greedily proposes K tokens per active row in one
+    combined program: a W-wide rowwise prefill ingests the tokens the
+    target committed since the draft's frontier, then a K-1 step scan
+    extends greedily. One dispatch per scheduler iteration in steady
+    state (the commit of step N is at most K+1 tokens, which is <= W).
+  * **Verify.** The target runs ``launch.serve.make_verify_step`` — the
+    PR-5 multi-token rowwise prefill through block tables with
+    ``all_logits=True`` — writing the K drafted positions into per-slot
+    SCRATCH blocks spliced into the table by the scheduler, and
+    returning its own (position-key sampled) token at all K+1 positions.
+  * **Accept / rollback.** Pure host arithmetic: the accepted prefix is
+    the longest run of drafts that equal the target's tokens, the row
+    emits ``m+1`` tokens (the target's correction rides for free, so
+    every step makes progress), and rollback is just *not copying* the
+    rejected scratch blocks — rejected tokens never touch the pool and
+    never appear in allocator counters.
+
+Bit-exactness is the contract, not a hope: the verifier samples each
+position with the same position-keyed PRNG rule plain decode uses, and a
+draft is "accepted" exactly when it guessed what plain decode would have
+emitted — so the OUTPUT stream (greedy and sampled alike) is
+token-identical to non-speculative decode, regardless of the draft
+model's quality. A worthless draft only costs throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.registry import ModelApi, get_model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding policy for a paged continuous-batching server.
+
+    ``k`` is the number of tokens drafted (and verified) per row per
+    scheduler iteration; ``k == 0`` disables speculation (the server
+    degenerates to plain segment decode — bit-identical, same
+    executables). ``draft_cfg``/``draft_params`` are the draft model;
+    passing the TARGET's own config and params is the "oracle draft"
+    (acceptance 1.0 under greedy — useful for smoke tests and for
+    benching pure verifier overhead). ``validate(cfg)`` raises
+    ``ValueError`` against a target config when the pairing can't be
+    bit-exact: mismatched vocab (token ids wouldn't be shared) or a
+    draft family without the rowwise multi-token prefill the combined
+    draft program needs.
+    """
+
+    draft_cfg: ModelConfig
+    draft_params: Any
+    k: int = 4
+
+    def __post_init__(self) -> None:
+        if self.k < 0:
+            raise ValueError(f"spec k must be >= 0, got {self.k}")
+
+    def validate(self, cfg: ModelConfig) -> None:
+        from repro.launch.serve import PER_LAYER_PLAN_FAMILIES
+
+        if self.draft_cfg.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft vocab_size {self.draft_cfg.vocab_size} != target "
+                f"vocab_size {cfg.vocab_size}: draft and target must share "
+                "token ids"
+            )
+        if self.draft_cfg.family not in PER_LAYER_PLAN_FAMILIES:
+            raise ValueError(
+                f"draft family {self.draft_cfg.family!r} does not support "
+                "the rowwise multi-token prefill the draft program needs "
+                f"(supported: {PER_LAYER_PLAN_FAMILIES})"
+            )
+
+    def draft_api(self) -> ModelApi:
+        return get_model(self.draft_cfg)
+
+
+def make_draft_program(cfg: ModelConfig, api: ModelApi, k: int,
+                       max_len: int):
+    """Build the combined ingest-and-draft program (one dispatch/step).
+
+    ``draft(params, chunk (B, W), chunk_len (B,), start (B,), cache) ->
+    (drafts (B, k), cache)`` with ``W = k + 1``. Per row: a rowwise
+    prefill writes ``chunk[:chunk_len]`` into the draft's dense slot
+    cache at positions ``start .. start+chunk_len-1`` (the tokens the
+    target committed since this row's draft frontier), the logits at the
+    chunk's last real token give draft #1 by argmax, and a ``k-1`` step
+    greedy scan extends from there. Greedy drafting is deliberate even
+    for sampled rows — the draft is only a GUESS at the target's
+    position-keyed sample; guessing the mode maximizes acceptance
+    without touching the output distribution (acceptance compares
+    against the target's own sampled token).
+
+    Junk-write safety: pad positions beyond ``chunk_len`` and scan
+    positions past a short row's frontier write garbage KV *ahead* of
+    that row's frontier — every such position is either re-ingested
+    (contiguous catch-up overwrites it before the row's frontier
+    reaches it) or at the clamped index ``max_len - 1``, which no valid
+    stream ever writes (the last emitted token is never fed back), so
+    garbage there is dead by the ``kpos <= pos`` attention mask.
+    """
+    w = k + 1
+    max_pos = max_len - 1
+
+    def draft_fn(params, chunk, chunk_len, start, cache):
+        logits, cache = api.prefill(
+            params, cfg, {"tokens": chunk}, cache, minfo=L.HOST, mesh=None,
+            cache_pos=start, all_logits=True,
+        )
+        logits = L.mask_pad_logits(logits, cfg.vocab_size)
+        idx = jnp.clip(chunk_len - 1, 0, w - 1)
+        last = jnp.take_along_axis(
+            logits, idx[:, None, None], axis=1)[:, 0, :]
+        d0 = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        if k == 0:
+            return jnp.zeros((chunk.shape[0], 0), jnp.int32), cache
+        if k == 1:
+            return d0[:, None], cache
+        pos0 = start + chunk_len
+
+        def body(carry, i):
+            tok, cache = carry
+            p = jnp.minimum(pos0 + i, max_pos)
+            lg, cache = api.decode_step(
+                params, cfg, tok[:, None], cache, p, minfo=L.HOST,
+                mesh=None,
+            )
+            lg = L.mask_pad_logits(lg, cfg.vocab_size)
+            nxt = jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, cache), rest = jax.lax.scan(
+            body, (d0, cache), jnp.arange(k - 1, dtype=jnp.int32))
+        drafts = jnp.concatenate([d0[:, None], rest.T], axis=1)
+        return drafts, cache
+
+    return draft_fn
+
+
+def accepted_prefix(drafts: np.ndarray, target: np.ndarray) -> int:
+    """Length of the accepted draft prefix for one row.
+
+    ``drafts`` (k,) vs ``target`` (k+1,): draft i is accepted iff it
+    equals the token the target model itself emitted at that position
+    AND every earlier draft was accepted (a later "match" after a miss
+    is meaningless — the target's logits there were conditioned on the
+    rejected token). The row then emits ``target[:m+1]``: the m accepted
+    tokens re-derived from the target plus its correction/bonus token,
+    which is why even a full rejection makes one token of progress.
+    """
+    m = 0
+    k = len(drafts)
+    while m < k and drafts[m] == target[m]:
+        m += 1
+    return m

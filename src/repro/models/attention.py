@@ -397,21 +397,35 @@ def gqa_attention(
             # per-row scatter: slot row i writes its own position — ONE
             # batched program over unaligned slots instead of num_slots
             # vmapped batch-1 programs (the scheduler's segment decode).
-            if s != 1:
-                raise ValueError(
-                    f"per-row cache positions require single-token decode, "
-                    f"got a length-{s} write"
-                )
             bidx = jnp.arange(b)
-            new_cache["k"] = cache["k"].at[bidx, :, cache_pos, :].set(kq[:, :, 0, :])
-            new_cache["v"] = cache["v"].at[bidx, :, cache_pos, :].set(vq[:, :, 0, :])
-            if int8:
-                new_cache["k_scale"] = (
-                    cache["k_scale"].at[bidx, :, cache_pos].set(ks[:, :, 0])
-                )
-                new_cache["v_scale"] = (
-                    cache["v_scale"].at[bidx, :, cache_pos].set(vs[:, :, 0])
-                )
+            if s == 1:
+                new_cache["k"] = cache["k"].at[bidx, :, cache_pos, :].set(kq[:, :, 0, :])
+                new_cache["v"] = cache["v"].at[bidx, :, cache_pos, :].set(vq[:, :, 0, :])
+                if int8:
+                    new_cache["k_scale"] = (
+                        cache["k_scale"].at[bidx, :, cache_pos].set(ks[:, :, 0])
+                    )
+                    new_cache["v_scale"] = (
+                        cache["v_scale"].at[bidx, :, cache_pos].set(vs[:, :, 0])
+                    )
+            else:
+                # rowwise multi-token chunk on a dense slab (the draft
+                # model's ingest program): each row writes s positions
+                # from its own start; positions past the slab (padded
+                # short rows) carry OOB indices and must vanish, not
+                # clamp onto the slab's last column.
+                ppos = cache_pos[:, None] + jnp.arange(s)[None, :]
+                new_cache["k"] = cache["k"].at[bidx[:, None], :, ppos, :].set(
+                    kq.transpose(0, 2, 1, 3), mode="drop")
+                new_cache["v"] = cache["v"].at[bidx[:, None], :, ppos, :].set(
+                    vq.transpose(0, 2, 1, 3), mode="drop")
+                if int8:
+                    new_cache["k_scale"] = (
+                        cache["k_scale"].at[bidx[:, None], :, ppos].set(
+                            ks.transpose(0, 2, 1), mode="drop"))
+                    new_cache["v_scale"] = (
+                        cache["v_scale"].at[bidx[:, None], :, ppos].set(
+                            vs.transpose(0, 2, 1), mode="drop"))
         else:
             start = (0, 0, cache_pos, 0)
             new_cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, start)
@@ -534,17 +548,20 @@ def mla_attention(
                     new_cache["k_rope"], block_tables).astype(cfg.dtype)
         elif rowwise_pos(cache_pos):
             # per-row scatter (see gqa_attention): batched decode of
-            # slots at unaligned positions, single-token writes only.
-            if s != 1:
-                raise ValueError(
-                    f"per-row cache positions require single-token decode, "
-                    f"got a length-{s} write"
-                )
+            # slots at unaligned positions; s > 1 is the rowwise chunk
+            # write (draft-model ingest), OOB padded positions dropped.
             bidx = jnp.arange(b)
-            new_cache["c_kv"] = cache["c_kv"].at[bidx, cache_pos, :].set(
-                c_kv[:, 0, :].astype(cache["c_kv"].dtype))
-            new_cache["k_rope"] = cache["k_rope"].at[bidx, cache_pos, :].set(
-                k_rope[:, 0, :].astype(cache["k_rope"].dtype))
+            if s == 1:
+                new_cache["c_kv"] = cache["c_kv"].at[bidx, cache_pos, :].set(
+                    c_kv[:, 0, :].astype(cache["c_kv"].dtype))
+                new_cache["k_rope"] = cache["k_rope"].at[bidx, cache_pos, :].set(
+                    k_rope[:, 0, :].astype(cache["k_rope"].dtype))
+            else:
+                ppos = cache_pos[:, None] + jnp.arange(s)[None, :]
+                new_cache["c_kv"] = cache["c_kv"].at[bidx[:, None], ppos, :].set(
+                    c_kv.astype(cache["c_kv"].dtype), mode="drop")
+                new_cache["k_rope"] = cache["k_rope"].at[bidx[:, None], ppos, :].set(
+                    k_rope.astype(cache["k_rope"].dtype), mode="drop")
         else:
             new_cache["c_kv"] = jax.lax.dynamic_update_slice(
                 cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))

@@ -389,13 +389,17 @@ def init_cache(cfg: ModelConfig, m: MeshInfo, batch: int, max_len: int) -> dict:
 
 def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
             table=DEFAULT_TABLE, minfo: MeshInfo = L.HOST, mesh=None,
-            cache_pos=None, block_tables=None):
+            cache_pos=None, block_tables=None, all_logits: bool = False):
     """Write the prompt's KV. ``cache_pos`` (default 0) is the position
     of the chunk's first token — chunked prefill runs this repeatedly
     with advancing offsets (scalar, or per-row ``(B,)`` for staged rows
     at unaligned frontiers); RoPE, the causal mask, and the KV writes
     all key off it. ``block_tables`` (B, nb) routes the writes through
-    the paged KV pool instead of a dense slab."""
+    the paged KV pool instead of a dense slab. ``all_logits`` returns
+    logits at EVERY chunk position (B, S, V) instead of the last only —
+    the speculative-decode verifier needs the target's prediction after
+    each drafted token; default off keeps the (B, 1, V) shape and
+    skips the S-wide unembed for every existing caller."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     x = L.embed_lookup(params["embed"], tokens,
@@ -413,7 +417,9 @@ def prefill(params, cfg: ModelConfig, batch: dict, cache: dict, *,
         memory=batch.get("image_embeds"),
     )
     x = _unboundary(x, cfg)
-    x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    if not all_logits:
+        x = x[:, -1:, :]
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return L.unembed(x, params["embed"]), new_cache
 
 

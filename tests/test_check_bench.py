@@ -90,6 +90,29 @@ def test_committed_bench_records_the_pr8_acceptance_numbers():
     assert ttft <= 1.0
 
 
+def test_committed_bench_records_the_pr9_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    match = next(v for n, v in by_name.items()
+                 if n.endswith("spec_tokens_match"))
+    assert match == 1            # speculation invisible in the stream
+    accept = next(v for n, v in by_name.items()
+                  if n.endswith("spec/acceptance_rate"))
+    assert 0 <= accept <= 1
+    # recorded, never gated: the oracle draft IS the target on this
+    # host, so the ratio measures dispatch count minus doubled compute
+    ratio = next(v for n, v in by_name.items()
+                 if n.endswith("spec_over_plain"))
+    assert ratio > 0
+
+
+def test_spec_token_mismatch_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("spec_tokens_match"):
+            r["derived"] = 0.0
+    assert any("accept/rollback" in e for e in check(rows))
+
+
 def test_regressed_goodput_is_flagged():
     rows = _rows()
     for r in rows:

@@ -1,0 +1,294 @@
+"""Speculative decoding: bit-exact acceleration through the paged pool.
+
+The contract under test is stronger than "speculative decoding works":
+the OUTPUT stream is token-identical to plain (non-speculative) decode
+no matter what the draft model proposes — greedy and sampled alike, on
+the GQA, int8-KV, and MLA+MoE cache families — because the verifier
+samples every position with the same position-keyed PRNG plain decode
+uses, and a draft is accepted exactly when it guessed that token. The
+pool-side contract is just as sharp: drafted positions live in spare
+scratch rows outside the allocator, so a rejected draft allocates
+nothing and copies nothing (allocator counters match plain decode
+exactly), while every step still emits at least one token (the target's
+own correction rides along for free).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.kernels import ops as kops
+from repro.launch.sampling import SamplingParams
+from repro.launch.scheduler import PagedContinuousBatchingServer
+from repro.launch.serve import Server
+from repro.launch.spec import SpecConfig, accepted_prefix
+from repro.models.registry import get_model
+
+ARCHS = ["nemotron-4-15b", "nemotron-int8", "deepseek-v3-671b"]
+
+
+def _cfg(arch: str):
+    if arch == "nemotron-int8":
+        cfg = dataclasses.replace(
+            cfglib.get_smoke_config("nemotron-4-15b"),
+            kv_cache_dtype=jnp.int8,
+        )
+    else:
+        cfg = cfglib.get_smoke_config(arch)
+    if cfg.num_experts:
+        # no-drop capacity: co-verified positions share expert capacity
+        # (same caveat as chunked prefill — see the scheduler docstring)
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def served():
+    out = {}
+    for arch in ARCHS:
+        cfg = _cfg(arch)
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        out[arch] = (cfg, params, Server(cfg, params, max_len=48))
+    return out
+
+
+def _traffic(cfg, n, seed=0, max_prompt=14):
+    rng = np.random.RandomState(seed)
+    return [
+        (rng.randint(0, cfg.vocab_size, size=rng.randint(2, max_prompt))
+         .astype(np.int32), int(rng.randint(1, 9)))
+        for _ in range(n)
+    ]
+
+
+def _server(cfg, params, spec, **kw):
+    kw.setdefault("num_slots", 3)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("segment", 4)
+    return PagedContinuousBatchingServer(cfg, params, spec=spec, **kw)
+
+
+def _oracle(cfg, params, k=3):
+    """The target drafts for itself: greedy acceptance is exactly 1.0,
+    so oracle runs exercise the maximal accept/commit path."""
+    return SpecConfig(draft_cfg=cfg, draft_params=params, k=k)
+
+
+def _check_exact(solo, done, reqs, samples=None, arch=""):
+    for r in done:
+        prompt, gen = reqs[r.rid]
+        sample = None if samples is None else samples.get(r.rid)
+        assert r.generated == gen
+        ref = solo.generate(jnp.asarray(prompt)[None, :], gen,
+                            decode="loop", sample=sample)
+        np.testing.assert_array_equal(
+            np.asarray(ref.tokens)[0, prompt.size:], r.tokens,
+            err_msg=f"{arch} rid {r.rid}: speculative != solo decode",
+        )
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness across cache families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_greedy_matches_solo_decode(arch, served):
+    """Greedy speculative decode emits EXACTLY the solo-decode tokens on
+    every cache family — the tier-1 acceptance gate."""
+    cfg, params, solo = served[arch]
+    sched = _server(cfg, params, _oracle(cfg, params))
+    reqs = _traffic(cfg, 7, seed=3)
+    rids = [sched.submit(p, g) for p, g in reqs]
+    done = sched.run()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    _check_exact(solo, done, reqs, arch=arch)
+    assert sched.stats.spec_steps > 0
+    assert sched.mgr.alloc.in_use == 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_spec_sampled_stream_matches(arch, served):
+    """Mixed greedy/sampled traffic: the position-keyed PRNG makes the
+    whole emitted stream (not just accepted prefixes) identical to the
+    non-speculative stream — acceptance means "the draft guessed the
+    sampled token", so rejects re-derive it from the target."""
+    cfg, params, solo = served[arch]
+    sched = _server(cfg, params, _oracle(cfg, params))
+    reqs = _traffic(cfg, 6, seed=5)
+    samples = {}
+    for i, (p, g) in enumerate(reqs):
+        sp = SamplingParams(temperature=0.9, seed=i) if i % 2 else None
+        rid = sched.submit(p, g, sample=sp)
+        samples[rid] = sp
+    done = sched.run()
+    _check_exact(solo, done, reqs, samples, arch)
+
+
+def test_oracle_draft_accepts_everything(served):
+    """Greedy oracle drafting (draft == target) must be fully accepted:
+    the draft's dense-slab argmax equals the verifier's paged argmax at
+    every position — the slab == paged bit-exactness invariant seen
+    through the acceptance counter."""
+    cfg, params, _ = served["nemotron-4-15b"]
+    sched = _server(cfg, params, _oracle(cfg, params))
+    for p, g in _traffic(cfg, 5, seed=7):
+        sched.submit(p, g)
+    sched.run()
+    assert sched.stats.spec_drafted > 0
+    assert sched.stats.spec_accepted == sched.stats.spec_drafted
+    assert sched.stats.spec_acceptance_rate == 1.0
+
+
+# ---------------------------------------------------------------------------
+# rejection: no pool footprint, guaranteed progress
+# ---------------------------------------------------------------------------
+
+def test_rejected_drafts_never_touch_the_pool(served):
+    """A worthless draft (same arch, random weights) is rejected nearly
+    always — yet the stream stays bit-exact, every request completes
+    (>= 1 token per step: the target's correction), and the allocator
+    records EXACTLY the plain-decode block traffic: zero extra allocs,
+    zero scratch->pool commit copies for rejected spans."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    api = get_model(cfg)
+    bad = SpecConfig(draft_cfg=cfg,
+                     draft_params=api.init(jax.random.PRNGKey(7), cfg),
+                     k=3)
+    reqs = _traffic(cfg, 5, seed=9)
+
+    plain = _server(cfg, params, None)
+    for p, g in reqs:
+        plain.submit(p, g)
+    plain.run()
+
+    sched = _server(cfg, params, bad)
+    rec: list = []
+    for p, g in reqs:
+        sched.submit(p, g)
+    with kops.record_dispatches(rec):
+        done = sched.run()
+    _check_exact(solo, done, reqs)
+    # low acceptance (random draft), but never a correctness event
+    assert sched.stats.spec_acceptance_rate < 0.5
+    # the allocator never saw the drafts: identical counters to plain
+    assert sched.mgr.counters.allocs == plain.mgr.counters.allocs
+    copies = [d for d in rec if d.op == "spec_commit_copy"]
+    assert sched.stats.spec_commit_copies == 0
+    assert copies == []
+
+
+def test_full_rejection_steps_make_progress(served):
+    """Even a step whose every draft is rejected emits one token; the
+    per-step emit is bounded by [1, k+1], so total steps never exceed
+    the requested generation length."""
+    cfg, params, _ = served["nemotron-4-15b"]
+    api = get_model(cfg)
+    bad = SpecConfig(draft_cfg=cfg,
+                     draft_params=api.init(jax.random.PRNGKey(7), cfg),
+                     k=3)
+    sched = _server(cfg, params, bad, num_slots=1)
+    sched.submit(np.arange(1, 8, dtype=np.int32), 6)
+    (r,) = sched.run()
+    assert r.generated == 6
+    # with one slot, each spec step advances the lone row by >= 1
+    assert sched.stats.spec_steps <= 6
+    assert sched.stats.decode_steps == 6
+
+
+def test_accepted_prefix_is_a_prefix():
+    """A draft matching AFTER a miss is meaningless (the target's logits
+    there were conditioned on the rejected token) — only the prefix
+    counts."""
+    assert accepted_prefix(np.array([1, 2, 3]), np.array([1, 2, 3, 9])) == 3
+    assert accepted_prefix(np.array([1, 5, 3]), np.array([1, 2, 3, 9])) == 1
+    assert accepted_prefix(np.array([4, 2, 3]), np.array([1, 2, 3, 9])) == 0
+    assert accepted_prefix(np.array([], np.int32), np.array([7])) == 0
+
+
+# ---------------------------------------------------------------------------
+# degeneration, validation
+# ---------------------------------------------------------------------------
+
+def test_spec_k0_degenerates_to_plain_decode(served):
+    """k=0 disables speculation entirely: identical tokens AND identical
+    executables — no draft or verify program is ever built."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    reqs = _traffic(cfg, 5, seed=13)
+    sched = _server(cfg, params,
+                    SpecConfig(draft_cfg=cfg, draft_params=params, k=0))
+    for p, g in reqs:
+        sched.submit(p, g)
+    done = sched.run()
+    _check_exact(solo, done, reqs)
+    kinds = {k[0] for k in sched.executable_cache_keys()}
+    assert "draft" not in kinds and "specv" not in kinds
+    assert sched.stats.spec_steps == 0
+
+
+def test_spec_config_validation(served):
+    cfg, params, _ = served["nemotron-4-15b"]
+    with pytest.raises(ValueError, match="k must be >= 0"):
+        SpecConfig(draft_cfg=cfg, draft_params=params, k=-1)
+    small_vocab = dataclasses.replace(cfg, vocab_size=cfg.vocab_size // 2)
+    with pytest.raises(ValueError, match="vocab_size"):
+        _server(cfg, params,
+                SpecConfig(draft_cfg=small_vocab, draft_params=params, k=2))
+
+
+# ---------------------------------------------------------------------------
+# interaction with preemption and the prefix cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["nemotron-4-15b", "deepseek-v3-671b"])
+def test_spec_with_preemption_bitexact(arch, served):
+    """A deliberately tiny pool under priority traffic: speculative rows
+    get spilled mid-stream (sometimes between draft and commit — the
+    round is discarded and redone after restore), and the drained
+    streams still match solo decode token for token."""
+    cfg, params, solo = served[arch]
+    # 5 allocatable blocks < 2 * 3-block grown spans: lazy growth hits
+    # the wall mid-generation (test_preemption's _tight_server shape)
+    sched = _server(cfg, params, _oracle(cfg, params), num_slots=2,
+                    num_blocks=6, scheduling="edf")
+    reqs = {}
+    rng = np.random.RandomState(21)
+    for i in range(2):
+        p = rng.randint(0, cfg.vocab_size, size=6).astype(np.int32)
+        reqs[sched.submit(p, 18, priority=0)] = (p, 18)
+    sched.step()  # backlog mid-flight ...
+    p = rng.randint(0, cfg.vocab_size, size=12).astype(np.int32)
+    reqs[sched.submit(p, 6, priority=1, ttft_target=30.0)] = (p, 6)
+    done = sched.run()
+    assert len(done) == 3
+    _check_exact(solo, done, reqs, arch=arch)
+    assert sched.stats.preemptions > 0, "tiny pool never preempted"
+    assert sched.stats.restores > 0
+    assert sched.mgr.alloc.in_use == 0
+    assert len(sched.spill) == 0
+
+
+def test_spec_with_prefix_cache_hits(served):
+    """Shared-prefix waves through the speculative path: spliced prefix
+    blocks + scratch-verified drafts still produce solo-exact tokens,
+    and the prefix index actually hit."""
+    cfg, params, solo = served["nemotron-4-15b"]
+    sched = _server(cfg, params, _oracle(cfg, params), num_slots=2,
+                    block_size=4, prefill_chunk=4)
+    rng = np.random.RandomState(17)
+    system = rng.randint(0, cfg.vocab_size, size=9).astype(np.int32)
+    reqs = {}
+    for i in range(4):
+        tail = rng.randint(0, cfg.vocab_size, size=3 + i).astype(np.int32)
+        p = np.concatenate([system, tail])
+        reqs[sched.submit(p, 4)] = (p, 4)
+    done = sched.run()
+    _check_exact(solo, done, reqs)
+    assert sched.stats.prefix_block_hits > 0
