@@ -56,6 +56,11 @@ REQUIRED_ROWS = (
     "overload/high_ttft_p95_edf_s",
     "overload/preemptions",
     "preempt_bitexact",
+    "rag/tok_s",
+    "rag_serial/tok_s",
+    "rag_overlap_over_serial",
+    "rag_chunk_hit_rate",
+    "rag/overlap_frac",
 )
 # rows whose derived value is a throughput and must be a positive number
 TOK_S_ROWS = tuple(r for r in REQUIRED_ROWS if r.endswith("tok_s"))
@@ -185,6 +190,39 @@ def check(records: list) -> list[str]:
             errors.append(
                 f"{accept['name']}: acceptance must be a rate in [0, 1], "
                 f"got {v!r}"
+            )
+    rag_hit = by_suffix.get("rag_chunk_hit_rate")
+    if rag_hit is not None:
+        v = rag_hit["derived"]
+        if not isinstance(v, (int, float)) or not 0 < v <= 1:
+            errors.append(
+                f"{rag_hit['name']}: hot-document queries must share "
+                f"chunk-addressed KV blocks (0 < rate <= 1), got {v!r} — "
+                "zero means content-addressed chunk blocks stopped being "
+                "spliced across queries (chained chunk keys broken, or "
+                "canonical chunk ordering lost)"
+            )
+    rag_ratio = by_suffix.get("rag_overlap_over_serial")
+    if rag_ratio is not None:
+        v = rag_ratio["derived"]
+        if not isinstance(v, (int, float)) or not v >= 1.0:
+            errors.append(
+                f"{rag_ratio['name']}: overlapped retrieval must at "
+                f"least match the retrieve-then-decode pipeline "
+                f"(>= 1.0x), got {v!r} — the submit-time kickoff onto "
+                "the retrieval I/O worker stopped hiding the search "
+                "behind decode, or parked queries stopped capping the "
+                "segment (admission latency eats the win)"
+            )
+    ofrac = by_suffix.get("rag/overlap_frac")
+    if ofrac is not None:
+        v = ofrac["derived"]
+        if not isinstance(v, (int, float)) or not 0 < v <= 1:
+            errors.append(
+                f"{ofrac['name']}: the wave-driven RAG mix must collect "
+                f"most retrievals at the post-dispatch boundary "
+                f"(0 < frac <= 1), got {v!r} — zero means every query "
+                "drained on the serial path and nothing overlapped"
             )
     paged = by_suffix.get("paged_over_sync_admission")
     if paged is not None:

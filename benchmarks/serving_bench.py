@@ -37,6 +37,7 @@ Rows are ``(tag, us_per_token, derived)`` where derived is tokens/s
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -830,7 +831,130 @@ def overload_rows():
     ]
 
 
+# RAG: the SAME paged scheduler, retrieval overlapped with decode (the
+# default: the search starts on the I/O worker at submit and is
+# collected after the next segment dispatch) vs the
+# retrieve-then-decode pipeline (rag_overlap=False quiesces enqueued
+# device work and searches inline on the dispatch thread). Retrieval
+# cost is exact top-k scoring over the whole corpus plus a modeled
+# 20ms payload fetch (io_latency_s — the disk/network stall a
+# CPU-resident toy corpus doesn't otherwise exhibit; it sleeps with
+# the GIL released, so the worker genuinely runs while the dispatch
+# thread is inside XLA). Queries arrive in waves while long-running
+# leads keep every slot decoding: the overlap arm's searches run
+# behind the segment dispatch (synchronous on the CPU backend — the
+# donated cache makes the seg() call block for the whole segment, a
+# window far wider than one wave's retrieval), the serial arm stalls
+# on every search before staging. Two scheduler properties carry the
+# margin, and this row exists to catch regressions in them: (a) the
+# submit-time kickoff onto the I/O worker, and (b) parked queries
+# capping the next segment at ``segment`` steps (see
+# ``_segment_steps``) so retrieved prompts stage at a near boundary
+# instead of waiting out an uncapped power-of-two run — without the
+# cap the overlap arm LOSES (admission latency eats more than
+# retrieval hiding saves). The model is deliberately larger than the
+# other serving rows' smoke cfg (d_model 512, 8 layers): the hiding
+# window is the segment's compute, so it must cost real milliseconds.
+# Lead lengths are staggered so retirements spread across boundaries
+# and wave queries keep being admitted mid-flight. Queries concentrate
+# on a few hot documents, so distinct queries retrieve overlapping
+# chunk sets and the canonical-order pipeline turns that into
+# chunk-block KV hits (the gated rag_chunk_hit_rate). Interleaved
+# paired trials as in _measure_mix.
+RAG_DOCS, RAG_DOC_LEN, RAG_HOT = 2048, 128, 4
+RAG_IO_LATENCY = 0.020
+RAG_LEAD_GENS = (72, 64, 56, 48)        # one per slot, staggered
+RAG_WAVES, RAG_PER_WAVE, RAG_WAVE_GEN = 8, 2, 12
+
+
+def _rag_cfg():
+    # beefed-up smoke config: enough per-step compute that a segment's
+    # in-flight window is worth hiding retrieval behind
+    return dataclasses.replace(_continuous_cfg(), d_model=512,
+                               num_heads=8, num_kv_heads=2,
+                               d_ff=2048, num_layers=8)
+
+
+def _rag_setup(cfg):
+    from repro.retrieval import ChunkedCorpus, EmbeddingIndex, RagPipeline
+    from repro.retrieval import make_toy_corpus
+
+    docs = make_toy_corpus(cfg.vocab_size, n_docs=RAG_DOCS,
+                           doc_len=RAG_DOC_LEN, seed=0)
+    corpus = ChunkedCorpus(docs, chunk_tokens=2 * PAGED_BLOCK)
+    index = EmbeddingIndex(corpus, vocab_size=cfg.vocab_size, seed=0,
+                           io_latency_s=RAG_IO_LATENCY)
+    pipe = RagPipeline(index, system_prefix=list(range(5, 5 + PAGED_BLOCK)),
+                       block_size=PAGED_BLOCK, top_k=2)
+    rng = np.random.RandomState(7)
+
+    def q(i):
+        d = docs[int(rng.randint(RAG_HOT))]
+        lo = int(rng.randint(0, d.size - 8))
+        return d[lo:lo + 4 + (i % 3)].copy()
+
+    leads = [q(i) for i in range(len(RAG_LEAD_GENS))]
+    waves = [[q(w * RAG_PER_WAVE + j) for j in range(RAG_PER_WAVE)]
+             for w in range(RAG_WAVES)]
+    return pipe, leads, waves
+
+
+def rag_rows():
+    cfg = _rag_cfg()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    pipe, leads, waves = _rag_setup(cfg)
+    useful = (sum(RAG_LEAD_GENS)
+              + RAG_WAVES * RAG_PER_WAVE * RAG_WAVE_GEN)
+    max_len = pipe.prompt_len_for + 8 + max(RAG_LEAD_GENS)
+
+    def make(overlap):
+        return PagedContinuousBatchingServer(
+            cfg, params, num_slots=CONT_SLOTS, max_len=max_len,
+            block_size=PAGED_BLOCK, prefill_chunk=PAGED_BLOCK, segment=8,
+            rag=pipe, rag_overlap=overlap)
+
+    def run(server):
+        # leads first (one per slot) so every wave lands mid-decode
+        # with zero free slots; the drive is identical in both arms,
+        # only where each wave's retrieval stall lands differs
+        t0 = time.perf_counter()
+        for q, g in zip(leads, RAG_LEAD_GENS):
+            server.submit_query(q, g)
+        server.step()
+        for wave in waves:
+            for q in wave:
+                server.submit_query(q, RAG_WAVE_GEN)
+            server.step()
+        server.run()
+        return time.perf_counter() - t0
+
+    over, serial = make(True), make(False)
+    for _ in range(2):          # compile + cover both segment shapes
+        run(over), run(serial)
+    hits0 = over.stats.retrieval_chunk_hits     # measured trials only
+    blocks0 = over.stats.retrieval_chunk_blocks
+    ratios, ov, se = [], [], []
+    for _ in range(PAGED_TRIALS):
+        ow = run(over)
+        sw = run(serial)
+        ratios.append(sw / ow)
+        ov.append(useful / ow)
+        se.append(useful / sw)
+    mid = int(np.argsort(ratios)[len(ratios) // 2])
+    hit_rate = (over.stats.retrieval_chunk_hits - hits0) / max(
+        over.stats.retrieval_chunk_blocks - blocks0, 1)
+    return [
+        (f"serving/{ARCH}/rag/tok_s", 1e6 / ov[mid], ov[mid]),
+        (f"serving/{ARCH}/rag_serial/tok_s", 1e6 / se[mid], se[mid]),
+        (f"serving/{ARCH}/rag_overlap_over_serial", 0.0, ratios[mid]),
+        (f"serving/{ARCH}/rag_chunk_hit_rate", 0.0, hit_rate),
+        (f"serving/{ARCH}/rag/overlap_frac", 0.0,
+         over.stats.retrieval_overlap_frac),
+    ]
+
+
 def rows():
     return (loop_vs_scan_rows() + flat_vs_plan_rows() + continuous_rows()
             + paged_rows() + paged_kernel_rows() + mesh_rows()
-            + router_rows() + spec_rows() + overload_rows())
+            + router_rows() + spec_rows() + overload_rows() + rag_rows())

@@ -52,6 +52,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import enum
+import hashlib
 from typing import Callable
 
 import jax
@@ -89,6 +90,38 @@ def prefix_key(tokens: np.ndarray, end: int) -> bytes:
     return np.ascontiguousarray(tokens[:end], dtype=np.int32).tobytes()
 
 
+def chunk_key(prev: bytes, tokens: np.ndarray) -> bytes:
+    """Chained chunk-boundary key: ``H(prev_key || block_tokens)``.
+
+    Semantically IDENTICAL to the whole-prefix byte key — the chain
+    covers the block's content, its offset (the chain depth), and its
+    entire preceding context, which is exactly what a transformer
+    block's KV is a function of — but O(1) bytes per block instead of
+    O(prefix) bytes, so a long RAG prompt's per-boundary keys stay
+    cheap to compute, store, and probe fleet-wide. The ``ck:`` prefix
+    keeps the namespace disjoint from raw whole-prefix keys; SHA-256
+    stands in for byte exactness (collisions are not a serving-scale
+    concern)."""
+    h = hashlib.sha256(prev)
+    h.update(np.ascontiguousarray(tokens, dtype=np.int32).tobytes())
+    return b"ck:" + h.digest()
+
+
+def chunk_keys(tokens: np.ndarray, n_blocks: int,
+               block_size: int) -> list[bytes]:
+    """Chunk-boundary keys for the first ``n_blocks`` full blocks of
+    ``tokens``: ``keys[j]`` addresses the block backing positions
+    ``[j*bs, (j+1)*bs)`` *in this exact context* (the chain threads
+    every preceding block through the digest)."""
+    t = np.asarray(tokens, np.int32).reshape(-1)
+    keys: list[bytes] = []
+    prev = b""
+    for j in range(n_blocks):
+        prev = chunk_key(prev, t[j * block_size:(j + 1) * block_size])
+        keys.append(prev)
+    return keys
+
+
 @dataclasses.dataclass
 class PoolCounters:
     """Allocator-level counters surfaced into ``SchedulerStats``."""
@@ -98,6 +131,15 @@ class PoolCounters:
     cow_copies: int = 0
     prefix_block_lookups: int = 0
     prefix_block_hits: int = 0
+    # full prompt[:-1] blocks that entered begin_request — the honest
+    # hit-rate denominator (a lookup walk that stopped early would
+    # otherwise undercount misses); with the full interior walk below,
+    # lookups == prompt_blocks, but the counter keeps the denominator
+    # exact by construction rather than by walk policy
+    prompt_blocks: int = 0
+    # interior splices: hits at a chunk boundary PAST the first miss —
+    # the capability whole-prefix-walk prefix caching did not have
+    chunk_interior_hits: int = 0
     in_use_peak: int = 0
 
 
@@ -118,11 +160,14 @@ class BlockAllocator:
         self._ref[SCRATCH_BLOCK] = 1
         self._free: collections.deque[int] = collections.deque(
             range(1, num_blocks))
-        # LRU of cached (refcount-0 but indexed) blocks: bid -> key
-        self._evictable: "collections.OrderedDict[int, bytes]" = (
+        # LRU of cached (refcount-0 but indexed) blocks (an ordered set)
+        self._evictable: "collections.OrderedDict[int, None]" = (
             collections.OrderedDict())
         self._index: dict[bytes, int] = {}
-        self._key_of: dict[int, bytes] = {}
+        # a block can be addressable under several aliases — its legacy
+        # whole-prefix byte key AND its chained chunk-boundary key name
+        # the same content — so the reverse map holds every key
+        self._keys_of: dict[int, list[bytes]] = {}
         self.counters = PoolCounters()
         # fault-injection hook (launch.faults): consulted at every
         # alloc(); returning True makes the alloc raise KVPoolError —
@@ -179,9 +224,8 @@ class BlockAllocator:
         if self._free:
             bid = self._free.popleft()
         elif self._evictable:
-            bid, key = self._evictable.popitem(last=False)  # LRU
-            del self._index[key]
-            del self._key_of[bid]
+            bid, _ = self._evictable.popitem(last=False)  # LRU
+            self._drop_keys(bid)
             self.counters.evictions += 1
         else:
             raise KVPoolError(
@@ -245,10 +289,9 @@ class BlockAllocator:
         self._ref[bid] -= 1
         if self._ref[bid] > 0:
             return
-        key = self._key_of.get(bid)
-        if key is not None:
+        if self._keys_of.get(bid):
             self._state[bid] = BlockState.CACHED
-            self._evictable[bid] = key  # most-recently released = MRU
+            self._evictable[bid] = None  # most-recently released = MRU
         else:
             self._state[bid] = BlockState.FREE
             self._free.append(bid)
@@ -263,14 +306,21 @@ class BlockAllocator:
         the eviction-storm injection site and a memory-pressure valve."""
         count = 0
         while self._evictable and (n is None or count < n):
-            bid, key = self._evictable.popitem(last=False)  # LRU
-            del self._index[key]
-            del self._key_of[bid]
+            bid, _ = self._evictable.popitem(last=False)  # LRU
+            self._drop_keys(bid)
             self._state[bid] = BlockState.FREE
             self._free.append(bid)
             self.counters.evictions += 1
             count += 1
         return count
+
+    def _drop_keys(self, bid: int) -> None:
+        """Eviction half of hash-consing: forget every alias the block
+        was addressable under (whole-prefix and chunk keys drop as one
+        — they name the same content, so a partial drop could never be
+        coherent)."""
+        for key in self._keys_of.pop(bid, []):
+            del self._index[key]
 
     # -- prefix index (hash-consing) ---------------------------------------
     def lookup(self, key: bytes) -> int | None:
@@ -280,17 +330,38 @@ class BlockAllocator:
             self.counters.prefix_block_hits += 1
         return bid
 
+    def lookup_any(self, keys) -> int | None:
+        """One COUNTED lookup across alias keys naming the same content
+        (chunk-boundary key first, whole-prefix key as the fallback).
+        However many aliases are probed, the stats see one block-level
+        lookup and at most one hit — the hit rate measures content
+        reuse, not key-scheme redundancy."""
+        self.counters.prefix_block_lookups += 1
+        for key in keys:
+            bid = self._index.get(key)
+            if bid is not None:
+                self.counters.prefix_block_hits += 1
+                return bid
+        return None
+
     def peek(self, key: bytes) -> int | None:
         """Side-effect-free index probe: no counters, no LRU touch. The
         replica router calls this across the whole fleet per request —
         counting those probes would drown the real hit-rate stats."""
         return self._index.get(key)
 
+    def is_registered(self, bid: int) -> bool:
+        """Is the block addressable by content (under any alias)?"""
+        return bool(self._keys_of.get(bid))
+
     def register(self, key: bytes, bid: int) -> int:
         """Hash-cons: publish ``bid`` as THE block for ``key``. If the
         key is already taken (a concurrent request staged the same
         content), the existing block wins and ``bid`` stays a private
-        unshared copy — returns the canonical id either way."""
+        unshared copy — returns the canonical id either way. A block
+        may register under several keys (whole-prefix + chunk-boundary
+        aliases of the same content); all of them drop together at
+        eviction."""
         self._check(bid)
         if self._state[bid] is not BlockState.ACTIVE:
             raise KVPoolError(
@@ -301,10 +372,8 @@ class BlockAllocator:
         existing = self._index.get(key)
         if existing is not None:
             return existing
-        if bid in self._key_of:
-            raise KVPoolError(f"block {bid} already registered")
         self._index[key] = bid
-        self._key_of[bid] = key
+        self._keys_of.setdefault(bid, []).append(key)
         return bid
 
 
@@ -507,8 +576,11 @@ class RequestBlocks:
     pool: ``bids[j]`` backs positions ``[j*bs, (j+1)*bs)``."""
 
     bids: list[int]
-    prefix_hit_blocks: int      # leading bids spliced from the index
+    prefix_hit_blocks: int      # LEADING bids spliced from the index
     span: int                   # positions covered: len(bids) * bs
+    # every spliced block index, interior holes included — a superset
+    # of range(prefix_hit_blocks); staging prefills the complement
+    hit_idx: tuple[int, ...] = ()
 
     def table_row(self, width: int) -> np.ndarray:
         row = np.full((width,), SCRATCH_BLOCK, np.int32)
@@ -562,20 +634,48 @@ class PagedKVManager:
     def blocks_needed(self, n_positions: int) -> int:
         return -(-int(n_positions) // self.block_size)
 
+    def _prompt_keys(self, prompt: np.ndarray,
+                     n_blocks: int) -> list[tuple[bytes, bytes]]:
+        """Per-block alias key pairs (chunk-boundary, whole-prefix) for
+        the first ``n_blocks`` full blocks of ``prompt``. Both name the
+        same content; publication registers both, probes try both."""
+        cks = chunk_keys(prompt, n_blocks, self.block_size)
+        return [(cks[j], prefix_key(prompt, (j + 1) * self.block_size))
+                for j in range(n_blocks)]
+
+    def _peek_block(self, keys: tuple[bytes, bytes]) -> int | None:
+        for key in keys:
+            bid = self.alloc.peek(key)
+            if bid is not None:
+                return bid
+        return None
+
     def prefix_affinity(self, prompt: np.ndarray) -> int:
         """How many leading full ``prompt[:-1]`` blocks this pool already
         holds — the router's steering signal. Pure ``peek``: no counter
         or LRU side effects, so probing every replica per request leaves
         the per-replica prefix stats untouched."""
-        bs = self.block_size
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        n_full = (int(prompt.size) - 1) // bs
+        n_full = (int(prompt.size) - 1) // self.block_size
         hits = 0
-        for j in range(n_full):
-            if self.alloc.peek(prefix_key(prompt, (j + 1) * bs)) is None:
+        for keys in self._prompt_keys(prompt, n_full):
+            if self._peek_block(keys) is None:
                 break
             hits += 1
         return hits
+
+    def chunk_affinity(self, prompt: np.ndarray) -> int:
+        """Chunk-granular affinity: how many of the prompt's full
+        ``prompt[:-1]`` blocks — interior chunk boundaries INCLUDED,
+        not just the leading run — this pool holds. Always >=
+        ``prefix_affinity``; the router steers by it so a replica whose
+        leading block was evicted but whose retrieved-chunk blocks
+        survive still wins the request. Pure ``peek``, like
+        ``prefix_affinity``."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        n_full = (int(prompt.size) - 1) // self.block_size
+        return sum(1 for keys in self._prompt_keys(prompt, n_full)
+                   if self._peek_block(keys) is not None)
 
     def check_span(self, rb: RequestBlocks, end: int) -> None:
         """Host-side companion to the device write's ``mode="drop"``:
@@ -597,23 +697,41 @@ class PagedKVManager:
         the index (refcount bump, zero compute), then allocate fresh
         staged blocks for the rest of the request's whole KV span
         (``n_positions`` = prompt + generation - 1 write positions).
+
+        The walk is chunk-granular and does NOT stop at the first miss:
+        a block found at an interior chunk boundary (its chained key
+        covers content + offset + full preceding context, so the splice
+        is bit-exact by construction) is spliced even when an earlier
+        block was evicted — staging then prefills only the holes. The
+        stats see every full prompt block as one lookup
+        (``prompt_blocks`` is the honest hit-rate denominator) and
+        interior splices separately (``chunk_interior_hits``).
+
         Atomic: returns ``None`` without side effects when the pool
         cannot cover the remainder (the scheduler defers staging)."""
         bs = self.block_size
         need = self.blocks_needed(n_positions)
-        # prefix walk: longest run of full prompt[:-1] blocks in the index
-        hits: list[int] = []
         n_full = (int(prompt.size) - 1) // bs
-        for j in range(min(n_full, need)):
-            bid = self.alloc.lookup(prefix_key(prompt, (j + 1) * bs))
+        n_walk = min(n_full, need)
+        hits: list[tuple[int, int]] = []     # (block index j, bid)
+        miss_seen = False
+        leading = 0
+        for j, keys in enumerate(self._prompt_keys(prompt, n_walk)):
+            bid = self.alloc.lookup_any(keys)
             if bid is None:
-                break
-            hits.append(bid)
+                miss_seen = True
+                continue
+            hits.append((j, bid))
+            if miss_seen:
+                self.counters.chunk_interior_hits += 1
+            else:
+                leading += 1
+        self.counters.prompt_blocks += n_walk
         # retain-then-check: reviving a cached hit removes it from the
         # evictable pool, so availability must be measured AFTER the
         # retains — checking can_alloc first would double-count revived
         # hits as still-evictable and let alloc() raise mid-loop.
-        for bid in hits:
+        for _, bid in hits:
             self.alloc.retain(bid)
         fresh_needed = need - len(hits)
         fresh: list[int] = []
@@ -629,12 +747,18 @@ class PagedKVManager:
             # the hits leak a reference forever
             for bid in fresh:
                 self.alloc.release(bid)
-            for bid in hits:     # revived hits re-cache
+            for _, bid in hits:  # revived hits re-cache
                 self.alloc.release(bid)
             return None
-        return RequestBlocks(bids=hits + fresh,
-                             prefix_hit_blocks=len(hits),
-                             span=need * bs)
+        # weave spliced and fresh blocks into table order
+        by_idx = dict(hits)
+        it = iter(fresh)
+        bids = [by_idx[j] if j in by_idx else next(it)
+                for j in range(need)]
+        return RequestBlocks(bids=bids,
+                             prefix_hit_blocks=leading,
+                             span=need * bs,
+                             hit_idx=tuple(sorted(by_idx)))
 
     def ensure_span(self, rb: RequestBlocks, n_positions: int) -> bool:
         """Lazy growth: extend ``rb`` with fresh exclusive blocks until
@@ -692,13 +816,12 @@ class PagedKVManager:
         bs = self.block_size
         n = payload["n_blocks"]
         n_full = (int(prompt.size) - 1) // bs
+        n_walk = min(n_full, n)
+        keys = self._prompt_keys(prompt, n_walk)
         acquired: list[tuple[int, bool]] = []   # (bid, spliced?)
         try:
             for j in range(n):
-                bid = None
-                if j < n_full:
-                    bid = self.alloc.lookup(prefix_key(prompt,
-                                                       (j + 1) * bs))
+                bid = self.alloc.lookup_any(keys[j]) if j < n_walk else None
                 if bid is not None:
                     self.alloc.retain(bid)
                     acquired.append((bid, True))
@@ -715,32 +838,50 @@ class PagedKVManager:
              in enumerate(acquired) if not spliced])
         for bid in fresh:
             self.alloc.activate(bid)
+        spliced_js = tuple(j for j, (_, spliced) in enumerate(acquired)
+                           if spliced)
+        leading = 0
+        for j in spliced_js:
+            if j != leading:
+                break
+            leading += 1
         rb = RequestBlocks(
             bids=[bid for bid, _ in acquired],
-            prefix_hit_blocks=sum(1 for _, spliced in acquired if spliced),
+            prefix_hit_blocks=leading,
             span=n * bs,
+            hit_idx=spliced_js,
         )
-        # re-publish: restored full prompt blocks re-enter the index so
-        # later requests (and a re-preempted restore) splice them
-        for j in range(min(n_full, n)):
+        # re-publish: restored full prompt blocks re-enter the index
+        # under both key families so later requests (and a re-preempted
+        # restore) splice them whichever way they probe
+        for j in range(n_walk):
             bid = rb.bids[j]
-            if bid not in self.alloc._key_of:
-                self.alloc.register(prefix_key(prompt, (j + 1) * bs), bid)
+            if not self.alloc.is_registered(bid):
+                for key in keys[j]:
+                    self.alloc.register(key, bid)
         return rb
 
     def publish_prompt(self, prompt: np.ndarray, rb: RequestBlocks) -> None:
         """At admission: staged blocks go active, and every full
-        prompt[:-1] block is hash-consed into the prefix index so later
-        requests splice it. (Blocks covering generated positions stay
-        private: their future content depends on this request's own
-        sampling stream, not on any shareable prefix.)"""
-        bs = self.block_size
-        for bid in rb.bids[rb.prefix_hit_blocks:]:
+        prompt[:-1] block is hash-consed into the index — under both its
+        whole-prefix key and its chunk-boundary key — so later requests
+        splice it whichever way they probe. Spliced hit blocks (possibly
+        sparse under interior-hole splicing) are already active and
+        registered. (Blocks covering generated positions stay private:
+        their future content depends on this request's own sampling
+        stream, not on any shareable prefix.)"""
+        hit = set(rb.hit_idx) if rb.hit_idx else set(
+            range(rb.prefix_hit_blocks))
+        n_full = (int(prompt.size) - 1) // self.block_size
+        n_walk = min(n_full, len(rb.bids))
+        keys = self._prompt_keys(prompt, n_walk)
+        for j, bid in enumerate(rb.bids):
+            if j in hit:
+                continue
             self.alloc.activate(bid)
-        n_full = (int(prompt.size) - 1) // bs
-        for j in range(rb.prefix_hit_blocks, min(n_full, len(rb.bids))):
-            self.alloc.register(prefix_key(prompt, (j + 1) * bs),
-                                rb.bids[j])
+            if j < n_walk:
+                for key in keys[j]:
+                    self.alloc.register(key, bid)
 
     def ensure_exclusive(self, rb: RequestBlocks, block_idx: int) -> bool:
         """Copy-on-write: if the block backing ``block_idx`` is shared
@@ -753,7 +894,8 @@ class PagedKVManager:
         this a no-op on today's paths — it is the protocol's safety net,
         and the property tests exercise it directly."""
         bid = rb.bids[block_idx]
-        shared = self.alloc.refcount(bid) > 1 or bid in self.alloc._key_of
+        shared = (self.alloc.refcount(bid) > 1
+                  or self.alloc.is_registered(bid))
         if not shared:
             return False
         new = self.alloc.alloc()       # comes out staged

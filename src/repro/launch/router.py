@@ -9,15 +9,17 @@ across replicas).
 The routing policy is what makes the fleet more than N queues: each
 replica owns its own KV block pool and prefix index, so WHERE a request
 lands decides whether its prompt prefix is recomputed or spliced. The
-router probes every replica's prefix index (``PagedKVManager.
-prefix_affinity`` — a side-effect-free ``peek`` walk, so probing does
-not pollute the per-replica hit-rate stats) and steers the request to
-the replica holding the longest run of full prompt blocks, breaking
-ties (and handling the no-hit case) by least outstanding load. Traffic
-with shared system prompts therefore *concentrates* per prefix family:
-the first request of a family seeds one replica's index and every
-follow-up lands on it, instead of re-prefilling the prefix once per
-replica the way random/round-robin spraying does.
+router probes every replica's index (``PagedKVManager.chunk_affinity``
+— a side-effect-free ``peek`` walk, so probing does not pollute the
+per-replica hit-rate stats) and steers the request to the replica
+holding the most warm prompt blocks — the leading prefix run PLUS any
+interior chunk-boundary blocks (retrieved RAG chunks a sibling request
+published) — breaking ties (and handling the no-hit case) by least
+outstanding load. Traffic with shared system prompts or shared
+retrieved chunks therefore *concentrates* per prefix/chunk family: the
+first request of a family seeds one replica's index and every follow-up
+lands on it, instead of re-prefilling the prefix once per replica the
+way random/round-robin spraying does.
 
 ``policy="random"`` keeps the spray baseline in-tree — the bench's
 affinity-over-random ratio is measured, not assumed.
@@ -176,10 +178,14 @@ class ReplicaRouter:
         if self.policy == "random":
             self.stats.random_routed += 1
             return int(self._rng.randint(len(self.replicas)))
-        affinity = [r.mgr.prefix_affinity(prompt) for r in self.replicas]
+        # chunk_affinity counts EVERY warm prompt block — leading run
+        # plus interior chunk-boundary hits (retrieved-chunk blocks a
+        # sibling request published) — a strictly better reuse signal
+        # than the leading run alone; both probes are side-effect-free
+        affinity = [r.mgr.chunk_affinity(prompt) for r in self.replicas]
         best = max(affinity)
         if best > 0:
-            # longest prefix wins; among equals, least loaded
+            # most warm blocks wins; among equals, least loaded
             tied = [i for i, a in enumerate(affinity) if a == best]
             self.stats.affinity_routed += 1
             return min(tied, key=lambda i: self.replicas[i].load)
@@ -257,7 +263,7 @@ class ReplicaRouter:
                 ]
                 if not cands:
                     continue
-                aff = {j: self.replicas[j].mgr.prefix_affinity(
+                aff = {j: self.replicas[j].mgr.chunk_affinity(
                     sp.req.prompt) for j in cands}
                 best = max(aff.values())
                 pool = [j for j in cands if aff[j] == best]

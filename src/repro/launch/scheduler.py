@@ -215,6 +215,8 @@ class SchedulerStats:
     evictions: int = 0
     prefix_block_lookups: int = 0
     prefix_block_hits: int = 0
+    prefix_prompt_blocks: int = 0   # full prompt[:-1] blocks walked
+    chunk_interior_hits: int = 0    # splices past the first miss
     pool_blocks: int = 0
     pool_in_use: int = 0
     pool_in_use_peak: int = 0
@@ -231,6 +233,11 @@ class SchedulerStats:
     spec_drafted: int = 0      # draft tokens submitted to the verifier
     spec_accepted: int = 0     # of those, accepted (matched the target)
     spec_commit_copies: int = 0  # scratch->pool block copies (accepted KV)
+    # retrieval stage (PagedContinuousBatchingServer(rag=...) only)
+    retrievals: int = 0             # queries assembled by the pipeline
+    retrieval_overlapped: int = 0   # of those, hidden behind a dispatch
+    retrieval_chunk_blocks: int = 0  # retrieved-chunk blocks staged
+    retrieval_chunk_hits: int = 0    # of those, spliced from the index
     # per-priority-class latency samples (seconds); dict fields merge by
     # concatenation in ``router.sum_stats``
     ttft_s: dict = dataclasses.field(default_factory=dict)
@@ -271,9 +278,33 @@ class SchedulerStats:
 
     @property
     def prefix_hit_rate(self) -> float:
-        """Fraction of looked-up prompt blocks served from the prefix
-        index (block-granular)."""
+        """Fraction of full prompt blocks served from the index —
+        hit blocks over prompt blocks WALKED, not over lookups issued.
+        The old lookups-based denominator undercounted the miss side
+        whenever the walk stopped early (and with interior-hole
+        splicing the walk never stops early, so lookups ≈ walked and
+        the two now differ only in old recorded data)."""
+        return self.prefix_block_hits / max(self.prefix_prompt_blocks, 1)
+
+    @property
+    def prefix_lookup_hit_rate(self) -> float:
+        """Deprecated: hits over index LOOKUPS, the pre-chunk-addressing
+        definition of ``prefix_hit_rate``. Kept one release for
+        dashboards pinned to the old denominator."""
         return self.prefix_block_hits / max(self.prefix_block_lookups, 1)
+
+    @property
+    def retrieval_chunk_hit_rate(self) -> float:
+        """Fraction of retrieved-chunk blocks spliced from the KV index
+        rather than prefilled — the chunk-sharing payoff metric."""
+        return (self.retrieval_chunk_hits
+                / max(self.retrieval_chunk_blocks, 1))
+
+    @property
+    def retrieval_overlap_frac(self) -> float:
+        """Fraction of retrievals that ran while a decode segment was
+        in flight (their host time hidden behind accelerator work)."""
+        return self.retrieval_overlapped / max(self.retrievals, 1)
 
     @property
     def pool_occupancy(self) -> float:
@@ -307,8 +338,9 @@ class SchedulerStats:
                 f"kv pool: {self.pool_in_use}/{self.pool_blocks} blocks "
                 f"(peak {self.pool_in_use_peak}), "
                 f"prefix hit rate {self.prefix_hit_rate:.0%} "
-                f"({self.prefix_block_hits}/{self.prefix_block_lookups} "
-                f"blocks), {self.stage_chunks} staged chunks, "
+                f"({self.prefix_block_hits}/{self.prefix_prompt_blocks} "
+                f"blocks, {self.chunk_interior_hits} interior), "
+                f"{self.stage_chunks} staged chunks, "
                 f"{self.stage_stalls} stalls, {self.cow_copies} COW, "
                 f"{self.evictions} evictions",
             )
@@ -318,6 +350,14 @@ class SchedulerStats:
                 f"{self.spec_accepted}/{self.spec_drafted} drafts accepted "
                 f"({self.spec_acceptance_rate:.0%}), "
                 f"{self.spec_commit_copies} commit copies",
+            )
+        if self.retrievals:
+            lines.append(
+                f"retrieval: {self.retrievals} queries "
+                f"({self.retrieval_overlap_frac:.0%} overlapped), "
+                f"chunk hit rate {self.retrieval_chunk_hit_rate:.0%} "
+                f"({self.retrieval_chunk_hits}/"
+                f"{self.retrieval_chunk_blocks} blocks)",
             )
         if (self.preemptions or self.restores or self.cancelled
                 or self.watchdog_events):
@@ -907,6 +947,44 @@ class ContinuousBatchingServer:
 # ---------------------------------------------------------------------------
 
 
+_rag_io_pool: Any = None
+
+
+def _rag_io():
+    """The shared single-thread retrieval worker. ONE worker on
+    purpose: queries retrieve strictly in submission order, and
+    ``RagPipeline.retrieve`` is a pure function of the query over a
+    read-only index, so backgrounding it cannot reorder or change any
+    result — only move its wall time off the dispatch thread (where
+    sleeps in a modeled payload fetch and numpy BLAS both release the
+    GIL and genuinely overlap the synchronous segment dispatch)."""
+    global _rag_io_pool
+    if _rag_io_pool is None:
+        import concurrent.futures
+        _rag_io_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="rag-io")
+    return _rag_io_pool
+
+
+@dataclasses.dataclass(eq=False)
+class _PendingQuery:
+    """A RAG query waiting for its retrieval turn: everything a
+    ``_Request`` needs except the prompt, which retrieval + assembly
+    produce. ``seq`` is reserved at submit, so a query's scheduling
+    score is its ARRIVAL order — retrieval latency never reorders it
+    behind later plain submits."""
+
+    rid: int
+    query: np.ndarray
+    max_new: int
+    sample: SamplingParams | None
+    priority: int
+    ttft_target: float | None
+    itl_target: float | None
+    submit_t: float
+    seq: int
+
+
 @dataclasses.dataclass(eq=False)
 class _Spilled:
     """A preempted request waiting to resume: its generated tokens are
@@ -922,22 +1000,51 @@ class _Spilled:
     first_t: float | None     # original first-token time (TTFT keeps it)
 
 
+def _hole_spans(hit_idx: tuple[int, ...], target: int,
+                block_size: int) -> list[list[int]]:
+    """Position spans ``[start, end)`` of ``[0, target)`` NOT covered by
+    spliced hit blocks — what staging must still prefill. Contiguous
+    misses merge into one span; with no interior hits this degenerates
+    to the classic single ``[hit_len, target)`` frontier."""
+    spans: list[list[int]] = []
+    hit = set(hit_idx)
+    p = 0
+    while p < target:
+        j = p // block_size
+        if j in hit:
+            p = (j + 1) * block_size
+            continue
+        e = min((j + 1) * block_size, target)
+        if spans and spans[-1][1] == p:
+            spans[-1][1] = e
+        else:
+            spans.append([p, e])
+        p = e
+    return spans
+
+
 @dataclasses.dataclass(eq=False)
 class _Staging:
     """A request whose prompt KV is being staged block-by-block into
     the pool (chunked prefill-ahead), before it owns any slot — or a
     restored spill (``resume`` set) that re-enters through the same
-    staged -> admitted path with its KV already in place."""
+    staged -> admitted path with its KV already in place.
+
+    ``todo`` holds the position spans still needing prefill, in order.
+    Interior-hole splicing makes hits sparse, so this is a span LIST,
+    not a single frontier: hit blocks between spans already hold valid
+    KV and are never written. Spans complete front to back (a later
+    span's prefill attends to everything before it, so the earlier
+    span's KV must land first)."""
 
     req: _Request
     rb: kvp.RequestBlocks
-    staged: int               # positions [0, staged) hold valid KV
-    target: int               # = prompt.size - 1 (prefill writes S-1)
+    todo: list[list[int]]     # [start, end) spans, ascending, disjoint
     resume: _Spilled | None = None
 
     @property
     def done(self) -> bool:
-        return self.staged >= self.target
+        return not self.todo
 
 
 class PagedContinuousBatchingServer(ContinuousBatchingServer):
@@ -1020,7 +1127,8 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                  stage_ahead: int | None = None,
                  spill_region: SidebarSpillRegion | None = None,
                  kernel: str = "paged",
-                 spec: SpecConfig | None = None, **kw) -> None:
+                 spec: SpecConfig | None = None,
+                 rag=None, rag_overlap: bool = True, **kw) -> None:
         if kernel not in ("paged", "slab"):
             raise ValueError(
                 f"kernel must be 'paged' or 'slab', got {kernel!r}"
@@ -1044,6 +1152,35 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self.prefill_chunk = int(prefill_chunk or block_size)
         self._stage_ahead_arg = stage_ahead
         self._spill_region_arg = spill_region
+        # retrieval stage (``rag=RagPipeline(...)``): ``submit_query``
+        # parks queries here. With ``rag_overlap`` (default) the search
+        # itself — the expensive, I/O-shaped half — starts immediately
+        # on a background worker (``_rag_io``), so it runs concurrently
+        # with whatever the scheduler does next, including the segment
+        # dispatch (which on the CPU backend blocks for the whole
+        # segment: donated cache buffers make dispatch synchronous, so
+        # single-threaded retrieve-after-dispatch would hide nothing).
+        # ``_drain_queries`` then collects the ranked result and does
+        # the cheap assembly + staging at the boundary AFTER the
+        # dispatch — retrieval for request N+1 hidden behind the
+        # accelerator decoding active requests, the sidebar overlap
+        # schedule at serving granularity. ``rag_overlap=False`` never
+        # kicks off the worker: it quiesces in-flight device work and
+        # retrieves serially before staging — the retrieve-then-decode
+        # pipeline, the bench's comparison arm.
+        self.rag = rag
+        if rag is not None and rag.block_size != int(block_size):
+            raise ValueError(
+                f"RagPipeline block_size {rag.block_size} != scheduler "
+                f"block_size {block_size}: chunk boundaries must land on "
+                "pool block boundaries"
+            )
+        self.rag_overlap = bool(rag_overlap)
+        self._queries: collections.deque[_PendingQuery] = (
+            collections.deque())
+        self._rag_futures: dict[int, Any] = {}      # rid -> Future
+        self._rag_meta: dict[int, list[int]] = {}   # rid -> chunk blocks
+        self.rag_results: dict[int, Any] = {}       # rid -> RagPrompt
         super().__init__(cfg, params, **kw)
         if self.faults is not None:
             # allocation-failure site: every alloc consults the injector
@@ -1122,16 +1259,19 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         self.stats.evictions = c.evictions
         self.stats.prefix_block_lookups = c.prefix_block_lookups
         self.stats.prefix_block_hits = c.prefix_block_hits
+        self.stats.prefix_prompt_blocks = c.prompt_blocks
+        self.stats.chunk_interior_hits = c.chunk_interior_hits
         self.stats.pool_in_use = self.mgr.alloc.in_use
         self.stats.pool_in_use_peak = c.in_use_peak
 
     def _has_work(self) -> bool:
         return (super()._has_work() or bool(self._staging)
-                or bool(self._spilled))
+                or bool(self._spilled) or bool(self._queries))
 
     @property
     def load(self) -> int:
-        return super().load + len(self._staging) + len(self._spilled)
+        return (super().load + len(self._staging) + len(self._spilled)
+                + len(self._queries))
 
     def submit(self, prompt, max_new_tokens: int,
                sample: SamplingParams | None = None, *,
@@ -1154,7 +1294,95 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                               priority=priority, ttft_target=ttft_target,
                               itl_target=itl_target)
 
+    # -- retrieval stage (RAG) ---------------------------------------------
+    def submit_query(self, query, max_new_tokens: int,
+                     sample: SamplingParams | None = None, *,
+                     priority: int = 0, ttft_target: float | None = None,
+                     itl_target: float | None = None) -> int:
+        """Enqueue a RAG query: retrieval + prompt assembly run later as
+        host work between segment dispatches (``rag_overlap`` hides them
+        behind the in-flight decode segment), then the assembled prompt
+        enters the normal pending -> staging -> admission path. Returns
+        the rid; the assembled ``RagPrompt`` (tokens + per-chunk
+        provenance) lands in ``rag_results[rid]`` when retrieval runs.
+
+        Validation is EAGER: the assembled length is deterministic
+        before retrieval (system prefix + top_k chunks are fixed-size,
+        the query rides verbatim), so a too-long or pool-overflowing
+        request raises here, not mid-drain."""
+        if self.rag is None:
+            raise ValueError(
+                "submit_query needs a RagPipeline: construct the server "
+                "with rag=RagPipeline(...)")
+        q = np.asarray(query, np.int32).reshape(-1)
+        if q.size < 1:
+            raise ValueError("empty query")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        s = self.rag.prompt_len_for + q.size
+        if s + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"assembled prompt {s} + max_new {max_new_tokens} "
+                f"exceeds max_len {self.max_len}"
+            )
+        need = self.mgr.blocks_needed(s + max_new_tokens - 1)
+        if need > self.mgr.alloc.capacity:
+            raise ValueError(
+                f"assembled request needs {need} blocks, pool holds "
+                f"{self.mgr.alloc.capacity} — raise num_blocks or "
+                "shrink the request"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queries.append(_PendingQuery(
+            rid=rid, query=q, max_new=int(max_new_tokens), sample=sample,
+            priority=int(priority), ttft_target=ttft_target,
+            itl_target=itl_target, submit_t=self._clock(), seq=self._seq,
+        ))
+        self._seq += 1
+        if self.rag_overlap:
+            # start the search NOW on the I/O worker — it overlaps all
+            # host work and dispatches until the drain collects it
+            self._rag_futures[rid] = _rag_io().submit(
+                self.rag.retrieve, q)
+        return rid
+
+    def _drain_queries(self, *, overlapped: bool) -> None:
+        """Collect retrieval + run assembly for every parked query and
+        promote it to a pending ``_Request``. Called at one of two
+        points in the boundary: right AFTER a segment dispatch
+        (``overlapped=True`` — the search has been running on the I/O
+        worker since submit, hidden behind the dispatch; collecting it
+        here costs only the uncovered remainder) or at the top of
+        ``_advance`` when nothing is decoding / overlap is off (with
+        overlap off there is no future and retrieval runs inline, on
+        the critical path)."""
+        while self._queries:
+            pq = self._queries.popleft()
+            fut = self._rag_futures.pop(pq.rid, None)
+            rp = self.rag.assemble(
+                pq.query, ranked=None if fut is None else fut.result())
+            self.rag_results[pq.rid] = rp
+            self._rag_meta[pq.rid] = rp.chunk_blocks(self.block_size)
+            self.stats.retrievals += 1
+            if overlapped:
+                self.stats.retrieval_overlapped += 1
+            self.pending.append(_Request(
+                pq.rid, rp.tokens, pq.max_new, pq.sample,
+                priority=pq.priority, ttft_target=pq.ttft_target,
+                itl_target=pq.itl_target, submit_t=pq.submit_t,
+                seq=pq.seq,
+            ))
+
     def cancel(self, rid: int) -> bool:
+        for pq in self._queries:
+            if pq.rid == rid:
+                self._queries.remove(pq)
+                # an in-flight search is harmless (pure, read-only) —
+                # just drop the handle so its result is never collected
+                self._rag_futures.pop(rid, None)
+                self.stats.cancelled += 1
+                return True
         for st in self._staging:
             if st.req.rid == rid:
                 # staged (or restored-but-unadmitted): release the
@@ -1190,14 +1418,26 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         bucket-padding argument; MoE: padded/co-staged rows share expert
         capacity — serve no-drop for bit-parity, as with bucketing)."""
         k, c = len(entries), self.prefill_chunk
+        bs = self.block_size
         toks = np.zeros((k, c), np.int32)
         pos = np.empty((k,), np.int32)
         bt = np.empty((k, self.blocks_per_table), np.int32)
         for j, st in enumerate(entries):
-            valid = min(st.target - st.staged, c)
-            toks[j, :valid] = st.req.prompt[st.staged:st.staged + valid]
-            pos[j] = st.staged
-            bt[j] = st.rb.table_row(self.blocks_per_table)
+            s, e = st.todo[0]
+            valid = min(e - s, c)
+            toks[j, :valid] = st.req.prompt[s:s + valid]
+            pos[j] = s
+            row = np.asarray(st.rb.table_row(self.blocks_per_table)).copy()
+            # the chunk's zero-padded tail writes junk past ``valid`` —
+            # harmless when the following blocks are this request's own
+            # fresh staged blocks (the classic case), fatal if one is a
+            # SPLICED hit past an interior hole (junk would overwrite
+            # live shared KV). Divert every block past the last validly
+            # written one to the scratch row: junk lands in junk, and
+            # no valid position in this chunk ever READS that far ahead
+            # (causal attention looks backward only).
+            row[(s + valid - 1) // bs + 1:] = kvp.SCRATCH_BLOCK
+            bt[j] = row
         kvp.validate_tables(bt, self.mgr.pool.num_blocks)
         fn = self._compiled(
             ("stage", k, c, self.blocks_per_table, self._plan_key),
@@ -1209,7 +1449,11 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                 jnp.asarray(bt),
             )
         for st in entries:
-            st.staged += min(st.target - st.staged, c)
+            s, e = st.todo[0]
+            if s + c >= e:
+                st.todo.pop(0)
+            else:
+                st.todo[0][0] = s + c
         self.stats.stage_chunks += k
 
     def _stage(self, *, catch_up: bool) -> None:
@@ -1245,11 +1489,18 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
                 self.stats.stage_stalls += 1
                 break
             self.pending.remove(req)
-            hit_len = min(rb.prefix_hit_blocks * self.block_size,
-                          req.prompt.size - 1)
+            meta = self._rag_meta.pop(req.rid, None)
+            if meta is not None:
+                # chunk-reuse accounting: of the retrieved-chunk blocks
+                # this assembled prompt staged, how many spliced from
+                # the index instead of prefilling
+                self.stats.retrieval_chunk_blocks += len(meta)
+                self.stats.retrieval_chunk_hits += len(
+                    set(rb.hit_idx) & set(meta))
             self._staging.append(_Staging(
                 req=req, rb=rb,
-                staged=hit_len, target=req.prompt.size - 1,
+                todo=_hole_spans(rb.hit_idx, int(req.prompt.size) - 1,
+                                 self.block_size),
             ))
         if self.faults is not None and self.faults.fire("stage_stall"):
             # injected wedged staging round: no prefill work this
@@ -1356,8 +1607,7 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             self._spilled.remove(sp)
             self.spill.release(sp.req.rid)
             self._staging.append(_Staging(
-                req=sp.req, rb=rb, staged=sp.valid_end,
-                target=sp.valid_end, resume=sp,
+                req=sp.req, rb=rb, todo=[], resume=sp,
             ))
             self.stats.restores += 1
             self.stats.restored_blocks += sp.n_blocks
@@ -1560,11 +1810,16 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
         staging has, and fully staged entries just wait for a
         retirement, which is itself a boundary — capping for them would
         be pure dispatch overhead, the mistake the slab scheduler's
-        hysteresis timeout exists to bound.)"""
+        hysteresis timeout exists to bound.) Parked RAG queries count
+        too: overlapped retrieval runs right after this dispatch and
+        the assembled prompts stage at the NEXT boundary — an uncapped
+        segment would turn the overlap into an admission-latency tax
+        larger than the retrieval it hides."""
         min_rem = min(self.slots[i].remaining for i in active)
         staging_wants_boundaries = (
             any(not st.done for st in self._staging)
-            or bool(self._spilled))   # spills restore only at boundaries
+            or bool(self._spilled)    # spills restore only at boundaries
+            or bool(self._queries))   # park -> retrieve -> stage next
         entry_possible = staging_wants_boundaries or (
             not draining and any(s.free for s in self.slots))
         if entry_possible:
@@ -1623,6 +1878,18 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             self.mgr.alloc.evict_cached()
         active_now = any(not s.free and s.remaining > 0
                          for s in self.slots)
+        if self._queries and not (self.rag_overlap and active_now):
+            # nothing decoding to hide behind (or overlap disabled):
+            # collect/retrieve now, so the queries stage THIS boundary
+            if not self.rag_overlap:
+                # serial means serial — quiesce the enqueued device
+                # work first (an async backlog would otherwise hide
+                # retrieval behind it for free), so this arm models
+                # the retrieve-then-decode pipeline the overlap path
+                # beats. (With overlap on, the search already ran on
+                # the I/O worker; collecting it needs no quiesce.)
+                jax.block_until_ready(self._toks)
+            self._drain_queries(overlapped=False)
         self._stage(catch_up=not active_now)
         self._admit_ready()
         self._sync_pool_stats()
@@ -1685,6 +1952,11 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             )
         if self.watchdog.observe(self._timer() - t0):
             self.stats.watchdog_events += 1
+        if self._queries:
+            # the parked queries' searches have been running on the I/O
+            # worker throughout the dispatch above — collect and stage
+            # them now, paying only whatever the segment didn't cover
+            self._drain_queries(overlapped=True)
         self.stats.segments += 1
         self.stats.decode_steps += steps * len(active)
         self.stats.wasted_steps += steps * (self.num_slots - len(active))
@@ -1835,6 +2107,10 @@ class PagedContinuousBatchingServer(ContinuousBatchingServer):
             tgt, self.mgr.pool.cache = vf(
                 self.params, jnp.asarray(toks), self.mgr.pool.cache,
                 jnp.asarray(pos), jnp.asarray(bt_np), state)
+        if self._queries:
+            # searches ran on the I/O worker behind the verify dispatch
+            # (the spec path's only dispatch->sync window) — collect
+            self._drain_queries(overlapped=True)
         # accept policy is host-side (the Sidebar split: flexible policy
         # on the host, static program on the accelerator) — sync here
         tgt = np.asarray(tgt)

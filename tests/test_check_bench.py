@@ -105,6 +105,47 @@ def test_committed_bench_records_the_pr9_acceptance_numbers():
     assert ratio > 0
 
 
+def test_committed_bench_records_the_pr10_acceptance_numbers():
+    by_name = {r["name"]: r["derived"] for r in _rows()}
+    hit = next(v for n, v in by_name.items()
+               if n.endswith("rag_chunk_hit_rate"))
+    assert 0 < hit <= 1             # chunk-addressed KV blocks reused
+    ratio = next(v for n, v in by_name.items()
+                 if n.endswith("rag_overlap_over_serial"))
+    assert ratio >= 1.0             # hiding retrieval pays for itself
+    ofrac = next(v for n, v in by_name.items()
+                 if n.endswith("rag/overlap_frac"))
+    assert 0 < ofrac <= 1           # most waves collected post-dispatch
+    for suffix in ("rag/tok_s", "rag_serial/tok_s"):
+        v = next(v for n, v in by_name.items() if n.endswith(suffix))
+        assert v > 0
+
+
+def test_zero_rag_chunk_hit_rate_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("rag_chunk_hit_rate"):
+            r["derived"] = 0.0
+    assert any("chunk blocks stopped being spliced" in e
+               for e in check(rows))
+
+
+def test_regressed_rag_overlap_ratio_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("rag_overlap_over_serial"):
+            r["derived"] = 0.8
+    assert any("retrieval I/O worker" in e for e in check(rows))
+
+
+def test_zero_rag_overlap_frac_is_flagged():
+    rows = _rows()
+    for r in rows:
+        if r["name"].endswith("rag/overlap_frac"):
+            r["derived"] = 0.0
+    assert any("serial path" in e for e in check(rows))
+
+
 def test_spec_token_mismatch_is_flagged():
     rows = _rows()
     for r in rows:

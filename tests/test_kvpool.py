@@ -25,6 +25,8 @@ from repro.launch.kvpool import (
     BlockState,
     KVPoolError,
     PagedKVManager,
+    chunk_key,
+    chunk_keys,
     prefix_key,
 )
 from repro.models import layers as L
@@ -121,6 +123,50 @@ def test_hash_consing_keeps_first_registration():
     assert a.state(b2) is BlockState.FREE   # private copy frees outright
 
 
+def test_chunk_keys_chain_full_preceding_context():
+    """A chunk key covers content + offset + everything before it: the
+    chain makes block j's key a function of blocks 0..j, so identical
+    chunk content after DIFFERENT preceding context (or at a different
+    offset) never collides — exactly the positional-exactness rule that
+    keeps chunk splicing bit-exact."""
+    bs = 4
+    p1 = np.arange(1, 13, dtype=np.int32)
+    assert chunk_keys(p1, 3, bs) == chunk_keys(p1, 3, bs)   # deterministic
+    same_tail = np.concatenate([[99], p1[1:]]).astype(np.int32)
+    k1, k2 = chunk_keys(p1, 3, bs), chunk_keys(same_tail, 3, bs)
+    assert k1[0] != k2[0]
+    assert k1[1] != k2[1] and k1[2] != k2[2]   # divergence propagates
+    # same chunk content shifted by one block: different chain depth
+    shifted = np.concatenate([p1[:4], p1]).astype(np.int32)
+    assert chunk_keys(shifted, 4, bs)[1] != k1[0]
+    # and chunk keys never collide with whole-prefix byte keys
+    assert chunk_key(b"", p1[:4]) != prefix_key(p1, 4)
+
+
+def test_multikey_aliases_share_one_bid_and_evict_together():
+    """A block registered under BOTH its whole-prefix key and its chunk
+    key is one physical block: either key resolves to it, lookup_any is
+    ONE counted lookup, and eviction drops every alias at once."""
+    a = BlockAllocator(4)                   # 3 allocatable
+    bid = a.alloc()
+    a.activate(bid)
+    assert a.register(b"prefix", bid) == bid
+    assert a.register(b"chunk", bid) == bid     # alias, not an error
+    assert a.lookup(b"prefix") == a.lookup(b"chunk") == bid
+    assert a.is_registered(bid)
+    before = a.counters.prefix_block_lookups
+    assert a.lookup_any([b"chunk", b"prefix"]) == bid
+    assert a.counters.prefix_block_lookups == before + 1
+    a.release(bid)                          # cached, evictable
+    others = [a.alloc(), a.alloc()]
+    got = a.alloc()                         # exhausted free list -> evict
+    assert got == bid
+    assert a.lookup(b"prefix") is None and a.lookup(b"chunk") is None
+    assert not a.is_registered(bid)
+    for b in others + [got]:
+        a.release(b)
+
+
 # ---------------------------------------------------------------------------
 # Random interleavings: the model-checked allocator.
 # ---------------------------------------------------------------------------
@@ -175,7 +221,17 @@ def _run_interleaving(seq, n_blocks=6):
                 else:
                     state[bid] = (BlockState.FREE, 0)
             elif act == "register":
-                key = b"k%d" % key_ctr[0]
+                # mixed key families: whole-prefix-style byte keys and
+                # chained chunk digests interleave in ONE index. A
+                # second registration on an already-registered bid is an
+                # ALIAS (legal since chunk addressing), and eviction
+                # must drop every alias — the model tracks bids only,
+                # so a stale alias would surface as a state divergence.
+                if key_ctr[0] % 2:
+                    key = chunk_key(b"prev%d" % key_ctr[0],
+                                    np.asarray([key_ctr[0]], np.int32))
+                else:
+                    key = b"k%d" % key_ctr[0]
                 key_ctr[0] += 1
                 a.register(key, bid)
                 assert st_model[0] is BlockState.ACTIVE
@@ -282,6 +338,77 @@ def test_begin_request_atomic_when_hits_are_the_evictable_blocks():
     for b in cached:                                # hits re-cached
         assert mgr.alloc.state(b) is kvp.BlockState.CACHED
     assert mgr.alloc.in_use == 2                    # only the filler
+
+
+def test_interior_hole_splice_and_chunk_counters():
+    """The chunk-addressing payoff: after the LRU evicts a LEADING
+    prompt block, a re-walk still splices the SURVIVING interior blocks
+    (hit_idx sparse, prefix_hit_blocks 0) and staging owes only the
+    hole; re-publication heals the index under both key families."""
+    mgr, _ = _mgr(num_blocks=10, block_size=4)
+    prompt = np.arange(1, 18, dtype=np.int32)       # S=17: 4 full blocks
+    rb = mgr.begin_request(prompt, prompt.size)     # 5 blocks
+    assert rb.hit_idx == ()
+    first_bids = list(rb.bids)
+    mgr.publish_prompt(prompt, rb)
+    mgr.release_request(rb)
+    assert mgr.alloc.evict_cached(1) == 1           # LRU = leading block
+    rb2 = mgr.begin_request(prompt, prompt.size)
+    assert rb2.prefix_hit_blocks == 0               # leading run broken
+    assert rb2.hit_idx == (1, 2, 3)                 # survivors spliced
+    assert rb2.bids[1:4] == first_bids[1:4]         # same physical blocks
+    assert mgr.counters.chunk_interior_hits == 3
+    assert mgr.counters.prompt_blocks == 8          # 4 walked per begin
+    # publish re-registers ONLY the hole (hits are already indexed);
+    # afterwards the full leading run hits again
+    mgr.publish_prompt(prompt, rb2)
+    mgr.release_request(rb2)
+    rb3 = mgr.begin_request(prompt, prompt.size)
+    assert rb3.prefix_hit_blocks == 4
+    assert rb3.hit_idx == (0, 1, 2, 3)
+    mgr.release_request(rb3)
+
+
+def test_affinity_probes_side_effect_free_under_chunk_keys():
+    """``prefix_affinity`` (leading run) and ``chunk_affinity`` (all
+    warm blocks, interior included) are pure peeks: no lookup/hit
+    counters, no LRU reordering — the router probes every replica per
+    request, and probing must never perturb eviction order or stats."""
+    mgr, _ = _mgr(num_blocks=10, block_size=4)
+    prompt = np.arange(1, 14, dtype=np.int32)       # 3 full blocks
+    rb = mgr.begin_request(prompt, prompt.size)
+    mgr.publish_prompt(prompt, rb)
+    mgr.release_request(rb)
+    assert mgr.prefix_affinity(prompt) == 3
+    assert mgr.chunk_affinity(prompt) == 3
+    mgr.alloc.evict_cached(1)                       # hole at block 0
+    before = (mgr.counters.prefix_block_lookups,
+              mgr.counters.prefix_block_hits,
+              mgr.counters.prompt_blocks)
+    evict_order = list(mgr.alloc._evictable)
+    for _ in range(3):
+        assert mgr.prefix_affinity(prompt) == 0     # run broken at 0
+        assert mgr.chunk_affinity(prompt) == 2      # interior still warm
+    assert (mgr.counters.prefix_block_lookups,
+            mgr.counters.prefix_block_hits,
+            mgr.counters.prompt_blocks) == before
+    assert list(mgr.alloc._evictable) == evict_order
+    # unknown prompt: both report cold, still silently
+    assert mgr.chunk_affinity(np.asarray([9, 9, 9, 9, 9], np.int32)) == 0
+
+
+def test_publish_registers_both_key_families():
+    """Every published full prompt block answers to its whole-prefix
+    key AND its chained chunk key, and both resolve to one bid."""
+    mgr, _ = _mgr(num_blocks=10, block_size=4)
+    prompt = np.arange(1, 10, dtype=np.int32)       # 2 full blocks
+    rb = mgr.begin_request(prompt, prompt.size + 2)
+    mgr.publish_prompt(prompt, rb)
+    cks = chunk_keys(prompt, 2, 4)
+    for j in range(2):
+        assert mgr.alloc.peek(prefix_key(prompt, (j + 1) * 4)) == rb.bids[j]
+        assert mgr.alloc.peek(cks[j]) == rb.bids[j]
+    mgr.release_request(rb)
 
 
 def test_cow_isolates_shared_block_on_device():
